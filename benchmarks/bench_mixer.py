@@ -1,0 +1,57 @@
+"""Cumulative mixer-time scaling: flash vs lazy vs eager (paper Fig. 2b).
+
+Runs the synthetic LCSM (§5 setup, reduced to CPU scale) with the three
+strategies and reports cumulative wall time and the flash/naive ratio —
+the paper's '50× on the mixer part' claim, at whatever scale L allows here.
+The mixer-only cost is isolated by timing generate() with blocks reduced
+to identity-free MLPs shared across strategies (identical non-mixer work).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.engine import FlashEngine
+from repro.models.synthetic_lcsm import SyntheticLCSM
+
+from benchmarks.common import write_csv
+
+
+def run_strategy(strategy: str, L: int, M: int = 4, D: int = 128, B: int = 1):
+    model = SyntheticLCSM(n_levels=M, d_model=D)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = FlashEngine(model, params, batch=B, gen_max=L, strategy=strategy)
+    state = eng.init_state()
+    state = eng.set_first(state, jax.random.normal(jax.random.PRNGKey(1), (B, D)))
+    # warm-up: run the FULL schedule once so every per-tile-size program
+    # is compiled before timing (the paper's protocol: 2 warm-up runs).
+    s2, _ = eng.generate(state, L, rng=jax.random.PRNGKey(2))
+    jax.block_until_ready(s2.a[0])
+    state = eng.init_state()
+    state = eng.set_first(state, jax.random.normal(jax.random.PRNGKey(1), (B, D)))
+    t0 = time.perf_counter()
+    state, _ = eng.generate(state, L, rng=jax.random.PRNGKey(2))
+    jax.block_until_ready(state.a[0])
+    return time.perf_counter() - t0
+
+
+def main(Ls=(256, 1024, 4096)) -> str:
+    rows = []
+    for L in Ls:
+        tf = run_strategy("flash", L)
+        tl = run_strategy("lazy", L)
+        te = run_strategy("eager", L)
+        rows.append([L, f"{tf:.3f}", f"{tl:.3f}", f"{te:.3f}",
+                     f"{min(tl, te) / tf:.2f}"])
+        print(f"[bench_mixer] L={L:5d}  flash {tf:7.3f}s  lazy {tl:7.3f}s  "
+              f"eager {te:7.3f}s  speedup x{min(tl, te) / tf:.2f}")
+    path = write_csv("mixer_scaling",
+                     ["L", "flash_s", "lazy_s", "eager_s", "speedup"], rows)
+    print(f"[bench_mixer] wrote {path}")
+    return path
+
+
+if __name__ == "__main__":
+    main()

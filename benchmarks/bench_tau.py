@@ -1,0 +1,49 @@
+"""τ-implementation Pareto frontier (paper Figure 3a/3b analogue).
+
+Times each τ implementation (direct einsum, FFT with precomputed filter
+DFT, Pallas tile_conv in interpret mode) across tile sides U and reports
+the per-U winner — the measurement that feeds the Hybrid dispatcher's
+``direct_max`` crossover.  CPU wall-clock stands in for the paper's GPU
+timings; the Pareto *structure* (direct wins small U, FFT wins large U)
+is the hardware-independent claim.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tau as tau_mod
+from repro.kernels import ops as kops
+
+from benchmarks.common import timeit, write_csv
+
+
+def main(D: int = 128, B: int = 4, M: int = 4) -> str:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for q in range(0, 11):
+        U = 1 << q
+        y = jax.random.normal(key, (M, B, U, D), jnp.float32)
+        rho = jax.random.normal(key, (M, 1, 2 * U, D), jnp.float32)
+        rho_f = tau_mod.rho_dft(rho)
+
+        t_direct = timeit(jax.jit(tau_mod.tau_direct), y, rho)
+        t_fft = timeit(jax.jit(lambda y, rf: tau_mod.tau_fft(y, rho_f=rf)), y, rho_f)
+        t_pallas = timeit(lambda y, r: kops.tile_conv(y, r), y, rho) \
+            if U <= 64 else float("nan")
+        best = min(("direct", t_direct), ("fft", t_fft),
+                   key=lambda kv: kv[1])[0]
+        rows.append([U, f"{t_direct * 1e6:.1f}", f"{t_fft * 1e6:.1f}",
+                     f"{t_pallas * 1e6:.1f}" if t_pallas == t_pallas else "",
+                     best])
+        print(f"[bench_tau] U={U:5d}  direct {t_direct*1e6:9.1f}us  "
+              f"fft {t_fft*1e6:9.1f}us  -> {best}")
+    path = write_csv("tau_pareto", ["U", "direct_us", "fft_us",
+                                    "pallas_interp_us", "winner"], rows)
+    print(f"[bench_tau] wrote {path}")
+    return path
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timed jit calls (warm-up per the paper §5:
+2 warm-up runs, then average over 4), CSV emission."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable
+
+import jax
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 4) -> float:
+    """Median-free paper protocol: warm-up then mean wall-time (seconds)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def write_csv(name: str, header: list[str], rows: list[list]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return os.path.abspath(path)

@@ -1,0 +1,92 @@
+"""Roofline table (deliverable g): aggregates experiments/dryrun/*.json into
+the per-(arch × shape × mesh) report of DESIGN §7 — three terms in seconds,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import write_csv
+
+DRY_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRY_DIR, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if mesh is None or r["mesh"] == mesh:
+            recs.append(_fix_analytic(r))
+    return recs
+
+
+def _fix_analytic(r: dict) -> dict:
+    """Correct records written before the while-trip-count fix: XLA's
+    cost_analysis counts loop bodies once, so scanned programs under-report
+    FLOPs; the compute term takes max(HLO, analytic/chips)."""
+    if r.get("analytic_flops"):
+        return r
+    try:
+        from repro.configs import get_config
+        from repro.launch.analysis import analytic_flops
+        from repro.launch.mesh import PEAK_FLOPS_BF16
+
+        shape = r["shape"].split("-gray")[0]
+        ana = analytic_flops(get_config(r["arch"]), shape)
+        if "-gray" in r["shape"]:
+            ana = 0.0
+        r["analytic_flops"] = ana
+        flops_eff = max(r["hlo_flops"], ana / r["chips"])
+        r["compute_s"] = flops_eff / PEAK_FLOPS_BF16
+        terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}
+        r["bottleneck"] = max(terms, key=terms.get)
+        tot = max(r["hlo_flops"] * r["chips"], ana)
+        r["useful_ratio"] = r["model_flops"] / tot if tot else float("nan")
+    except Exception:
+        r.setdefault("analytic_flops", 0.0)
+    return r
+
+
+def fmt_table(recs: list[dict]) -> str:
+    hdr = (f"{'arch':28s} {'shape':22s} {'mesh':10s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'bound':>10s} {'useful':>7s} "
+           f"{'GiB/chip':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        gib = r.get("memory_analysis", {}).get("argument_size_in_bytes", 0) / 2**30
+        lines.append(
+            f"{r['arch']:28s} {r['shape']:22s} {r['mesh']:10s} "
+            f"{r['compute_s']:10.3e} {r['memory_s']:10.3e} "
+            f"{r['collective_s']:10.3e} {r['bottleneck']:>10s} "
+            f"{r['useful_ratio']:7.3f} {gib:8.2f}")
+    return "\n".join(lines)
+
+
+def main() -> str:
+    recs = load_records()
+    if not recs:
+        print("[roofline] no dry-run records found — run repro.launch.dryrun first")
+        return ""
+    print(fmt_table(recs))
+    rows = [[r["arch"], r["shape"], r["mesh"], r["chips"],
+             f"{r['hlo_flops']:.4e}", f"{r['hlo_bytes']:.4e}",
+             f"{r['coll_bytes']:.4e}", f"{r['compute_s']:.4e}",
+             f"{r['memory_s']:.4e}", f"{r['collective_s']:.4e}",
+             r["bottleneck"], f"{r['model_flops']:.4e}",
+             f"{r['useful_ratio']:.4f}", r.get("note", "")]
+            for r in recs]
+    path = write_csv("roofline",
+                     ["arch", "shape", "mesh", "chips", "hlo_flops_per_chip",
+                      "hlo_bytes_per_chip", "coll_bytes_per_chip", "compute_s",
+                      "memory_s", "collective_s", "bottleneck", "model_flops",
+                      "useful_ratio", "note"], rows)
+    print(f"[roofline] wrote {path}")
+    return path
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark orchestrator: one entry per paper table/figure + the roofline
+report over whatever dry-run artifacts exist.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller sweeps (CI-sized)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_e2e, bench_flops, bench_mixer, bench_tau,
+                            bench_tokentime, roofline_report)
+
+    jobs = [
+        ("flops (Prop 1/2, Thm 2)", lambda: bench_flops.main()),
+        ("tau Pareto (Fig 3a/3b)", lambda: bench_tau.main(
+            D=64 if args.fast else 128)),
+        ("mixer scaling (Fig 2b)", lambda: bench_mixer.main(
+            Ls=(64, 256) if args.fast else (256, 1024, 4096))),
+        ("token time (Fig 2c)", lambda: bench_tokentime.main(
+            L=64 if args.fast else 256)),
+        ("e2e hyena (Fig 2a)", lambda: bench_e2e.main(
+            L=64 if args.fast else 256)),
+        ("roofline report (dry-run)", lambda: roofline_report.main()),
+    ]
+    failures = 0
+    t0 = time.perf_counter()
+    for name, fn in jobs:
+        print(f"\n=== {name} ===")
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc(limit=6)
+    print(f"\n=== benchmarks done in {time.perf_counter() - t0:.1f}s, "
+          f"{failures} failures ===")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Appendix B demo: Flash Inference with DATA-DEPENDENT filters
+(Algorithm 5 — van der Hoeven's parallelogram tiling).
+
+When the filter rho is itself a causal function of the data, the
+rectangle tiling of Algorithm 2 cannot run (it would need rho prefixes
+that are not yet revealed).  Algorithm 5 uses untruncated convolutions
+(parallelogram tiles) and order-2U FFTs, at 2× the FLOPs of the
+data-independent path.  This script implements the SISO case and checks
+it against the naive online evaluation.
+
+    PYTHONPATH=src python examples/data_dependent_filters.py
+"""
+
+import numpy as np
+
+
+def conv_full(a, b):
+    return np.convolve(a, b)
+
+
+def flash_data_dependent(y_fn, rho_fn, L):
+    """Algorithm 5 / van der Hoeven relaxed multiplication (SISO):
+    y_fn(i, z) and rho_fn(i, z) reveal y_i / rho_i causally given the
+    finalized outputs z[0..i-1] (0-based here).
+
+    Tiling: after revealing index n, for EVERY p = 2^k dividing n+1:
+      m = (n+1)/p == 2 → the diagonal square y[p:2p] ∗ rho[p:2p] (once);
+      m ≥ 3          → the parallelogram pair  y[p:2p] ∗ rho[n+1-p:n+1]
+                        and rho[p:2p] ∗ y[n+1-p:n+1].
+    Every cell (a, b) with a, b ≥ 1 lands in exactly one tile (k fixed by
+    a, block index by b), inputs are always already revealed, and outputs
+    land strictly after n — so z_t is complete when returned.  Total cost
+    Σ_k (L/2^k)·O(2^k log 2^k) = O(L log² L) — 2× the data-independent
+    rectangle tiling of Algorithm 2, as the paper states.
+
+    Returns z with z_t = Σ_{i<=t} y_i·rho_{t-i}, never reading an entry
+    before its reveal time.
+    """
+    y = np.zeros(L)
+    rho = np.zeros(L)
+    z = np.zeros(4 * L + 4)  # slack for eager pushes past the horizon
+    y[0] = y_fn(0, z[:0])
+    rho[0] = rho_fn(0, z[:0])
+    z[0] = y[0] * rho[0]
+    for n in range(1, L):
+        y[n] = y_fn(n, z[:n])
+        rho[n] = rho_fn(n, z[:n])
+        # anti-diagonal contributions of the fresh entries (row/col 0)
+        z[n] += y[n] * rho[0] + y[0] * rho[n]
+        p = 1
+        while (n + 1) % p == 0 and 2 * p <= n + 1:
+            m = (n + 1) // p
+            if m == 2:
+                z[2 * p : 4 * p - 1] += conv_full(y[p : 2 * p], rho[p : 2 * p])
+            else:
+                z[n + 1 : n + 2 * p] += conv_full(y[p : 2 * p], rho[n + 1 - p : n + 1])
+                z[n + 1 : n + 2 * p] += conv_full(rho[p : 2 * p], y[n + 1 - p : n + 1])
+            p *= 2
+    return z[:L]
+
+
+def main():
+    rng = np.random.RandomState(0)
+    L = 256
+    base_y = rng.randn(L) * 0.1
+    base_r = rng.randn(L) * 0.1
+
+    # data-dependent: y_i and rho_i each perturbed by the last output
+    def y_fn(i, z_hist):
+        return base_y[i] + (0.01 * z_hist[-1] if len(z_hist) else 0.0)
+
+    def rho_fn(i, z_hist):
+        return base_r[i] + (0.02 * np.tanh(z_hist[-1]) if len(z_hist) else 0.0)
+
+    z_flash = flash_data_dependent(y_fn, rho_fn, L)
+
+    # naive online reference
+    y = np.zeros(L)
+    r = np.zeros(L)
+    z = np.zeros(L)
+    for t in range(L):
+        y[t] = y_fn(t, z[:t])
+        r[t] = rho_fn(t, z[:t])
+        z[t] = sum(y[i] * r[t - i] for i in range(t + 1))
+
+    err = np.abs(z_flash - z).max()
+    print(f"L={L}: max |flash - naive| = {err:.2e}")
+    assert err < 1e-8, "Algorithm 5 diverged from the naive online evaluation"
+    print("✓ Algorithm 5 (data-dependent filters) is exact under causal reveal")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the paper's algorithm in ~40 lines.
+
+Builds a small Hyena LCSM, generates tokens three ways — Flash Inference
+(Algorithm 2/3), lazy, eager — checks they emit the SAME tokens (exact
+inference), and prints the speed comparison.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.hyena import HyenaLCSM
+from repro.serving import LCSMServer
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_config("hyena").smoke(), name="hyena-quickstart",
+        n_layers=4, d_model=64, d_ff=128, vocab=512)
+    params = HyenaLCSM(cfg).init(jax.random.PRNGKey(0))
+    L = 128
+
+    results = {}
+    for strategy in ("flash", "lazy", "eager"):
+        srv = LCSMServer(cfg, params, batch=1, gen_max=L, strategy=strategy)
+        srv.generate(None, L)  # warm-up: full schedule compiles
+        t0 = time.perf_counter()
+        toks = srv.generate(None, L)
+        dt = time.perf_counter() - t0
+        results[strategy] = (toks, dt)
+        print(f"{strategy:6s}: {L} tokens in {dt:6.2f}s "
+              f"({L / dt:6.1f} tok/s)  first 10: {toks[0, :10].tolist()}")
+
+    assert np.array_equal(results["flash"][0], results["lazy"][0])
+    assert np.array_equal(results["flash"][0], results["eager"][0])
+    print("\n✓ identical token streams — Flash Inference is EXACT "
+          "(not an approximation like SSM distillation)")
+    print(f"✓ mixer work: O(L log² L) vs Ω(L²) — "
+          f"naive/flash time ratio {results['lazy'][1] / results['flash'][1]:.2f}×"
+          f" at L={L} (grows with L; see benchmarks/bench_mixer.py)")
+
+
+if __name__ == "__main__":
+    main()

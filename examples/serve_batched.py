@@ -1,0 +1,68 @@
+"""Serving example: continuous batching over a mixed request stream.
+
+Submits requests with different prompt/output lengths to the fixed-slot
+ServingEngine (2 slots, 8 requests) — slots refill as requests finish,
+exactly the vLLM-style admission loop — then verifies every emitted stream
+against an independent one-at-a-time greedy decode.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch qwen2.5-3b
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.lm import LM
+from repro.serving import Request, ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--n-requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).smoke()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, n_slots=args.slots, max_seq=64,
+                        cache_dtype=jnp.float32)
+
+    rng = np.random.RandomState(0)
+    reqs = []
+    for i in range(args.n_requests):
+        p_len = int(rng.randint(2, 8))
+        reqs.append(Request(uid=i,
+                            prompt=rng.randint(0, cfg.vocab, (p_len,)).astype(np.int32),
+                            max_new=int(rng.randint(4, 10))))
+        eng.submit(reqs[-1])
+
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.out) for r in done)
+    print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
+          f"on {args.slots} slots ({total / dt:.1f} tok/s)")
+
+    # verify against isolated greedy decode
+    for r in sorted(done, key=lambda r: r.uid):
+        toks = list(r.prompt)
+        for _ in range(len(r.out)):
+            hidden, _ = model.forward(params, {"tokens": jnp.asarray(
+                np.asarray(toks, np.int32))[None]})
+            toks.append(int(jnp.argmax(model.logits(params, hidden[:, -1])[0])))
+        ok = toks[len(r.prompt):] == r.out
+        print(f"req {r.uid}: {len(r.prompt)}-tok prompt -> {r.out}  "
+              f"{'✓' if ok else '✗ MISMATCH'}")
+        assert ok
+    print("✓ continuous batching is exact (per-request streams unaffected "
+          "by slot sharing)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Sharded npz checkpointing for arbitrary pytrees.
+
+Layout: <dir>/step_<n>/shard_<k>.npz + manifest.json.  Leaves are keyed by
+their pytree path string; large leaves are split across shards by a simple
+bytes budget (so no single npz exceeds ~1 GiB and multi-host writers could
+each own a disjoint shard set).  Restore rebuilds onto the caller-provided
+pytree structure (dtypes/shapes validated).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_SHARD_BUDGET = 1 << 30  # bytes per shard file
+
+
+def _leaf_key(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any) -> str:
+    out = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(out, exist_ok=True)
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    shards: list[dict[str, np.ndarray]] = [{}]
+    sizes = [0]
+    manifest = {}
+    for path, leaf in leaves:
+        arr = np.asarray(leaf)
+        if arr.dtype == ml_dtypes.bfloat16:  # npz has no bf16: store bit-pattern
+            arr = arr.view(np.uint16)
+            logical = "bfloat16"
+        else:
+            logical = str(arr.dtype)
+        if sizes[-1] + arr.nbytes > _SHARD_BUDGET and shards[-1]:
+            shards.append({})
+            sizes.append(0)
+        shard_id = len(shards) - 1
+        key = _leaf_key(path)
+        shards[-1][key] = arr
+        sizes[-1] += arr.nbytes
+        manifest[key] = {"shard": shard_id, "shape": list(arr.shape),
+                         "dtype": logical}
+    for i, shard in enumerate(shards):
+        # npz keys cannot contain '/': escape.
+        np.savez(os.path.join(out, f"shard_{i}.npz"),
+                 **{k.replace("/", "\\"): v for k, v in shard.items()})
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump({"step": step, "n_shards": len(shards), "leaves": manifest}, f)
+    return out
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any) -> Any:
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    files = [np.load(os.path.join(src, f"shard_{i}.npz"))
+             for i in range(manifest["n_shards"])]
+    leaves_like = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in leaves_like[0]:
+        key = _leaf_key(path)
+        meta = manifest["leaves"][key]
+        arr = files[meta["shard"]][key.replace("/", "\\")]
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        want = np.asarray(leaf)
+        if tuple(arr.shape) != want.shape or str(arr.dtype) != str(want.dtype):
+            raise ValueError(
+                f"checkpoint leaf {key}: have {arr.shape}/{arr.dtype}, "
+                f"want {want.shape}/{want.dtype}")
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(leaves_like[1], out)

@@ -1,0 +1,14 @@
+"""Config registry: import every arch module so `register` runs."""
+from repro.configs.base import ModelConfig, LayerDef, Stack, get_config, list_configs  # noqa: F401
+
+from repro.configs import (  # noqa: F401
+    phi3_5_moe_42b, mistral_nemo_12b, internlm2_20b, deepseek_coder_33b,
+    whisper_tiny, deepseek_v3_671b, qwen2_5_3b, falcon_mamba_7b,
+    qwen2_vl_72b, jamba_1_5_large, hyena,
+)
+
+ASSIGNED = (
+    "phi3.5-moe-42b-a6.6b", "mistral-nemo-12b", "internlm2-20b",
+    "deepseek-coder-33b", "whisper-tiny", "deepseek-v3-671b", "qwen2.5-3b",
+    "falcon-mamba-7b", "qwen2-vl-72b", "jamba-1.5-large-398b",
+)

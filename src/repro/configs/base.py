@@ -1,0 +1,223 @@
+"""Architecture config schema + registry.
+
+Every assigned architecture is a ``ModelConfig`` (exact numbers from the
+assignment, source cited in the per-arch module).  ``smoke()`` returns the
+reduced same-family variant used by CPU tests (≤2 layers, d_model ≤ 512,
+≤4 experts).  ``to_hyena()`` converts any dense config into its LCSM twin —
+the vehicle for exercising the paper's technique at assigned-arch scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Literal, Sequence
+
+MixerKind = Literal["attn", "mla", "mamba", "hyena", "attn_cross"]
+FFNKind = Literal["dense", "moe", "none"]
+
+
+@dataclass(frozen=True)
+class LayerDef:
+    mixer: MixerKind
+    ffn: FFNKind
+
+
+@dataclass(frozen=True)
+class Stack:
+    """``repeat`` copies of ``pattern`` — lowered as one jax.lax.scan over
+    the repeat axis (params stacked), keeping HLO size O(len(pattern))."""
+
+    pattern: tuple[LayerDef, ...]
+    repeat: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.pattern) * self.repeat
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm", "lcsm"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: int | None = None          # default d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm: Literal["rms", "ln"] = "rms"
+    tie_embeddings: bool = False
+
+    # sliding window: None = full attention; int = window size. For the
+    # assigned long_500k shape, dense archs run the windowed variant.
+    sliding_window: int | None = None
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int | None = None
+    n_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_group_size: int = 512
+    first_k_dense: int = 0               # deepseek-v3: first 3 layers dense
+    moe_every: int = 1                   # jamba: MoE every 2nd layer
+
+    # MLA (deepseek-v3)
+    use_mla: bool = False
+    q_lora: int = 1536
+    kv_lora: int = 512
+    rope_dim: int = 64
+    v_head_dim: int | None = None
+
+    # SSM (mamba-1)
+    ssm_state: int = 16
+    d_inner: int | None = None
+    conv_k: int = 4
+
+    # hybrid (jamba): attention every `attn_every` layers within a period
+    attn_every: int = 0                  # 0 = not hybrid; jamba: 8
+
+    # enc-dec (whisper)
+    enc_layers: int = 0
+    enc_positions: int = 0               # whisper-tiny: 1500 mel frames
+
+    # deepseek-v3 multi-token prediction (depth-1, training loss only)
+    mtp: bool = False
+
+    # VLM (qwen2-vl)
+    m_rope: bool = False
+    m_rope_sections: tuple[int, int, int] = (16, 24, 24)
+
+    # LCSM / Hyena
+    hyena_order: int = 3                 # order-3: 2 long-conv mixers/operator
+    filter_pos_dim: int = 16             # implicit-filter positional features
+    filter_mlp_width: int = 64
+    short_conv_k: int = 4
+    # filter sharing (multi-head Hyena, Massaroli et al.): number of filter
+    # groups; 0 = one filter per channel (Poli et al. default).
+    hyena_filter_groups: int = 0
+    filter_decay_fast: float = 0.3       # per-channel decay window range
+    filter_decay_slow: float = 1e-3
+
+    # gradient-accumulation microbatches for train_4k (memory/throughput trade)
+    train_microbatch: int = 1
+
+    # which decode path long_500k uses (set per arch; see DESIGN §5)
+    long_ctx_mode: Literal["native", "window", "skip"] = "window"
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.moe_d_ff is None and self.n_experts:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+
+    # -------------------------------------------------------------- stacks
+    def stacks(self) -> tuple[Stack, ...]:
+        if self.family == "lcsm":
+            n_ops = self.n_layers // (self.hyena_order - 1)
+            return (Stack((LayerDef("hyena", "dense"),), n_ops),)
+        if self.family == "ssm":
+            return (Stack((LayerDef("mamba", "none"),), self.n_layers),)
+        if self.family == "hybrid":
+            period: list[LayerDef] = []
+            for i in range(self.attn_every):
+                mixer: MixerKind = "attn" if i == self.attn_every // 2 else "mamba"
+                ffn: FFNKind = "moe" if (i % self.moe_every == self.moe_every - 1) else "dense"
+                period.append(LayerDef(mixer, ffn))
+            return (Stack(tuple(period), self.n_layers // self.attn_every),)
+        mixer = "mla" if self.use_mla else "attn"
+        if self.n_experts:
+            head = ()
+            if self.first_k_dense:
+                head = (Stack((LayerDef(mixer, "dense"),), self.first_k_dense),)
+            return head + (
+                Stack((LayerDef(mixer, "moe"),), self.n_layers - self.first_k_dense),
+            )
+        if self.family == "audio":
+            # decoder stack (self-attn + cross-attn handled inside layer)
+            return (Stack((LayerDef("attn_cross", "dense"),), self.n_layers),)
+        return (Stack((LayerDef(mixer, "dense"),), self.n_layers),)
+
+    # --------------------------------------------------------- derivations
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family variant for CPU tests (per the assignment:
+        ≤2 layers, d_model ≤ 512, ≤4 experts)."""
+        d = min(self.d_model, 64)
+        heads = min(self.n_heads, 4)
+        kv = min(self.n_kv_heads, heads)
+        changes = dict(
+            name=self.name + "-smoke",
+            n_layers=max(2, self.attn_every) if self.attn_every else 2,
+            d_model=d,
+            n_heads=heads,
+            n_kv_heads=kv,
+            head_dim=d // heads,
+            d_ff=min(self.d_ff, 128) if self.d_ff else 0,
+            vocab=min(self.vocab, 256),
+            enc_layers=min(self.enc_layers, 2),
+            enc_positions=min(self.enc_positions, 16),
+            sliding_window=min(self.sliding_window, 16) if self.sliding_window else None,
+        )
+        if self.n_experts:
+            changes.update(n_experts=4, top_k=min(self.top_k, 2),
+                           moe_capacity_factor=8.0,
+                           moe_d_ff=min(self.moe_d_ff or 128, 128),
+                           first_k_dense=min(self.first_k_dense, 1))
+        if self.use_mla:
+            changes.update(q_lora=32, kv_lora=16, rope_dim=8, head_dim=16,
+                           v_head_dim=16)
+        if self.m_rope:
+            hd2 = (d // heads) // 2
+            changes.update(m_rope_sections=(hd2 - 2 * (hd2 // 3),) + (hd2 // 3,) * 2)
+        if self.family in ("ssm", "hybrid"):
+            changes.update(ssm_state=8, conv_k=4, d_inner=2 * d)
+        if self.family == "lcsm":
+            changes.update(filter_pos_dim=8, filter_mlp_width=16)
+        return dataclasses.replace(self, **changes)
+
+    def to_hyena(self) -> "ModelConfig":
+        """LCSM twin of a dense config: attention → Hyena operators of the
+        same d_model / depth (DESIGN §4 — how the paper's technique is
+        exercised at assigned-arch scale)."""
+        assert self.family in ("dense", "moe", "vlm")
+        return dataclasses.replace(
+            self,
+            name=self.name + "-hyena",
+            family="lcsm",
+            n_layers=2 * (self.n_layers // 2),
+            sliding_window=None,
+            n_experts=0, top_k=0, first_k_dense=0,
+            use_mla=False, m_rope=False,
+            long_ctx_mode="native",
+        )
+
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401 — populate registry
+
+    if name.endswith("-hyena") and name not in _REGISTRY:
+        return get_config(name[: -len("-hyena")]).to_hyena()
+    if name.endswith("-smoke") and name not in _REGISTRY:
+        return get_config(name[: -len("-smoke")]).smoke()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs() -> Sequence[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)

@@ -1,0 +1,17 @@
+"""deepseek-v3-671b — [arXiv:2412.19437]
+61L d_model=7168 128H d_ff=2048(moe) vocab=129280; MLA; 1 shared + 256 routed
+top-8; first 3 layers dense (d_ff 18432); MTP depth-1 (training loss only)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128,
+    head_dim=128, v_head_dim=128,
+    d_ff=18432,            # dense layers
+    moe_d_ff=2048,         # per-expert width (assignment: d_ff=2048)
+    vocab=129280,
+    n_experts=256, top_k=8, n_shared_experts=1, first_k_dense=3,
+    use_mla=True, mtp=True,
+    train_microbatch=4, q_lora=1536, kv_lora=512, rope_dim=64,
+    long_ctx_mode="window",
+))

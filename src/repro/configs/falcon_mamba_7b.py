@@ -1,0 +1,12 @@
+"""falcon-mamba-7b — [arXiv:2410.05355]
+64L d_model=4096 attn-free mamba-1 blocks, vocab=65024, ssm_state=16."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=1, n_kv_heads=1,
+    d_ff=0, vocab=65024,
+    ssm_state=16, conv_k=4, d_inner=8192,
+    train_microbatch=8,
+    long_ctx_mode="native",
+))

@@ -1,0 +1,14 @@
+"""hyena — the paper's own architecture [Poli et al. 2023, arXiv:2302.10866],
+at the paper's experimental scale (§5: M=18 mixers = 9 order-3 operators,
+D=768). This is the faithful-reproduction config; *-hyena twins of the dense
+assigned archs scale the same family up (configs/base.to_hyena)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="hyena", family="lcsm",
+    n_layers=18,            # mixers; 9 operators (order 3 => 2 mixers each)
+    d_model=768, n_heads=1, n_kv_heads=1,
+    d_ff=3072, vocab=50257,
+    hyena_order=3, short_conv_k=4,
+    long_ctx_mode="native",
+))

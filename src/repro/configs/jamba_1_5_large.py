@@ -1,0 +1,15 @@
+"""jamba-1.5-large-398b — [arXiv:2403.19887]
+72L d_model=8192 64H (GQA kv=8) d_ff=24576; Mamba+attn 1:7 interleave
+(period 8, attention at slot 4), MoE 16e top-2 every other layer."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid",
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=24576, vocab=65536,
+    n_experts=16, top_k=2, moe_d_ff=24576, moe_every=2,
+    attn_every=8,
+    train_microbatch=8,
+    ssm_state=16, conv_k=4, d_inner=16384,
+    long_ctx_mode="native",
+))

@@ -1,0 +1,14 @@
+"""qwen2-vl-72b — [arXiv:2409.12191]
+80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064; M-RoPE; dynamic-
+resolution ViT frontend is a STUB — input_specs() provides patch embeddings
++ 3-stream (t,h,w) position ids."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-vl-72b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=29568, vocab=152064, qkv_bias=True, rope_theta=1e6,
+    m_rope=True, m_rope_sections=(16, 24, 24),
+    train_microbatch=2,
+    long_ctx_mode="window",
+))

@@ -1,0 +1,13 @@
+"""whisper-tiny — [arXiv:2212.04356]
+4L (decoder) d_model=384 6H d_ff=1536 vocab=51865; enc-dec; conv frontend is
+a STUB per the assignment — input_specs() provides 1500 precomputed mel-frame
+embeddings of shape (B, 1500, 384)."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-tiny", family="audio",
+    n_layers=4, d_model=384, n_heads=6, n_kv_heads=6,
+    d_ff=1536, vocab=51865, norm="ln",
+    enc_layers=4, enc_positions=1500,
+    long_ctx_mode="skip",  # enc-dec, 448-token decoder by construction
+))

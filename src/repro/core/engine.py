@@ -1,0 +1,387 @@
+"""Flash Inference engine for LCSM stacks — paper Algorithms 2 & 3.
+
+The engine drives autoregressive generation for any model expressed as a
+stack of M long-convolution *mixer levels* interleaved with per-position
+*blocks* (paper §2.1 / §3.1.2):
+
+    b[l, t]  = sum_{k<=t} conv_in(a[l-1])[k] (.) rho_l[t-k]      (mixer)
+    a[l, t]  = block_l(b[l, t], a[0..l-1, t-w .. t])             (block)
+
+with ``a[0]`` the token embeddings.  The engine owns the fractal tile
+schedule, the τ dispatch, prompt handling (Massaroli Lemma 2.1 style
+eager prefill then origin reset), and the across-layer batching of gray
+tiles (Algorithm 3) — levels with equal conv width are stacked and the
+tile convolution is evaluated once for the whole group.
+
+Strategies (for the paper's baselines, §5):
+  * ``flash`` — Algorithm 2/3 tiling, O(L log^2 L) per channel.
+  * ``lazy``  — recompute each b[l, t] from the whole history, Omega(L^2).
+  * ``eager`` — push each new activation to all future b's, Omega(L^2).
+
+All three share the identical red-cell/block/advance path, so measured
+differences isolate the mixer algorithm, as in the paper's Figure 2.
+
+Shape-staticness: one jitted red-pass (position is a traced scalar) plus one
+jitted gray-tile function *per tile side* — log2(L) specializations in total,
+the XLA analogue of the paper's per-tile-size precompiled FlashFFT configs
+(§5.4, engineering contribution #2).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tau as tau_mod
+from repro.core.tiling import largest_pow2_divisor
+
+
+def ceil_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclass(frozen=True)
+class LevelSpec:
+    """One mixer level.
+
+    width      — channels of this level's activation a[l].
+    conv_start — first channel of a[l-1] fed to this level's convolution.
+    conv_size  — number of channels convolved (== filter width).
+    """
+
+    width: int
+    conv_start: int
+    conv_size: int
+
+
+class LCSMModel(Protocol):
+    """What the engine needs from a model (see repro/models/hyena.py)."""
+
+    ctx_window: int  # w: how many past positions blocks may read (short convs)
+    a0_width: int
+    levels: Sequence[LevelSpec]
+
+    def filters(self, params: Any, length: int) -> Sequence[jnp.ndarray]:
+        """Per level: (length, conv_size) data-independent filter rho_l."""
+
+    def block(self, params: Any, level: int, b: jnp.ndarray,
+              acts: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        """b: (B, T, conv_size); acts[l'] : (B, w+T, width_l') for l' < level
+        (entries for l' >= level are present but must not be read).
+        Returns (B, T, width_level)."""
+
+    def advance(self, params: Any, acts: Sequence[jnp.ndarray],
+                rng: jax.Array) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """acts[l]: (B, w+1, width_l) ending at the just-finalized position.
+        Returns (next a[0] entry (B, a0_width), emitted token (B,) int32)."""
+
+
+class EngineState(NamedTuple):
+    a: tuple[jnp.ndarray, ...]  # level l: (B, Lbuf, width_l)
+    b: tuple[jnp.ndarray, ...]  # level l (1-based, stored at l-1): (B, Lbuf, conv_size_l)
+    pos: jnp.ndarray            # next position to finalize (int32 scalar)
+
+
+def _window(arr: jnp.ndarray, start, length: int) -> jnp.ndarray:
+    """dynamic_slice along axis 1 with static length."""
+    B = arr.shape[0]
+    return jax.lax.dynamic_slice(
+        arr, (0, start, 0), (B, length, arr.shape[2]))
+
+
+class FlashEngine:
+    """Orchestrates decode for one LCSM model instance.
+
+    Buffers are sized ``Lbuf = prompt_max + ceil_pow2(gen_max)`` so every gray
+    tile fits (for m < 2^P, m + lowbit(m) <= 2^P)."""
+
+    def __init__(
+        self,
+        model: LCSMModel,
+        params: Any,
+        *,
+        batch: int,
+        gen_max: int,
+        prompt_max: int = 0,
+        dtype=jnp.float32,
+        strategy: str = "flash",
+        tau_impl: str = "hybrid",
+        direct_max: int = 32,
+        parallel_levels: bool = True,
+        use_pallas: bool = False,
+    ):
+        assert strategy in ("flash", "lazy", "eager")
+        assert tau_impl in ("hybrid", "direct", "fft", "pallas")
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.dtype = dtype
+        self.strategy = strategy
+        self.tau_impl = tau_impl
+        self.direct_max = direct_max
+        self.parallel_levels = parallel_levels
+        self.use_pallas = use_pallas
+        self.Lbuf = prompt_max + ceil_pow2(max(gen_max, 1))
+        self.M = len(model.levels)
+
+        # --- filters: rho[l] (Lbuf, C_l); rho_0 entries; per-size DFT cache.
+        filts = model.filters(params, self.Lbuf)
+        assert len(filts) == self.M
+        self._rho = [jnp.asarray(f, jnp.float32) for f in filts]
+        self._rho0 = [f[0] for f in self._rho]  # (C_l,)
+
+        # --- group levels by conv width for across-layer batching (Alg. 3).
+        groups: dict[int, list[int]] = {}
+        for l, spec in enumerate(model.levels):
+            assert self._rho[l].shape == (self.Lbuf, spec.conv_size)
+            groups.setdefault(spec.conv_size, []).append(l)
+        # group: (conv_size, level_ids, stacked rho (G, Lbuf, C))
+        self._groups = [
+            (csize, tuple(ls), jnp.stack([self._rho[l] for l in ls]))
+            for csize, ls in sorted(groups.items())
+        ]
+        # Precomputed filter DFTs per tile size per group (App. C: 3->2 DFTs).
+        self._rho_dfts = [
+            tau_mod.make_rho_dfts(rho_g[:, None], self.Lbuf // 2)  # (G,1,2U,C)
+            for (_, _, rho_g) in self._groups
+        ]
+
+        self._jit_red = jax.jit(self._red_pass)
+        self._jit_gray: dict[int, Callable] = {}
+        self._jit_lazy = jax.jit(self._lazy_fill)
+        self._jit_eager = jax.jit(self._eager_push)
+
+    # ------------------------------------------------------------------ state
+    def init_state(self) -> EngineState:
+        m = self.model
+        a = tuple(
+            jnp.zeros((self.batch, self.Lbuf, w), self.dtype)
+            for w in [m.a0_width] + [s.width for s in m.levels]
+        )
+        b = tuple(
+            jnp.zeros((self.batch, self.Lbuf, s.conv_size), jnp.float32)
+            for s in m.levels
+        )
+        return EngineState(a=a, b=b, pos=jnp.int32(0))
+
+    def set_first(self, state: EngineState, a0_first: jnp.ndarray) -> EngineState:
+        a = list(state.a)
+        a[0] = a[0].at[:, 0].set(a0_first.astype(self.dtype))
+        return state._replace(a=tuple(a))
+
+    # ------------------------------------------------------- red cells + block
+    def _acts_windows(self, a: Sequence[jnp.ndarray], p, T: int):
+        w = self.model.ctx_window
+        # window [p - w, p + T - 1]; clamp via buffer padding: positions < 0
+        # read garbage-zeros from start (buffers zero-initialized, and blocks
+        # only consume weights * those entries — matches zero left-padding).
+        start = jnp.maximum(p - w, 0)
+        shift_ok = p >= w  # when p < w the window is shorter; emulate pad
+        wins = []
+        for arr in a:
+            win = _window(arr, start, w + T)
+            # if p < w, roll so that index w+T-1 still aligns with position
+            # p+T-1: shift right by (w - p) and zero-fill the head.
+            def pad_case(win=win, arr=arr):
+                k = w - p
+                rolled = jnp.roll(win, k, axis=1)
+                mask = jnp.arange(w + T)[None, :, None] >= k
+                return jnp.where(mask, rolled, 0)
+            win = jax.lax.cond(shift_ok, lambda win=win: win, pad_case)
+            wins.append(win)
+        return wins
+
+    def _red_pass(self, params, state: EngineState, p, rng):
+        """Finalize position p across all levels, then advance (sample)."""
+        m = self.model
+        a = list(state.a)
+        b = list(state.b)
+        for l, spec in enumerate(m.levels):
+            y_p = jax.lax.dynamic_slice(
+                a[l], (0, p, spec.conv_start), (self.batch, 1, spec.conv_size)
+            )  # conv input at p, from a[l-1] == a list index l
+            b_p = jax.lax.dynamic_slice(
+                b[l], (0, p, 0), (self.batch, 1, spec.conv_size))
+            b_p = b_p + y_p.astype(jnp.float32) * self._rho0[l]
+            acts = self._acts_windows(a, p, 1)
+            out = m.block(params, l, b_p.astype(self.dtype), acts)  # (B,1,width)
+            a[l + 1] = jax.lax.dynamic_update_slice(
+                a[l + 1], out.astype(self.dtype), (0, p, 0))
+        acts = self._acts_windows(a, p, 1)
+        a0_next, token = m.advance(params, acts, rng)
+        # dynamic_update_slice clamps out-of-range starts, which would silently
+        # overwrite the last slot at the horizon — guard the final write.
+        a[0] = jax.lax.cond(
+            p + 1 < self.Lbuf,
+            lambda a0: jax.lax.dynamic_update_slice(
+                a0, a0_next[:, None, :].astype(self.dtype), (0, p + 1, 0)),
+            lambda a0: a0,
+            a[0],
+        )
+        return EngineState(a=tuple(a), b=tuple(b), pos=p + 1), token
+
+    # ------------------------------------------------------------- gray tiles
+    def _tau(self, y, rho2u, rho_f):
+        impl = self.tau_impl
+        U = y.shape[-2]
+        if impl == "hybrid":
+            return tau_mod.tau_hybrid(
+                y, rho2u, rho_f, direct_max=self.direct_max,
+                use_pallas=self.use_pallas)
+        if impl == "direct":
+            return tau_mod.tau_direct(y, rho2u)
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            return kops.tile_conv(y, rho2u)
+        return tau_mod.tau_fft(y, rho2u=rho2u, rho_f=rho_f)
+
+    def _gray_tile(self, state: EngineState, p, *, U: int):
+        """Contribution of a[., p-U+1 .. p] to b[., p+1 .. p+U] (tile side U,
+        static).  Levels batched per conv-width group (Algorithm 3)."""
+        a = state.a
+        b = list(state.b)
+        for gi, (csize, level_ids, rho_g) in enumerate(self._groups):
+            rho2u = rho_g[:, None, : 2 * U]  # (G, 1, 2U, C)
+            rho_f = self._rho_dfts[gi].get(U)
+            ins = []
+            for l in level_ids:
+                spec = self.model.levels[l]
+                seg = jax.lax.dynamic_slice(
+                    a[l], (0, p - U + 1, spec.conv_start),
+                    (self.batch, U, spec.conv_size))
+                ins.append(seg)
+            if self.parallel_levels:
+                y = jnp.stack(ins)  # (G, B, U, C)
+                out = self._tau(y, rho2u, rho_f)  # (G, B, U, C)
+                outs = [out[i] for i in range(len(level_ids))]
+            else:
+                outs = [
+                    self._tau(seg[None], rho2u[i : i + 1],
+                              None if rho_f is None else rho_f[i : i + 1])[0]
+                    for i, seg in enumerate(ins)
+                ]
+            for l, o in zip(level_ids, outs):
+                cur = jax.lax.dynamic_slice(
+                    b[l], (0, p + 1, 0), (self.batch, U, csize))
+                b[l] = jax.lax.dynamic_update_slice(
+                    b[l], cur + o.astype(jnp.float32), (0, p + 1, 0))
+        return state._replace(b=tuple(b))
+
+    # ----------------------------------------------------- baseline strategies
+    def _lazy_fill(self, state: EngineState, p, origin):
+        """Lazy: recompute b[l, p] = sum_{k<p} y_k rho_{p-k} from scratch."""
+        b = list(state.b)
+        idx = jnp.arange(self.Lbuf)
+        for l, spec in enumerate(self.model.levels):
+            y = jax.lax.dynamic_slice(
+                state.a[l], (0, 0, spec.conv_start),
+                (self.batch, self.Lbuf, spec.conv_size)).astype(jnp.float32)
+            lag = p - idx  # rho index for input position k=idx
+            valid = (lag >= 1) & (idx >= 0)
+            rvals = jnp.take(self._rho[l], jnp.where(valid, lag, 0), axis=0)
+            rvals = jnp.where(valid[:, None], rvals, 0.0)
+            contrib = jnp.einsum("blc,lc->bc", y, rvals)
+            b[l] = jax.lax.dynamic_update_slice(
+                b[l], contrib[:, None, :], (0, p, 0))
+        return state._replace(b=tuple(b))
+
+    def _eager_push(self, state: EngineState, p):
+        """Eager: push a[., p]'s contribution to every future b position."""
+        b = list(state.b)
+        idx = jnp.arange(self.Lbuf)
+        for l, spec in enumerate(self.model.levels):
+            y_p = jax.lax.dynamic_slice(
+                state.a[l], (0, p, spec.conv_start),
+                (self.batch, 1, spec.conv_size)).astype(jnp.float32)
+            lag = idx - p
+            valid = lag >= 1
+            rvals = jnp.take(self._rho[l], jnp.where(valid, lag, 0), axis=0)
+            rvals = jnp.where(valid[:, None], rvals, 0.0)  # (Lbuf, C)
+            b[l] = b[l] + y_p * rvals[None]
+        return state._replace(b=tuple(b))
+
+    # ---------------------------------------------------------------- prefill
+    def prefill(self, state: EngineState, a0_prompt: jnp.ndarray) -> EngineState:
+        """Teacher-forced prompt ingestion (static FFT path) + eager spill of
+        prompt contributions into all future b's (Massaroli Lemma 2.1), after
+        which the tile schedule restarts at origin = P."""
+        m = self.model
+        B, P, _ = a0_prompt.shape
+        a = list(state.a)
+        b = list(state.b)
+        a[0] = a[0].at[:, :P].set(a0_prompt.astype(self.dtype))
+        w = m.ctx_window
+        for l, spec in enumerate(m.levels):
+            y_full = a[l][:, :, spec.conv_start : spec.conv_start + spec.conv_size]
+            y = y_full[:, :P]
+            # contributions of y[0..P-1] to *all* Lbuf outputs in one FFT:
+            z = tau_mod.conv_causal_fft(
+                y.astype(jnp.float32), self._rho[l][None], out_len=self.Lbuf)
+            b[l] = b[l] + z.astype(jnp.float32)
+            b_prompt = b[l][:, :P].astype(self.dtype)
+            acts = [jnp.pad(arr[:, :P], ((0, 0), (w, 0), (0, 0))) for arr in a]
+            out = m.block(self.params, l, b_prompt, acts)  # (B, P, width)
+            a[l + 1] = a[l + 1].at[:, :P].set(out.astype(self.dtype))
+        return EngineState(a=tuple(a), b=tuple(b), pos=jnp.int32(P))
+
+    # ----------------------------------------------------------------- decode
+    def generate(
+        self,
+        state: EngineState,
+        n_tokens: int,
+        *,
+        origin: int = 0,
+        rng: jax.Array | None = None,
+    ) -> tuple[EngineState, jnp.ndarray]:
+        """Host-side loop over positions (jitted pieces per tile size)."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        toks = []
+        for step in range(n_tokens):
+            p = origin + step
+            rng, sub = jax.random.split(rng)
+            if self.strategy == "lazy":
+                state = self._jit_lazy(state, p, origin)
+            state, tok = self._jit_red(self.params, state, p, sub)
+            toks.append(tok)
+            if self.strategy == "eager":
+                state = self._jit_eager(state, p)
+            elif self.strategy == "flash" and step + 1 < n_tokens:
+                U = largest_pow2_divisor(step + 1)
+                fn = self._jit_gray.get(U)
+                if fn is None:
+                    fn = jax.jit(functools.partial(self._gray_tile, U=U))
+                    self._jit_gray[U] = fn
+                state = self._gray_tile_guard(fn, state, p, U)
+        return state, jnp.stack(toks, axis=1)
+
+    def _gray_tile_guard(self, fn, state, p, U):
+        if p + U >= self.Lbuf:  # tile would spill past the buffer: drop it —
+            return state        # its outputs are beyond the generation horizon.
+        return fn(state, p)
+
+    # ------------------------------------------------- static (training) pass
+    def forward_static(self, a0_seq: jnp.ndarray) -> list[jnp.ndarray]:
+        """Reference full-sequence forward (the train-time path): returns the
+        activation stack a[0..M] over T positions.  Used by tests as the
+        ground truth the decode loop must reproduce exactly."""
+        m = self.model
+        B, T, _ = a0_seq.shape
+        w = m.ctx_window
+        a = [a0_seq.astype(self.dtype)]
+        for l, spec in enumerate(m.levels):
+            y = a[l][:, :, spec.conv_start : spec.conv_start + spec.conv_size]
+            bl = tau_mod.conv_causal_fft(
+                y.astype(jnp.float32), self._rho[l][None, :T])
+            acts = [jnp.pad(arr, ((0, 0), (w, 0), (0, 0))) for arr in a]
+            acts += [jnp.zeros((B, w + T, s.width), self.dtype)
+                     for s in m.levels[l:]]
+            out = m.block(self.params, l, bl.astype(self.dtype), acts)
+            a.append(out.astype(self.dtype))
+        return a

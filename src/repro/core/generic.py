@@ -1,0 +1,167 @@
+"""The generic Flash Inference framework — paper §4 / Algorithm 4.
+
+Any mixer that is
+
+  P.1 contribution-based:  mixer(y)_j = read(agg(cont(y,1,j) … cont(y,j,j)))
+      with ASSOCIATIVE agg over an intermediate state space X, and
+  P.2 query-independent:   cont(y,i,·) depends only on y_{1..i},
+
+admits the fractal tile schedule with a black-box range algorithm
+
+  A(y, [l,r], [l',r'])_p = agg(cont(y,l,p), …, cont(y,r,p))   (r < l').
+
+``GenericFlashEngine`` drives Algorithm 4 for any ``GenericMixer``;
+``GatedLinearAttention`` instantiates it for a non-convolution member of
+the class (the paper's "and Beyond"): cont(y,i,j) = λ^{j-i}·(k_i ⊗ v_i),
+agg = +, read_j(S) = q_j·S — with an O((L1+L2)·d_k·d_v) range algorithm
+exploiting the geometric decay (vs the naive L1·L2·d_k·d_v).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiling import largest_pow2_divisor
+
+_F32 = jnp.float32
+
+
+class GenericMixer(Protocol):
+    """P.1 ∧ P.2 mixer over inputs y (B, L, D_in)."""
+
+    def init_state(self, batch: int, length: int) -> Any:
+        """Zero (agg-neutral) state buffer b: pytree with leading (B, L)."""
+
+    def cont_diag(self, y_i: jnp.ndarray, i) -> Any:
+        """cont(y, i, i): contribution of position i to itself (X-valued,
+        leading dim B)."""
+
+    def range_alg(self, y_seg: jnp.ndarray, in_lo, out_offsets: jnp.ndarray) -> Any:
+        """A(y, [in_lo, in_lo+U), outputs at in_lo+U-1+out_offsets):
+        y_seg (B, U, D_in); out_offsets (U2,) 1-based distances past the
+        last input.  Returns X-valued (B, U2, ...)."""
+
+    def agg(self, b: Any, x: Any) -> Any:
+        """Associative aggregation (elementwise over leading dims)."""
+
+    def read(self, b_i: Any, y_i: jnp.ndarray) -> jnp.ndarray:
+        """Map state at a finalized position to the mixer output (B, D_out).
+        y_i is the position's own input (available at read time — P.2 only
+        constrains *contributions*, not the read)."""
+
+
+class GenericFlashEngine:
+    """Algorithm 4: autoregressive evaluation of a GenericMixer with
+    L-1 calls to A (2^(P-1-q) of length 2^q each) + L diagonal conts."""
+
+    def __init__(self, mixer: GenericMixer, batch: int, length: int):
+        self.mixer = mixer
+        self.B = batch
+        self.L = length
+
+    def run(self, next_input, y0: jnp.ndarray):
+        """next_input(outputs_so_far list, z_i (B, D_out)) -> y_{i+1} (B, D_in).
+        Returns (ys (B, L, D_in), zs (B, L, D_out)) with z produced strictly
+        causally (z_i read before y_{i+1} is requested)."""
+        m = self.mixer
+        b = m.init_state(self.B, self.L)
+        ys = [y0]
+        zs = []
+        for i in range(1, self.L + 1):  # 1-based positions
+            y_i = ys[-1]
+            # red cell: finalize b_i
+            bi = jax.tree.map(lambda leaf: leaf[:, i - 1], b)
+            bi = m.agg(bi, m.cont_diag(y_i, i))
+            b = jax.tree.map(
+                lambda leaf, x: leaf.at[:, i - 1].set(x), b, bi)
+            z_i = m.read(bi, y_i)
+            zs.append(z_i)
+            if i < self.L:
+                # gray tile: inputs [i-U+1, i] -> outputs [i+1, i+U]
+                U = largest_pow2_divisor(i)
+                U_out = min(U, self.L - i)
+                y_seg = jnp.stack(ys[i - U:], axis=1)  # (B, U, D_in)
+                offs = jnp.arange(1, U_out + 1)
+                contrib = m.range_alg(y_seg, i - U + 1, offs)
+                seg = jax.tree.map(lambda leaf: leaf[:, i : i + U_out], b)
+                seg = m.agg(seg, contrib)
+                b = jax.tree.map(
+                    lambda leaf, x: jax.lax.dynamic_update_slice_in_dim(
+                        leaf, x, i, axis=1), b, seg)
+                ys.append(next_input(zs, z_i))
+        return jnp.stack(ys, axis=1), jnp.stack(zs, axis=1)
+
+
+# ------------------------------------------------------- "and Beyond" (§6)
+class GatedLinearAttention:
+    """Gated linear attention as a P.1∧P.2 mixer.
+
+    cont(y, i, j) = λ^(j-i) · (k_i ⊗ v_i)   ∈ X = R^{dk×dv}
+    agg = +,   read_j(S) = normalize(q_j)ᵀ S
+
+    The range algorithm exploits the geometric decay:
+      A(y,[l,r],·)_p = λ^(p-r) · Σ_i λ^(r-i) k_i⊗v_i  — one decayed sum
+    shared by all outputs ⇒ O((L1+L2)·dk·dv) per tile, satisfying the
+    framework's efficiency requirement (T(U,U) quasilinear in U).
+    """
+
+    def __init__(self, wq, wk, wv, lam: float = 0.97):
+        self.wq, self.wk, self.wv = wq, wk, wv
+        self.lam = lam
+        self.dk = wk.shape[1]
+        self.dv = wv.shape[1]
+
+    # -- projections
+    def _kv(self, y):  # y (..., D) -> k (..., dk), v (..., dv)
+        return y @ self.wk, y @ self.wv
+
+    def init_state(self, batch, length):
+        return jnp.zeros((batch, length, self.dk, self.dv), _F32)
+
+    def cont_diag(self, y_i, i):
+        k, v = self._kv(y_i.astype(_F32))
+        return k[..., :, None] * v[..., None, :]  # (B, dk, dv)
+
+    def range_alg(self, y_seg, in_lo, out_offsets):
+        k, v = self._kv(y_seg.astype(_F32))  # (B, U, dk/dv)
+        U = y_seg.shape[1]
+        # decayed sum anchored at the LAST input position r = in_lo+U-1:
+        w = self.lam ** jnp.arange(U - 1, -1, -1, dtype=_F32)  # λ^(r-i)
+        S = jnp.einsum("u,buk,buv->bkv", w, k, v)
+        scale = self.lam ** out_offsets.astype(_F32)  # λ^(p-r), p>r
+        return scale[None, :, None, None] * S[:, None]  # (B, U2, dk, dv)
+
+    def agg(self, b, x):
+        return b + x
+
+    def read(self, b_i, y_i):
+        q = (y_i.astype(_F32) @ self.wq)
+        q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-6)
+        return jnp.einsum("bk,bkv->bv", q, b_i)
+
+    # ------------------------------------------------------------ oracles
+    def naive(self, ys):
+        """O(L²) direct evaluation of mixer(y)_j (B, L, dv)."""
+        B, L, _ = ys.shape
+        k, v = self._kv(ys.astype(_F32))
+        out = []
+        for j in range(L):
+            S = jnp.zeros((B, self.dk, self.dv), _F32)
+            for i in range(j + 1):
+                S = S + (self.lam ** (j - i)) * (k[:, i, :, None] * v[:, i, None, :])
+            out.append(self.read(S, ys[:, j]))
+        return jnp.stack(out, axis=1)
+
+    def recurrent(self, ys):
+        """O(L·dk·dv) RNN-mode oracle: S_j = λ·S_{j-1} + k_j⊗v_j."""
+        B, L, _ = ys.shape
+        k, v = self._kv(ys.astype(_F32))
+        S = jnp.zeros((B, self.dk, self.dv), _F32)
+        out = []
+        for j in range(L):
+            S = self.lam * S + k[:, j, :, None] * v[:, j, None, :]
+            out.append(self.read(S, ys[:, j]))
+        return jnp.stack(out, axis=1)

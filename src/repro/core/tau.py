@@ -1,0 +1,168 @@
+"""τ — range-to-range contribution primitives (paper Lemma 1 + Appendix C).
+
+``tau(y[l..r] , rho) -> contributions to z[l'..r']``.  Algorithm 2 only ever
+needs the square case ``l' = r+1, r' = r+U`` with ``U = r-l+1``; the general
+Lemma-1 form is provided for tests and for the generic framework.
+
+Conventions
+-----------
+* channel-last arrays: ``y_tile`` has shape ``(..., U, C)``; filters are
+  ``(..., 2U, C)`` slices ``rho[0 .. 2U-1]`` (the ``rho_0`` entry is present
+  but mathematically unused by the tile — the red cell owns it).
+* output ``(..., U, C)``: ``out[t] = sum_s y[s] * rho[U + t - s]`` for
+  ``t, s in [0, U)`` — i.e. the contribution of the U inputs ending at step
+  ``i`` to the U outputs starting at ``i+1``.
+
+Implementations (paper §5.2): ``direct`` (quadratic in U, MXU-friendly),
+``fft`` (order-2U circular convolution — Appendix C's half-length trick),
+``pallas`` (the direct form as an explicit-VMEM TPU kernel), and ``hybrid``
+(static per-U dispatch, the TPU analogue of the paper's measured Pareto
+frontier).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+def _band_index(U: int) -> jnp.ndarray:
+    """(U, U) gather index: idx[t, s] = U + t - s  (values in [1, 2U-1])."""
+    t = jnp.arange(U)
+    return U + t[:, None] - t[None, :]
+
+
+def tau_direct(y_tile: jnp.ndarray, rho2u: jnp.ndarray) -> jnp.ndarray:
+    """Direct (quadratic-in-U) evaluation. O(U^2 C) multiply-adds.
+
+    y_tile: (..., U, C); rho2u: broadcast-compatible (..., 2U, C).
+    """
+    U = y_tile.shape[-2]
+    if rho2u.shape[-2] != 2 * U:
+        raise ValueError(f"rho2u must have length 2U={2*U}, got {rho2u.shape[-2]}")
+    rmat = jnp.take(rho2u, _band_index(U), axis=-2)  # (..., U, U, C)
+    return jnp.einsum(
+        "...tsc,...sc->...tc", rmat, y_tile, preferred_element_type=_F32
+    ).astype(y_tile.dtype)
+
+
+def rho_dft(rho2u: jnp.ndarray) -> jnp.ndarray:
+    """Precompute the filter DFT for a tile size (Appendix C: 3 -> 2 DFTs)."""
+    n = rho2u.shape[-2]
+    return jnp.fft.rfft(rho2u.astype(_F32), n=n, axis=-2)
+
+
+def tau_fft(
+    y_tile: jnp.ndarray,
+    rho2u: jnp.ndarray | None = None,
+    rho_f: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """FFT evaluation via an order-2U *circular* convolution (Appendix C).
+
+    The linear convolution of the U inputs with rho[0..2U-1] has length 3U-1;
+    its cyclic fold (length 2U) wraps outputs [2U, 3U-2] onto [0, U-2], never
+    touching the U outputs of interest [U, 2U-1] — so a 2U FFT suffices
+    (a 2x saving over the canonical 4U zero-padded transform).
+    """
+    U = y_tile.shape[-2]
+    n = 2 * U
+    if rho_f is None:
+        if rho2u is None:
+            raise ValueError("need rho2u or its precomputed DFT")
+        rho_f = rho_dft(rho2u)
+    y_f = jnp.fft.rfft(y_tile.astype(_F32), n=n, axis=-2)
+    circ = jnp.fft.irfft(y_f * rho_f, n=n, axis=-2)
+    return circ[..., U : 2 * U, :].astype(y_tile.dtype)
+
+
+def make_rho_dfts(rho: jnp.ndarray, max_tile: int) -> Mapping[int, jnp.ndarray]:
+    """Precompute {U: DFT(rho[0..2U-1], n=2U)} for U = 1, 2, 4, ..., max_tile.
+
+    rho: (..., L, C) with L >= 2*max_tile (Algorithm 2 only needs prefixes).
+    This is the paper's §5.4 engineering contribution #1: log2(L)-1 cached
+    filter transforms, amortized over 2^(P-1-q) tiles each.
+    """
+    dfts: dict[int, jnp.ndarray] = {}
+    U = 1
+    while U <= max_tile:
+        dfts[U] = rho_dft(rho[..., : 2 * U, :])
+        U *= 2
+    return dfts
+
+
+def tau_hybrid(
+    y_tile: jnp.ndarray,
+    rho2u: jnp.ndarray | None = None,
+    rho_f: jnp.ndarray | None = None,
+    *,
+    direct_max: int = 32,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Static per-tile-size dispatch (paper §5.3 'Hybrid').
+
+    Tile sizes are powers of two known at trace time, so the branch is free.
+    ``direct_max`` is the measured crossover (benchmarks/bench_tau.py).
+    """
+    U = y_tile.shape[-2]
+    if U <= direct_max:
+        if use_pallas:
+            from repro.kernels import ops as kops
+
+            return kops.tile_conv(y_tile, rho2u)
+        return tau_direct(y_tile, rho2u)
+    return tau_fft(y_tile, rho2u=rho2u, rho_f=rho_f)
+
+
+def tau_ranges(
+    y: jnp.ndarray, rho: jnp.ndarray, l: int, r: int, lp: int, rp: int
+) -> jnp.ndarray:
+    """General Lemma-1 τ: contributions of y[l..r] to z[lp..rp] (1-based,
+    inclusive; requires r <= lp).  Direct evaluation — test/reference use.
+
+    y: (..., L, C), rho: (..., L, C).  Returns (..., rp-lp+1, C).
+    """
+    if not (1 <= l <= r <= lp <= rp):
+        raise ValueError(f"bad ranges ({l},{r},{lp},{rp})")
+    yseg = y[..., l - 1 : r, :]  # (.., L1, C)
+    ts = jnp.arange(lp, rp + 1)[:, None]  # output positions (1-based)
+    is_ = jnp.arange(l, r + 1)[None, :]  # input positions
+    idx = ts - is_  # (L2, L1) rho lags, all >= lp - r >= 0
+    rmat = jnp.take(rho, idx, axis=-2)  # (..., L2, L1, C)
+    return jnp.einsum(
+        "...tsc,...sc->...tc", rmat, yseg, preferred_element_type=_F32
+    ).astype(y.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_len",))
+def conv_causal_fft(y: jnp.ndarray, rho: jnp.ndarray, out_len: int | None = None) -> jnp.ndarray:
+    """Static (training / prefill) causal convolution via one big FFT:
+    z[t] = sum_{k<=t} y[k] * rho[t-k].   y: (..., T, C), rho: (..., >=T, C).
+    """
+    T = y.shape[-2]
+    out_len = T if out_len is None else out_len
+    n = 1
+    while n < T + out_len:
+        n *= 2
+    y_f = jnp.fft.rfft(y.astype(_F32), n=n, axis=-2)
+    r_f = jnp.fft.rfft(rho[..., :out_len, :].astype(_F32), n=n, axis=-2)
+    z = jnp.fft.irfft(y_f * r_f, n=n, axis=-2)
+    return z[..., :out_len, :].astype(y.dtype)
+
+
+def conv_causal_direct(y: jnp.ndarray, rho: jnp.ndarray) -> jnp.ndarray:
+    """O(T^2) oracle for conv_causal_fft."""
+    T = y.shape[-2]
+    ts = jnp.arange(T)[:, None]
+    is_ = jnp.arange(T)[None, :]
+    lag = ts - is_
+    mask = lag >= 0
+    rmat = jnp.take(rho, jnp.where(mask, lag, 0), axis=-2)
+    rmat = jnp.where(mask[..., None], rmat, 0)
+    return jnp.einsum(
+        "...tsc,...sc->...tc", rmat, y, preferred_element_type=_F32
+    ).astype(y.dtype)

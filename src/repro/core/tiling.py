@@ -1,0 +1,144 @@
+"""Fractal tile schedule for relaxed (online) convolution — paper §3.1.
+
+The contribution space of an online convolution is the lower triangle
+``{(i, t) : 1 <= i <= t <= L}`` where cell ``(i, t)`` is the contribution of
+input ``y_i`` to output ``z_t``.  Flash Inference covers this triangle with
+
+  * L "red cells"  — the diagonal ``(i, i)`` (the ``y_i * rho_0`` term), and
+  * "gray tiles"   — at step ``i`` (1-based), a square tile of side
+    ``U = 2^nu(i)`` (largest power of two dividing ``i``) covering the
+    contributions of ``y[i-U+1 .. i]`` to ``z[i+1 .. i+U]``.
+
+Every off-diagonal cell is covered exactly once and causality is respected:
+a tile at step ``i`` only reads inputs with index <= i (all available once
+``z_{i-1}`` has been returned) and only writes outputs with index > i.
+
+Everything in this module is plain Python/NumPy; it is schedule metadata, not
+traced computation.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterator
+
+
+def largest_pow2_divisor(i: int) -> int:
+    """``2^nu(i)``: the side of the gray tile unlocked at step ``i`` (>=1)."""
+    if i <= 0:
+        raise ValueError(f"step index must be positive, got {i}")
+    return i & (-i)
+
+
+@dataclass(frozen=True)
+class Tile:
+    """Gray tile unlocked at step ``i``: inputs [in_lo, in_hi] -> outputs [out_lo, out_hi].
+
+    All indices are 1-based and inclusive, matching the paper's notation.
+    ``out_side <= side`` only when L is not a power of two (the tile's output
+    range is clipped at L; its input range never is, so coverage is kept).
+    """
+
+    step: int
+    side: int
+    out_side: int
+
+    @property
+    def in_lo(self) -> int:
+        return self.step - self.side + 1
+
+    @property
+    def in_hi(self) -> int:
+        return self.step
+
+    @property
+    def out_lo(self) -> int:
+        return self.step + 1
+
+    @property
+    def out_hi(self) -> int:
+        return self.step + self.out_side
+
+
+def tile_schedule(L: int) -> Iterator[Tile]:
+    """Yield the gray tiles for generating ``L`` tokens, in execution order.
+
+    The paper assumes ``L = 2^P`` (then all tiles are squares that fit
+    exactly); for other L we clip each tile's *output* range at L, which
+    preserves exact single coverage of every existing contribution cell.
+    """
+    for i in range(1, L):
+        side = largest_pow2_divisor(i)
+        yield Tile(step=i, side=side, out_side=min(side, L - i))
+
+
+def tile_histogram(L: int) -> dict[int, int]:
+    """Map tile side -> number of tiles (Proposition 1: 2^(P-1-q) tiles of side 2^q)."""
+    hist: dict[int, int] = {}
+    for t in tile_schedule(L):
+        hist[t.side] = hist.get(t.side, 0) + 1
+    return hist
+
+
+def activation_positions_touched(L: int) -> int:  # noqa: F811 (canonical def)
+    """Total activation positions read+written by all tau calls (paper §3.3):
+    O(L log L), vs Omega(L^2) for lazy/eager."""
+    return sum(t.side + t.out_side for t in tile_schedule(L))
+
+
+def validate_tiling(L: int) -> None:
+    """Assert the schedule covers each off-diagonal contribution exactly once,
+    causally.  Raises AssertionError otherwise.  O(L^2) — test-sized L only.
+    """
+    covered = {}
+    for t in tile_schedule(L):
+        assert t.in_hi < t.out_lo, f"tile {t} is not causal (r >= l')"
+        assert t.in_lo >= 1 and t.out_hi <= L, f"tile {t} out of range"
+        for i in range(t.in_lo, t.in_hi + 1):
+            for z in range(t.out_lo, t.out_hi + 1):
+                key = (i, z)
+                assert key not in covered, f"cell {key} covered twice: {covered[key]} and {t}"
+                covered[key] = t
+    # Red cells cover the diagonal; everything else must be covered by a tile.
+    for z in range(1, L + 1):
+        for i in range(1, z):
+            assert (i, z) in covered, f"cell ({i},{z}) never covered"
+    # Causal completeness: the tile contributing (i, z) must run at a step < z,
+    # i.e. by the time z is returned all its contributions are in.
+    for (i, z), t in covered.items():
+        assert t.step < z, f"cell ({i},{z}) accounted too late by {t}"
+
+
+def theoretical_tau_flops(L: int, d: int = 1, impl: str = "fft") -> float:
+    """Theorem 2 cost model: sum over q of 2^(P-1-q) * T(2^q, 2^q).
+
+    ``fft``    : T(U, U) = d * 2U * log2(2U) * C   (order-2U FFT, App. C)
+    ``direct`` : T(U, U) = d * U^2
+    Returned in units of multiply-adds (the constant C for FFT is taken as 5,
+    the usual split-radix estimate, times 2 transforms + pointwise per App. C).
+    """
+    P = int(math.log2(L))
+    assert 1 << P == L, "cost model assumes L = 2^P"
+    total = 0.0
+    for q in range(P):
+        U = 1 << q
+        n_tiles = 1 << (P - 1 - q)
+        if impl == "fft":
+            n = 2 * U
+            # 2 DFTs (input fwd + inverse; filter DFT precomputed, App. C)
+            # + pointwise complex multiply.
+            per_tile = d * (2 * 5 * n * math.log2(n) + 6 * n)
+        elif impl == "direct":
+            per_tile = d * U * U * 2
+        else:
+            raise ValueError(impl)
+        total += n_tiles * per_tile
+    return total
+
+
+def naive_flops(L: int, d: int = 1) -> float:
+    """Lazy/eager baseline cost: Omega(L^2) multiply-adds."""
+    return d * L * (L - 1)  # sum_t 2*(t-1)
+
+

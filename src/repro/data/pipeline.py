@@ -1,0 +1,117 @@
+"""Deterministic synthetic LM data pipeline.
+
+The paper's experiments run on randomly-initialized weights (runtime is the
+object of study), so the data path only needs to be *deterministic,
+shardable and shaped like real data*.  We generate token streams from a
+fixed-seed Markov-ish hash chain (cheap, reproducible across hosts, no
+collective needed: every host computes its own shard by index).
+
+Batches follow the model-family input contracts of models/lm.py:
+  text  : tokens, targets
+  audio : + enc_frames (precomputed mel-frame embeddings — stub frontend)
+  vlm   : + vis_embed, pos3 (precomputed patch embeddings — stub frontend)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def _hash_tokens(seed: int, start: int, n: int, vocab: int) -> np.ndarray:
+    """Deterministic pseudo-token stream; position-addressable (no state),
+    so any (host, step) slice is computable independently."""
+    idx = (start + np.arange(n, dtype=np.uint64)) * np.uint64(6364136223846793005)
+    idx ^= np.uint64(seed) * np.uint64(1442695040888963407)
+    idx ^= idx >> np.uint64(33)
+    idx *= np.uint64(0xFF51AFD7ED558CCD)
+    idx ^= idx >> np.uint64(33)
+    return (idx % np.uint64(max(vocab - 1, 1))).astype(np.int32)
+
+
+@dataclass
+class SyntheticLMDataset:
+    """Per-host deterministic batches.
+
+    ``host_id``/``n_hosts`` slice the global batch: host h owns rows
+    [h*B/n_hosts, (h+1)*B/n_hosts) — the same protocol a real multi-host
+    loader would follow (each host feeds its addressable devices).
+    """
+
+    cfg: ModelConfig
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    host_id: int = 0
+    n_hosts: int = 1
+    n_vis: int = 0  # VLM: patch-embedding prefix length
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        B, T = self.host_batch, self.seq_len
+        row0 = step * self.global_batch + self.host_id * B
+        toks = np.stack([
+            _hash_tokens(self.seed, (row0 + i) << 22, T + 1, cfg.vocab)
+            for i in range(B)
+        ])
+        out = {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "targets": jnp.asarray(toks[:, 1:]),
+        }
+        if cfg.enc_layers:
+            frames = _hash_tokens(self.seed + 1, row0 << 22,
+                                  B * cfg.enc_positions * cfg.d_model, 1 << 16)
+            out["enc_frames"] = (
+                jnp.asarray(frames, jnp.float32).reshape(
+                    B, cfg.enc_positions, cfg.d_model) / (1 << 15) - 1.0) * 0.02
+        if cfg.m_rope and self.n_vis:
+            emb = _hash_tokens(self.seed + 2, (row0 + 7) << 22,
+                               B * self.n_vis * cfg.d_model, 1 << 16)
+            out["vis_embed"] = (
+                jnp.asarray(emb, jnp.float32).reshape(B, self.n_vis, cfg.d_model)
+                / (1 << 15) - 1.0) * 0.02
+            out["pos3"] = vlm_pos3(B, self.n_vis, T)
+        return out
+
+
+def vlm_pos3(B: int, n_vis: int, T_text: int) -> jnp.ndarray:
+    """M-RoPE position ids for a [vis | text] sequence: visual patches get a
+    (t=0, h, w) grid; text continues with equal (t, h, w) after the grid."""
+    side = max(1, int(np.sqrt(n_vis)))
+    hh = (np.arange(n_vis) // side).astype(np.int32)
+    ww = (np.arange(n_vis) % side).astype(np.int32)
+    tt = np.zeros(n_vis, np.int32)
+    t0 = int(hh.max(initial=0)) + 1
+    text = t0 + np.arange(T_text, dtype=np.int32)
+    pos = np.stack([
+        np.concatenate([tt, text]), np.concatenate([hh, text]),
+        np.concatenate([ww, text])])
+    return jnp.broadcast_to(jnp.asarray(pos)[:, None, :], (3, B, n_vis + T_text))
+
+
+def make_batch_specs(cfg: ModelConfig, global_batch: int, seq_len: int,
+                     n_vis: int = 0) -> dict:
+    """ShapeDtypeStruct stand-ins mirroring ``SyntheticLMDataset.batch`` —
+    used by the dry-run (no allocation)."""
+    B, T = global_batch, seq_len
+    sds = jax.ShapeDtypeStruct
+    out = {
+        "tokens": sds((B, T), jnp.int32),
+        "targets": sds((B, T), jnp.int32),
+    }
+    if cfg.enc_layers:
+        out["enc_frames"] = sds((B, cfg.enc_positions, cfg.d_model), jnp.float32)
+    if cfg.m_rope and n_vis:
+        out["vis_embed"] = sds((B, n_vis, cfg.d_model), jnp.float32)
+        out["pos3"] = sds((3, B, n_vis + T), jnp.int32)
+    return out

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: single-token GQA decode attention (flash-style).
+
+    out[b, k, g, :] = softmax_s( q[b,k,g]·K[b,s,k] / √hd  | s < pos_b ) · V
+
+The decode roofline floor is reading the KV cache once; this kernel
+streams the cache through VMEM in sequence chunks with an online-softmax
+accumulator in scratch, so HBM traffic = cache bytes + O(1):
+
+  * grid = (B, Hkv, S/chunk) — the chunk axis is minor-most, so scratch
+    (m, l, acc) carries across it; outputs are written on the last chunk.
+  * blocks: K/V (1, chunk, 1, hd) → VMEM ≈ 2·chunk·hd·2B (≈0.5 MiB at
+    chunk=1024, hd=128); q/out (1, 1, G, hd) are tiny.
+  * per-row validity: positions ≥ pos_b are masked to -inf (ring-buffer
+    caches pass pos = min(pos+1, S), full caches pos+1).
+
+The jnp serving path (models/attention.gqa_decode) remains the SPMD
+reference; this kernel is the TPU hot-spot artifact, validated against
+ref.decode_attention_ref in interpret mode across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_F32 = jnp.float32
+_NEG = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, chunk: int, hd: int, n_chunks: int):
+    # None block dims are squeezed: q_ref/o_ref (G, hd); k_ref/v_ref
+    # (chunk, hd); pos_ref (1,).  scratch: m/l (G, 1), acc (G, hd) —
+    # persists across the minor-most (chunk) grid axis.
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(_F32)                       # (G, hd)
+    k = k_ref[...].astype(_F32)                       # (chunk, hd)
+    v = v_ref[...].astype(_F32)
+    lg = jnp.dot(q, k.T) * (1.0 / math.sqrt(hd))      # (G, chunk)
+    spos = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
+    valid = spos < pos_ref[...]
+    lg = jnp.where(valid, lg, _NEG)
+
+    m_old = m_ref[...]                                # (G, 1)
+    m_new = jnp.maximum(m_old, lg.max(axis=1, keepdims=True))
+    p = jnp.exp(lg - m_new)                           # (G, chunk)
+    resc = jnp.exp(m_old - m_new)                     # (G, 1)
+    l_ref[...] = l_ref[...] * resc + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * resc + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def decode_attention(q, k, v, pos, *, chunk: int = 1024,
+                     interpret: bool = False):
+    """q: (B, Hkv, G, hd); k/v: (B, S, Hkv, hd); pos: (B,) valid lengths.
+    Returns (B, Hkv, G, hd) in q's dtype."""
+    B, K, G, hd = q.shape
+    S = k.shape[1]
+    chunk = min(chunk, max(8, S))
+    nc = -(-S // chunk)
+    Sp = nc * chunk
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    pos2 = pos.reshape(B, 1).astype(jnp.int32)
+
+    grid = (B, K, nc)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, chunk=chunk, hd=hd, n_chunks=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None), lambda b, h, c: (b, 0)),
+            pl.BlockSpec((None, None, G, hd), lambda b, h, c: (b, h, 0, 0)),
+            pl.BlockSpec((None, chunk, None, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((None, chunk, None, hd), lambda b, h, c: (b, c, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, G, hd), lambda b, h, c: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), _F32),
+            pltpu.VMEM((G, 1), _F32),
+            pltpu.VMEM((G, hd), _F32),
+        ],
+        interpret=interpret,
+    )(pos2, q, k, v)
+    return out

@@ -1,0 +1,97 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively; everywhere else (this CPU
+container, unit tests) they run in ``interpret=True`` mode, which executes
+the kernel body in Python — same arithmetic, same BlockSpec pipelining
+semantics, no Mosaic.  The flag is resolved once per process.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref as _ref
+from repro.kernels.short_conv import short_conv as _short_conv
+from repro.kernels.tile_conv import tile_conv as _tile_conv
+
+__all__ = ["tile_conv", "short_conv", "decode_attention", "interpret_default", "ref"]
+
+ref = _ref
+
+
+def interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def tile_conv(y, rho2u, *, interpret: bool | None = None):
+    """Direct τ tile via Pallas (see kernels/tile_conv.py, oracle ref.tile_conv_ref)."""
+    itp = interpret_default() if interpret is None else interpret
+    return _tile_conv(y, rho2u, interpret=itp)
+
+
+import functools
+
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=None)
+def _short_conv_diffable(block_t: int, itp: bool):
+    """custom_vjp wrapper: forward = Pallas kernel; backward = the exact
+    transpose (an anti-causal FIR = time-flipped forward kernel + K small
+    reductions for dw/db), so training paths (Mamba) can differentiate
+    through the kernel."""
+
+    @jax.custom_vjp
+    def f(x, w, b):
+        return _short_conv(x, w, b, block_t=block_t, interpret=itp)
+
+    def fwd(x, w, b):
+        return f(x, w, b), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        T, K = x.shape[1], w.shape[0]
+        # dx[t] = sum_d w[d] * g[t+d]  — run the same kernel on flipped time.
+        gf = jnp.flip(g, axis=1)
+        dxf = _short_conv(gf, w, None, block_t=block_t, interpret=itp)
+        dx = jnp.flip(dxf, axis=1).astype(x.dtype)
+        # dw[d] = sum_{b,t} g[t] * x[t-d]
+        xs = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        dw = jnp.stack([
+            jnp.einsum("btc,btc->c", g.astype(jnp.float32),
+                       xs[:, K - 1 - d : K - 1 - d + T].astype(jnp.float32))
+            for d in range(K)])
+        db = jnp.sum(g.astype(jnp.float32), axis=(0, 1))
+        return dx, dw.astype(w.dtype), db
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def short_conv(x, w, b=None, *, block_t: int = 128, interpret: bool | None = None):
+    """Depthwise causal FIR via Pallas (oracle ref.short_conv_ref).
+
+    Under an active mesh context (SPMD launch/dry-run) the jnp reference is
+    used instead: the interpret-mode pallas_call is not partition-aware and
+    GSPMD replicates its halo'd operands (measured 33 GiB/chip at
+    falcon-mamba prefill).  On a real TPU backend the Mosaic kernel is
+    partition-friendly under shard_map; interpret mode is a CPU stand-in.
+    """
+    from repro.models.components import sharding_ctx
+
+    _, mesh = sharding_ctx()
+    if mesh is not None:
+        return _ref.short_conv_ref(x, w, b)
+    itp = interpret_default() if interpret is None else interpret
+    if b is None:
+        b = jnp.zeros((x.shape[-1],), x.dtype)
+    return _short_conv_diffable(block_t, itp)(x, w, b)
+
+
+def decode_attention(q, k, v, pos, *, chunk: int = 1024,
+                     interpret: bool | None = None):
+    """Flash decode attention via Pallas (oracle ref.decode_attention_ref)."""
+    from repro.kernels.decode_attn import decode_attention as _da
+
+    itp = interpret_default() if interpret is None else interpret
+    return _da(q, k, v, pos, chunk=chunk, interpret=itp)

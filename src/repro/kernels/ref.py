@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical definition, written with no regard for
+performance; kernel tests sweep shapes/dtypes and assert_allclose against
+these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+def tile_conv_ref(y: jnp.ndarray, rho2u: jnp.ndarray) -> jnp.ndarray:
+    """Direct τ tile (paper Lemma 1, square case).
+
+    y: (..., U, C) — the U inputs ending at step i.
+    rho2u: (..., 2U, C) — filter prefix rho[0 .. 2U-1] (broadcastable).
+    out: (..., U, C) — out[t] = sum_s y[s] * rho[U + t - s], t,s in [0,U).
+    """
+    U = y.shape[-2]
+    t = jnp.arange(U)
+    idx = U + t[:, None] - t[None, :]  # (U, U) in [1, 2U-1]
+    rmat = jnp.take(rho2u, idx, axis=-2)  # (..., U, U, C)
+    return jnp.einsum(
+        "...tsc,...sc->...tc", rmat, y, preferred_element_type=_F32
+    ).astype(y.dtype)
+
+
+def short_conv_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Depthwise causal FIR (Mamba conv1d / Hyena short filter).
+
+    x: (B, T, C); w: (K, C) — tap d multiplies x[t - d]; b: (C,) or None.
+    out: (B, T, C) with implicit zero left-padding.
+    """
+    K = w.shape[0]
+    out = jnp.zeros(x.shape, _F32)
+    for d in range(K):
+        seg = jnp.pad(x, ((0, 0), (d, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + seg.astype(_F32) * w[d]
+    if b is not None:
+        out = out + b
+    return out.astype(x.dtype)
+
+
+def ssm_scan_ref(x, dt, A, B, C, D, h0=None):
+    """Selective-SSM (Mamba-1) sequential oracle.
+
+    x:  (Bt, T, C)   input (post short-conv, post silu)
+    dt: (Bt, T, C)   softplus'd step sizes
+    A:  (C, N)       negative-real diagonal (stored as raw; used as -exp? no —
+                     caller passes the already-negative A)
+    B:  (Bt, T, N)   input matrix (data-dependent)
+    C:  (Bt, T, N)   output matrix (data-dependent)
+    D:  (C,)         skip
+    h0: (Bt, C, N)   initial state or None.
+    Returns (y (Bt, T, C), h_T (Bt, C, N)).
+
+    Discretization (Mamba ZOH-on-A, Euler-on-B):
+      h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+      y_t = (C_t . h_t) + D * x_t
+    """
+    import jax
+
+    Bt, T, Cdim = x.shape
+    N = A.shape[1]
+    h = jnp.zeros((Bt, Cdim, N), _F32) if h0 is None else h0.astype(_F32)
+    ys = []
+    for t in range(T):
+        dta = dt[:, t, :, None].astype(_F32) * A[None]  # (Bt, C, N)
+        h = jnp.exp(dta) * h + (
+            dt[:, t, :, None] * x[:, t, :, None]
+        ).astype(_F32) * B[:, t, None, :].astype(_F32)
+        y = jnp.einsum("bcn,bn->bc", h, C[:, t].astype(_F32)) + D * x[:, t].astype(_F32)
+        ys.append(y)
+    del jax
+    return jnp.stack(ys, axis=1).astype(x.dtype), h
+
+
+def decode_attention_ref(q, k, v, pos):
+    """Single-token GQA decode attention oracle.
+
+    q: (B, Hkv, G, hd); k/v: (B, S, Hkv, hd); pos: (B,) valid lengths.
+    out[b, h, g] = softmax_{s < pos_b}(q·k_s/√hd) · v.
+    """
+    import math
+
+    B, K, G, hd = q.shape
+    S = k.shape[1]
+    lg = jnp.einsum("bkgh,bskh->bkgs", q.astype(_F32), k.astype(_F32))
+    lg = lg / math.sqrt(hd)
+    valid = jnp.arange(S)[None, :] < pos[:, None]  # (B, S)
+    lg = jnp.where(valid[:, None, None], lg, -1e30)
+    w = jnp.exp(lg - lg.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    return jnp.einsum("bkgs,bskh->bkgh", w, v.astype(_F32)).astype(q.dtype)

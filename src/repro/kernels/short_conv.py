@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: depthwise causal short FIR (Mamba conv1d, Hyena short
+filter).
+
+    out[b, t, c] = bias[c] + sum_{d=0}^{K-1} w[d, c] * x[b, t-d, c]
+
+K is tiny (3–4), so the kernel is K shifted FMAs on the VPU.  Layout:
+channels → 128-lane dim, time → sublane dim, time tiled by ``block_t``.
+Causal history across time blocks is provided by materializing a halo'd
+view of the input — each time block carries K-1 extra leading positions —
+so programs stay independent (no cross-program communication).
+
+VMEM per program: (2·block_t + K - 1) · 128 · 4 B ≈ 130 KiB at
+block_t = 128; block_t is a tuning knob.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+
+
+def _short_conv_kernel(x_ref, w_ref, b_ref, out_ref, *, K: int, block_t: int):
+    # x_ref: (block_t + K - 1, Cb) halo'd block; w_ref: (K, Cb);
+    # b_ref: (1, Cb); out_ref: (block_t, Cb).
+    x = x_ref[...].astype(jnp.float32)
+    acc = jnp.broadcast_to(
+        b_ref[0, :][None, :].astype(jnp.float32), (block_t, x.shape[1])
+    )
+    for d in range(K):
+        # tap d multiplies x[t - d]; the halo puts output t=0 at row K-1.
+        seg = jax.lax.slice_in_dim(x, K - 1 - d, K - 1 - d + block_t, axis=0)
+        acc = acc + seg * w_ref[d, :][None, :].astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def short_conv(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    *,
+    block_t: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """x: (B, T, C); w: (K, C); b: (C,) or None. Returns (B, T, C)."""
+    B, T, C = x.shape
+    K = w.shape[0]
+    if b is None:
+        b = jnp.zeros((C,), x.dtype)
+
+    block_t = min(block_t, max(8, 1 << (T - 1).bit_length()))
+    nT = (T + block_t - 1) // block_t
+    Tp = nT * block_t
+    Cp = max(_LANES, ((C + _LANES - 1) // _LANES) * _LANES)
+    # causal left pad K-1 + right pad to the block grid + lane pad.
+    xp = jnp.pad(x, ((0, 0), (K - 1, Tp - T), (0, Cp - C)))
+    # Halo'd view: block i covers padded rows [i*block_t, i*block_t + block_t+K-1).
+    starts = jnp.arange(nT) * block_t
+    offs = jnp.arange(block_t + K - 1)
+    xh = xp[:, starts[:, None] + offs[None, :], :]  # (B, nT, block_t+K-1, Cp)
+    wp = jnp.pad(w, ((0, 0), (0, Cp - C)))
+    bp = jnp.pad(b, ((0, Cp - C)))[None, :]  # (1, Cp)
+
+    grid = (B, nT, Cp // _LANES)
+    out = pl.pallas_call(
+        functools.partial(_short_conv_kernel, K=K, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (None, None, block_t + K - 1, _LANES),
+                lambda bi, ti, ci: (bi, ti, 0, ci),
+            ),
+            pl.BlockSpec((K, _LANES), lambda bi, ti, ci: (0, ci)),
+            pl.BlockSpec((1, _LANES), lambda bi, ti, ci: (0, ci)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, block_t, _LANES), lambda bi, ti, ci: (bi, ti, ci)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Tp, Cp), x.dtype),
+        interpret=interpret,
+    )(xh, wp, bp)
+    return out[:, :T, :C]

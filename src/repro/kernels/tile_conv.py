@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the direct τ tile (paper §5.2 type-1, TPU-native).
+
+The square gray tile of Algorithm 2 with side ``U`` computes, per channel,
+
+    out[t, c] = sum_{s=0}^{U-1} y[s, c] * rho[U + t - s, c]      t in [0, U)
+
+a *depthwise* banded convolution.  On GPU the paper uses cuDNN Conv1D /
+FlashFFTConv; on TPU the depthwise form is VPU work, so the kernel is laid
+out for the vector unit instead of the MXU:
+
+  * channels on the 128-wide lane dimension (C tiled by 128),
+  * the U time steps on the sublane dimension,
+  * the inner reduction unrolled as U shifted fused multiply-adds, each an
+    (U, 128) elementwise FMA reading a length-U sliding window of ``rho``.
+
+VMEM working set per program: y (U,128) + rho (2U,128) + out (U,128) ≈
+4U·128 · 4 B — even U=512 is ~1 MiB, far below the ~16 MiB/core budget, so
+no further time tiling is needed (the hybrid dispatcher routes U > ~64 to
+the FFT path anyway).
+
+Leading (group/batch) dims are flattened onto the grid's first axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128
+
+
+def _tile_conv_kernel(y_ref, rho_ref, out_ref, *, U: int):
+    """One (U, Cb) output block.
+
+    y_ref: (U, Cb); rho_ref: (2U, Cb); out_ref: (U, Cb).
+    out[t] = sum_s y[s] * rho[U + t - s]
+           = sum_s y[s] * rev_window_s[t],  rev_window_s = rho[U-s : 2U-s].
+    """
+    acc = jnp.zeros(out_ref.shape, jnp.float32)
+    y = y_ref[...].astype(jnp.float32)
+    rho = rho_ref[...].astype(jnp.float32)
+    # Unrolled: U is a trace-time constant (tile sides are powers of two and
+    # the hybrid dispatcher keeps the Pallas path to small U), so the slice
+    # starts are static — no dynamic-slice lowering needed.
+    for s in range(U):
+        window = jax.lax.slice_in_dim(rho, U - s, 2 * U - s, axis=0)  # (U, Cb)
+        acc = acc + y[s, :][None, :] * window
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tile_conv(y: jnp.ndarray, rho2u: jnp.ndarray, *, interpret: bool = False) -> jnp.ndarray:
+    """Pallas direct τ. y: (..., U, C); rho2u: (..., 2U, C) broadcastable.
+
+    Returns (..., U, C), same dtype as y.
+    """
+    U, C = y.shape[-2], y.shape[-1]
+    if rho2u.shape[-2] != 2 * U:
+        raise ValueError(f"rho2u must have length 2U={2*U}, got {rho2u.shape[-2]}")
+    lead = y.shape[:-2]
+    rho_b = jnp.broadcast_to(rho2u, lead + (2 * U, C))
+    nb = 1
+    for d in lead:
+        nb *= d
+    y2 = y.reshape(nb, U, C)
+    rho2 = rho_b.reshape(nb, 2 * U, C)
+
+    # Pad channels up to the lane width so every block is (., 128)-aligned.
+    Cp = max(_LANES, ((C + _LANES - 1) // _LANES) * _LANES)
+    if Cp != C:
+        y2 = jnp.pad(y2, ((0, 0), (0, 0), (0, Cp - C)))
+        rho2 = jnp.pad(rho2, ((0, 0), (0, 0), (0, Cp - C)))
+
+    grid = (nb, Cp // _LANES)
+    out = pl.pallas_call(
+        functools.partial(_tile_conv_kernel, U=U),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, U, _LANES), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((None, 2 * U, _LANES), lambda b, c: (b, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((None, U, _LANES), lambda b, c: (b, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((nb, U, Cp), y.dtype),
+        interpret=interpret,
+    )(y2, rho2)
+    if Cp != C:
+        out = out[..., :C]
+    return out.reshape(lead + (U, C))

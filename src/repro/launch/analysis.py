@@ -1,0 +1,220 @@
+"""Roofline-term extraction from a compiled dry-run artifact (DESIGN §7).
+
+    compute    = HLO_FLOPs / (chips × 197e12)          [s]
+    memory     = HLO_bytes / (chips × 819e9)           [s]
+    collective = collective_bytes / (chips × 50e9)     [s]
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the optimized (post-SPMD) HLO text
+and sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute / ragged-all-to-all op
+(result bytes ≈ data moved per chip for these ops; noted in EXPERIMENTS).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import asdict, dataclass
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# e.g.:  %all-reduce.7 = f32[32,1024]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<dtype>[a-z]\d*|pred|bf16)\[(?P<dims>[\d,]*)\][^ ]*)\s+"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+
+_TUPLE_RE = re.compile(
+    r"=\s*\((?P<parts>[^)]*)\)\s+(?P<op>" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+_PART_RE = re.compile(r"(?P<dtype>[a-z]\d+|pred|bf16)\[(?P<dims>[\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> tuple[int, dict[str, int]]:
+    """Sum result bytes of collective ops in (optimized) HLO text.
+    '-start' variants counted once; '-done' skipped (same data)."""
+    total = 0
+    per_op: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if m and m.group("dtype"):
+            b = _shape_bytes(m.group("dtype"), m.group("dims"))
+            per_op[m.group("op")] = per_op.get(m.group("op"), 0) + b
+            total += b
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            b = sum(_shape_bytes(p.group("dtype"), p.group("dims"))
+                    for p in _PART_RE.finditer(m.group("parts")))
+            per_op[m.group("op")] = per_op.get(m.group("op"), 0) + b
+            total += b
+    return total, per_op
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict
+    bytes_per_chip: float        # peak HBM per device from memory_analysis
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float           # 6·N_active·D (analytic)
+    analytic_flops: float        # model + attention terms (program total)
+    useful_ratio: float          # model_flops / total program flops
+    note: str = ""
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int, compiled,
+            model_flops: float, analytic: float = 0.0, note: str = "") -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    cb, per_op = collective_bytes(hlo)
+    ma = compiled.memory_analysis()
+    per_chip = float(getattr(ma, "temp_size_in_bytes", 0) +
+                     getattr(ma, "argument_size_in_bytes", 0) +
+                     getattr(ma, "output_size_in_bytes", 0)) if ma else 0.0
+
+    # cost_analysis flops/bytes are per-program = per-chip under SPMD, BUT
+    # while-loop bodies are counted ONCE (not × trip count) — scanned
+    # programs under-report.  The compute term therefore takes
+    # max(HLO, analytic/chips).
+    flops_eff = max(flops, analytic / chips)
+    compute_s = flops_eff / PEAK_FLOPS_BF16
+    memory_s = byts / HBM_BW
+    collective_s = cb / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / max(flops * chips, analytic) \
+        if max(flops, analytic) else float("nan")
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=cb,
+        coll_breakdown=per_op, bytes_per_chip=per_chip,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bottleneck=bottleneck, model_flops=model_flops,
+        analytic_flops=analytic, useful_ratio=useful, note=note)
+
+
+# ----------------------------------------------------------- model FLOPs
+def count_params(cfg) -> float:
+    """Analytic parameter counts (total and active) from the config."""
+    D, V = cfg.d_model, cfg.vocab
+    hd = cfg.head_dim
+    per_layer_attn = D * (cfg.n_heads * hd) + 2 * D * (cfg.n_kv_heads * hd) \
+        + (cfg.n_heads * hd) * D
+    if cfg.use_mla:
+        vhd = cfg.v_head_dim or hd
+        per_layer_attn = (D * cfg.q_lora + cfg.q_lora * cfg.n_heads * (hd + cfg.rope_dim)
+                          + D * (cfg.kv_lora + cfg.rope_dim)
+                          + cfg.kv_lora * cfg.n_heads * (hd + vhd)
+                          + cfg.n_heads * vhd * D)
+    dense_ffn = 3 * D * cfg.d_ff if cfg.d_ff else 0
+    moe_ffn_all = 3 * D * (cfg.moe_d_ff or 0) * cfg.n_experts
+    moe_ffn_act = 3 * D * (cfg.moe_d_ff or 0) * (cfg.top_k + cfg.n_shared_experts)
+    d_inner = cfg.d_inner or 2 * D
+    mamba_l = D * 2 * d_inner + d_inner * (max(1, D // 16) + 2 * cfg.ssm_state) \
+        + max(1, D // 16) * d_inner + d_inner * D
+
+    total = active = V * D * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "lcsm":
+        n_ops = cfg.n_layers // (cfg.hyena_order - 1)
+        per_op = D * 3 * D + D * D + 3 * D * cfg.d_ff  # in/out proj + swiglu
+        total = active = V * D + n_ops * per_op
+        return total, active
+    for stack in cfg.stacks():
+        for ld in stack.pattern:
+            n = stack.repeat
+            mix = {"attn": per_layer_attn, "attn_cross": 2 * per_layer_attn,
+                   "mla": per_layer_attn, "mamba": mamba_l}[ld.mixer]
+            total += n * mix
+            active += n * mix
+            if ld.ffn == "dense":
+                total += n * dense_ffn
+                active += n * dense_ffn
+            elif ld.ffn == "moe":
+                total += n * moe_ffn_all
+                active += n * moe_ffn_act
+    if cfg.enc_layers:
+        total += cfg.enc_layers * (per_layer_attn + 3 * D * cfg.d_ff)
+        active += cfg.enc_layers * (per_layer_attn + 3 * D * cfg.d_ff)
+    return total, active
+
+
+def model_flops_for(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (fwd-only), N = active params,
+    D = tokens processed by the program."""
+    from repro.launch.specs import SHAPES
+
+    info = SHAPES[shape_name]
+    _, active = count_params(cfg)
+    if info["kind"] == "train":
+        toks = info["seq_len"] * info["global_batch"]
+        return 6.0 * active * toks
+    if info["kind"] == "prefill":
+        toks = info["seq_len"] * info["global_batch"]
+        return 2.0 * active * toks
+    # decode: one token per sequence
+    return 2.0 * active * info["global_batch"]
+
+
+def attn_flops_for(cfg, shape_name: str) -> float:
+    """Attention score/value contraction FLOPs (absent from 6·N·D).
+    Causal full-seq: 2·(QK + PV)·B·T²/2·H·hd per layer; ×3 for train
+    (fwd + ~2× bwd).  Decode: one query row against the cache."""
+    from repro.launch.specs import LONG_WINDOW, SHAPES
+
+    if cfg.family in ("ssm", "lcsm"):
+        return 0.0
+    info = SHAPES[shape_name]
+    T, B, kind = info["seq_len"], info["global_batch"], info["kind"]
+    n_attn = sum(1 for st in cfg.stacks() for ld in st.pattern
+                 if ld.mixer in ("attn", "mla", "attn_cross")) and \
+        sum(st.repeat * sum(1 for ld in st.pattern
+                            if ld.mixer in ("attn", "mla", "attn_cross"))
+            for st in cfg.stacks())
+    hd = (cfg.head_dim + cfg.rope_dim) if cfg.use_mla else cfg.head_dim
+    H = cfg.n_heads
+    if kind == "train":
+        return 3.0 * n_attn * 2 * B * T * T * H * hd  # ≈ (QK+PV)·T²/2·2 ·3
+    if kind == "prefill":
+        return n_attn * 2 * B * T * T * H * hd
+    S_ctx = min(T, LONG_WINDOW) if (B == 1 and cfg.long_ctx_mode == "window") else T
+    return n_attn * 4.0 * B * S_ctx * H * hd
+
+
+def analytic_flops(cfg, shape_name: str) -> float:
+    """Lower-bound analytic FLOPs for the whole program — used alongside
+    HLO flops because XLA's cost_analysis counts while-loop bodies ONCE
+    (scan over layers / microbatches under-reports by the trip count)."""
+    return model_flops_for(cfg, shape_name) + attn_flops_for(cfg, shape_name)

@@ -1,0 +1,126 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (arch × input-shape) pair: build the step program, pjit it onto
+the production mesh, ``.lower().compile()``, print memory/cost analysis and
+write the roofline record to experiments/dryrun/.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch hyena --shape decode_32k --multi-pod
+
+The 16×16 single-pod mesh produces the roofline table; the 2×16×16
+multi-pod run proves the 'pod' axis shards (gradient all-reduce crosses
+pods; everything else stays intra-pod).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch.analysis import analytic_flops, analyze, model_flops_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, Skip, build_case, build_gray_case
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_case(case, mesh, mesh_name: str, cfg, shape_key: str, out_dir: str,
+             quiet: bool = False):
+    t0 = time.perf_counter()
+    jitted = jax.jit(case.step_fn, in_shardings=case.in_shardings,
+                     out_shardings=case.out_shardings,
+                     donate_argnums=case.donate)
+    with mesh:
+        lowered = jitted.lower(*case.args)
+        compiled = lowered.compile()
+    t1 = time.perf_counter()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    chips = mesh.devices.size
+    rf = analyze(case.arch, case.shape, mesh_name, chips, compiled,
+                 model_flops=model_flops_for(cfg, shape_key),
+                 analytic=analytic_flops(cfg, shape_key), note=case.note)
+    rec = rf.to_dict()
+    rec["compile_s"] = t1 - t0
+    rec["memory_analysis"] = {
+        k: float(getattr(ma, k, 0) or 0)
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes")
+    } if ma else {}
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{case.arch}__{case.shape}__{mesh_name}.json".replace("/", "_")
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    if not quiet:
+        gib = rec["memory_analysis"].get("argument_size_in_bytes", 0) / 2**30
+        tmp = rec["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30
+        print(f"  OK   {case.arch:28s} {case.shape:22s} {mesh_name:9s} "
+              f"compile {rec['compile_s']:6.1f}s  args {gib:7.2f} GiB/chip  "
+              f"temp {tmp:6.2f} GiB  flops/chip {rf.hlo_flops:.3e}  "
+              f"bottleneck {rf.bottleneck}"
+              + (f"  [{case.note}]" if case.note else ""))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="'all', 'assigned', or comma-separated arch names")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="also run the 2x16x16 multi-pod mesh")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--gray-tiles", default="",
+                    help="comma-sep tile sides to lower for LCSM decode shapes")
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    args = ap.parse_args()
+
+    if args.arch in ("all", "assigned"):
+        archs = list(ASSIGNED) + (["hyena"] if args.arch == "all" else [])
+    else:
+        archs = args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(("pod16x16", False))
+    if args.multi_pod or args.multi_pod_only:
+        meshes.append(("pod2x16x16", True))
+
+    n_ok = n_skip = n_fail = 0
+    for mesh_name, mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        print(f"== mesh {mesh_name}: {mesh.devices.size} chips {dict(mesh.shape)}")
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape in shapes:
+                try:
+                    case = build_case(cfg, shape, mesh)
+                    if isinstance(case, Skip):
+                        print(f"  SKIP {arch:28s} {shape:22s} {mesh_name:9s} {case.reason}")
+                        n_skip += 1
+                        continue
+                    run_case(case, mesh, mesh_name, cfg, shape, args.out)
+                    n_ok += 1
+                    if (cfg.family == "lcsm" and shape in ("decode_32k", "long_500k")
+                            and args.gray_tiles):
+                        for u in args.gray_tiles.split(","):
+                            gc = build_gray_case(cfg, shape, mesh, int(u))
+                            run_case(gc, mesh, mesh_name, cfg, shape, args.out)
+                            n_ok += 1
+                except Exception:
+                    n_fail += 1
+                    print(f"  FAIL {arch:28s} {shape:22s} {mesh_name}")
+                    traceback.print_exc(limit=8)
+    print(f"\n== dry-run summary: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,264 @@
+"""Flash-Inference decode as pure, mesh-lowerable step functions.
+
+repro.core.engine.FlashEngine is the host-driving implementation (it owns
+the schedule and per-tile-size jits).  For the multi-pod dry-run we need the
+same two computations as *pure functions of (buffers, position)* so pjit can
+lower them with ShapeDtypeStructs and explicit shardings:
+
+  * ``red_step``   — Algorithm 2 lines 6–8 + sampling: the per-token
+    sequential critical path (runs every token).
+  * ``gray_step_U``— Algorithm 3 lines 10–12 for one static tile side U:
+    the across-layer-batched τ call (amortized O(log²L)/token).
+
+Buffer layout (mesh-native, beyond the engine's packed channels): every
+Hyena stream lives in its own (B, L, D) plane of ONE stacked tensor
+
+    streams: (5·n_ops + 1, B, L, D)   planes per op k:
+        5k+0 v_raw | 5k+1 x1_raw | 5k+2 x2_raw | 5k+3 u | 5k+4 v1
+    plane 5·n_ops: final operator output z
+    b:       (2·n_ops, B, L, D)       mixer accumulators (level order)
+    rho:     (2·n_ops, L, D), rho0: (2·n_ops, D)
+
+Rationale: the engine's packed layout (concat'd channel groups of widths
+4D/3D/D) forces channel slices that are NOT aligned to model-axis shard
+boundaries — GSPMD inserts collective-permutes on every level (measured
+5.4 GB/step).  With uniform D-wide planes, every slice is shard-aligned,
+τ is channel-separable, and the whole decode step runs collective-free
+except the final logits reduction.
+
+Sharding: planes replicated on axis 0; batch→(pod,data); D→model.  For
+long_500k (B = 1), D takes BOTH axes and L stays replicated — slicing a
+traced position from an L-sharded buffer all-gathers it (measured 10 GB);
+channel sharding keeps every read local.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import tau as tau_mod
+from repro.models import components as C
+from repro.models.hyena import HyenaLCSM, compose_filters, materialize_filters
+
+_F32 = jnp.float32
+
+
+def n_streams(cfg: ModelConfig) -> int:
+    n_ops = cfg.n_layers // (cfg.hyena_order - 1)
+    return 5 * n_ops + 1
+
+
+def buffer_shapes(cfg: ModelConfig, batch: int, Lbuf: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for {streams, b, rho, rho0}."""
+    n_ops = cfg.n_layers // (cfg.hyena_order - 1)
+    D = cfg.d_model
+    sds = jax.ShapeDtypeStruct
+    return {
+        "streams": sds((n_streams(cfg), batch, Lbuf, D), dtype),
+        "b": sds((2 * n_ops, batch, Lbuf, D), _F32),
+        "rho": sds((2 * n_ops, Lbuf, D), _F32),
+        "rho0": sds((2 * n_ops, D), _F32),
+    }
+
+
+def materialize_buffers(cfg: ModelConfig, params, batch: int, Lbuf: int,
+                        dtype=jnp.float32):
+    """Concrete zero buffers + real (composed) filters — host-scale tests."""
+    model = HyenaLCSM(cfg)
+    shapes = buffer_shapes(cfg, batch, Lbuf, dtype)
+    rho = jnp.stack(model.filters(params, Lbuf))  # (2n_ops, Lbuf, D)
+    return {
+        "streams": jnp.zeros(shapes["streams"].shape, dtype),
+        "b": jnp.zeros(shapes["b"].shape, _F32),
+        "rho": rho,
+        "rho0": rho[:, 0],
+    }
+
+
+def _plane(streams, idx: int, pos, T: int):
+    """(B, T, D) window of plane ``idx`` ending at pos+T-1 (static idx,
+    traced pos)."""
+    _, B, _, D = streams.shape
+    return jax.lax.dynamic_slice(
+        streams, (idx, 0, pos, 0), (1, B, T, D))[0]
+
+
+def _write(streams, idx: int, pos, val):
+    """Write (B, T, D) into plane idx at time pos."""
+    return jax.lax.dynamic_update_slice(
+        streams, val[None].astype(streams.dtype), (idx, 0, pos, 0))
+
+
+def seed_first_token(cfg: ModelConfig, params, bufs, tok0: jnp.ndarray,
+                     pos: int = 0):
+    """Write the first token's streams at ``pos`` (host-scale tests)."""
+    model = HyenaLCSM(cfg)
+    e = params["emb"][tok0]  # (B, D)
+    op0 = params["ops"][0]
+    z = C.dense(C.rms_norm(e, op0["norm1"]), op0["in_proj"]["w"])  # (B, 3D)
+    v, x1, x2 = jnp.split(z, 3, axis=-1)
+    s = bufs["streams"]
+    for i, val in enumerate((v, x1, x2, e)):
+        s = _write(s, i, pos, val[:, None])
+    return dict(bufs, streams=s)
+
+
+def make_red_step(cfg: ModelConfig):
+    """red_step(params, streams, b, pos, rho0) -> (streams, b, token).
+
+    One full serve step: finalize position ``pos`` at every level (red
+    cells + blocks, sequential across ops by data dependency), greedy-
+    sample, and write the next token's operator-0 streams at pos+1.
+    ``b`` is returned unchanged (red cells read it; accumulation into b is
+    the gray steps' job) — pos must be >= ctx_window (true for the decode
+    shapes, which resume from a long prefix).
+    """
+    model = HyenaLCSM(cfg)
+    D = cfg.d_model
+    w = model.ctx_window
+    n_ops = model.n_ops
+
+    def shortconv_at(streams, idx, pos, taps):
+        win = _plane(streams, idx, pos - w, w + 1)  # (B, w+1, D)
+        return C.causal_shortconv_from_window(win, taps, 1)  # (B, 1, D)
+
+    def red_step(params, streams, b, pos, rho0):
+        B = streams.shape[1]
+        z = None
+        for k in range(n_ops):
+            op = params["ops"][k]
+            # level 2k: b1 red cell + gate with shortconv(x1)
+            vp = _plane(streams, 5 * k + 0, pos, 1)
+            b1 = jax.lax.dynamic_slice(b, (2 * k, 0, pos, 0), (1, B, 1, D))[0]
+            b1 = b1 + vp.astype(_F32) * rho0[2 * k]
+            x1 = shortconv_at(streams, 5 * k + 1, pos, op["short_w"][:, D:2 * D])
+            v1 = (x1 * b1.astype(x1.dtype))
+            streams = _write(streams, 5 * k + 4, pos, v1)
+            # level 2k+1: b2 red cell + gate with shortconv(x2), finish op
+            b2 = jax.lax.dynamic_slice(b, (2 * k + 1, 0, pos, 0), (1, B, 1, D))[0]
+            b2 = b2 + v1.astype(_F32) * rho0[2 * k + 1]
+            x2 = shortconv_at(streams, 5 * k + 2, pos, op["short_w"][:, 2 * D:3 * D])
+            u = _plane(streams, 5 * k + 3, pos, 1)
+            y = u + C.dense(x2 * b2.astype(x2.dtype), op["out_proj"]["w"])
+            z = y + C.swiglu(op["mlp"], C.rms_norm(y, op["norm2"]))
+            if k + 1 < n_ops:
+                nxt = params["ops"][k + 1]
+                zp = C.dense(C.rms_norm(z, nxt["norm1"]), nxt["in_proj"]["w"])
+                v_, x1_, x2_ = jnp.split(zp, 3, axis=-1)
+                for off, val in ((0, v_), (1, x1_), (2, x2_), (3, z)):
+                    streams = _write(streams, 5 * (k + 1) + off, pos, val)
+            else:
+                streams = _write(streams, 5 * n_ops, pos, z)
+        # sample next token, write operator-0 streams at pos+1
+        logits = model.logits(params, z[:, 0])
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        e = params["emb"][token]
+        op0 = params["ops"][0]
+        zp = C.dense(C.rms_norm(e, op0["norm1"]), op0["in_proj"]["w"])
+        v_, x1_, x2_ = jnp.split(zp, 3, axis=-1)
+        for off, val in ((0, v_), (1, x1_), (2, x2_), (3, e)):
+            streams = _write(streams, off, pos + 1, val[:, None])
+        return streams, b, token
+
+    return red_step
+
+
+def make_gray_step(cfg: ModelConfig, U: int, *, dp=None, mesh=None,
+                   shard_seq: bool = False, seq_level_min: int = 2048):
+    """gray_step(streams, b, pos, rho) -> b.
+
+    Accounts the side-U tile at step ``pos``: contribution of the conv
+    streams at [pos-U+1, pos] to b at [pos+1, pos+U] — ALL 2·n_ops levels
+    in one batched τ (Algorithm 3).  FFT path = order-2U circular conv
+    (Appendix C, filter DFTs implicit).
+
+    Parallelization policy per the paper:
+      * U < seq_level_min — levels batched (saturate bandwidth, Alg. 3);
+      * U ≥ seq_level_min — levels sequential (Appendix E: O(L·D) extra
+        memory instead of O(M·L·D), no real time cost).
+
+    Under shard_map each chip convolves only its (batch, channel) shard —
+    τ is channel-separable so gray tiles are collective-free.  (GSPMD
+    alone replicates FFT operands: 27 GiB/chip temp measured.)
+    """
+    model = HyenaLCSM(cfg)
+    D = cfg.d_model
+    n_ops = model.n_ops
+    # conv-input plane per level: 2k -> v of op k, 2k+1 -> v1 of op k.
+    plane_idx = []
+    for k in range(n_ops):
+        plane_idx += [5 * k + 0, 5 * k + 4]
+    plane_idx = jnp.asarray(plane_idx)
+
+    def tau_all_levels(y, r):
+        if U <= 16:
+            return tau_mod.tau_direct(y, r)
+        if U >= seq_level_min:
+            return jax.lax.map(
+                lambda xs: tau_mod.tau_fft(xs[0][None], rho2u=xs[1][None])[0],
+                (y, r[:, 0]))
+        return tau_mod.tau_fft(y, rho2u=r)
+
+    def gray_step(streams, b, pos, rho):
+        B = streams.shape[1]
+        seg = jax.lax.dynamic_slice(
+            streams, (0, 0, pos - U + 1, 0),
+            (streams.shape[0], B, U, D))
+        ins = jnp.take(seg, plane_idx, axis=0).astype(_F32)  # (2n_ops,B,U,D)
+        rho2u = rho[:, None, : 2 * U]  # (2n_ops, 1, 2U, D)
+
+        if mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+
+            if shard_seq:
+                ispec = P(None, None, None, ("data", "model"))
+                rspec = P(None, None, None, ("data", "model"))
+            else:
+                ispec = P(None, dp, None, "model")
+                rspec = P(None, None, None, "model")
+            out = shard_map(tau_all_levels, mesh=mesh,
+                            in_specs=(ispec, rspec), out_specs=ispec,
+                            check_rep=False)(ins, rho2u)
+        else:
+            out = tau_all_levels(ins, rho2u)
+
+        cur = jax.lax.dynamic_slice(b, (0, 0, pos + 1, 0),
+                                    (b.shape[0], B, U, D))
+        return jax.lax.dynamic_update_slice(
+            b, cur + out.astype(_F32), (0, 0, pos + 1, 0))
+
+    return gray_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Static-FFT prompt ingestion (train-time path) — lowers prefill_32k
+    for LCSM archs: tokens (B, P) -> logits (B, P, V)."""
+    model = HyenaLCSM(cfg)
+
+    def prefill(params, tokens):
+        return model.forward_tokens(params, tokens)
+
+    return prefill
+
+
+def compact_buffers(bufs: dict, keep_from: int) -> dict:
+    """Appendix D: once generation passes position ``keep_from`` (= L/2),
+    no tile ever reads positions < keep_from again (proven in
+    tests/test_system.py::test_half_activation_memory_appendix_d), so the
+    buffers can be shifted down in place — halving the live activation
+    footprint.  Positions map p → p - keep_from; filter LAGS are shift-
+    invariant (contribution of a_i to b_t depends only on t - i), so the
+    same red/gray step programs continue unchanged on the compacted
+    buffers.  rho needs no shift (it is indexed by lag, not position).
+    """
+    def shift(x):
+        L = x.shape[2]
+        seg = jax.lax.dynamic_slice_in_dim(x, keep_from, L - keep_from, axis=2)
+        return jnp.pad(seg, ((0, 0),) * 2 + ((0, keep_from),) + ((0, 0),))
+
+    return dict(bufs, streams=shift(bufs["streams"]), b=shift(bufs["b"]))

@@ -1,0 +1,31 @@
+"""Production meshes (TPU v5e numbers; see DESIGN §6).
+
+Single pod: (data=16, model=16) = 256 chips.
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips — the 'pod' axis is the
+slow inter-pod (DCN/ICI-bridge) dimension; only data parallelism (gradient
+all-reduce) crosses it.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip), used by the roofline report.
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n_devices: int | None = None):
+    """Tiny mesh over the actually-present devices (CPU tests)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,186 @@
+"""Pytree → PartitionSpec rules for the production mesh (DESIGN §6).
+
+Weights are 2-D sharded (FSDP×TP): d_in→data, d_out→model (or transposed),
+experts→model, vocab unsharded (51865 isn't 16-divisible), norms/bias
+replicated.  Stacked layer axes (scan repeat dims) are unsharded.
+
+Rules are *divisibility-guarded*: an axis is only assigned if the mesh axis
+size divides the dim, so the same rule table serves the 256-chip pod, the
+512-chip multi-pod and the 1-device CPU test mesh.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        s = 1
+        for n in name:
+            s *= _axis_size(mesh, n)
+        return s
+    return mesh.shape[name] if name in mesh.shape else 0
+
+
+def _guard(mesh: Mesh, spec: tuple, shape: tuple) -> P:
+    """Drop axes whose size doesn't divide the dim (or don't exist)."""
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        size = _axis_size(mesh, ax)
+        fixed.append(ax if size and dim % size == 0 else None)
+    return P(*fixed)
+
+
+def data_axes(mesh: Mesh):
+    """The (super-)axis batch shards over: ('pod','data') when multi-pod."""
+    return ("pod", "data") if "pod" in mesh.shape else "data"
+
+
+# ------------------------------------------------------------------ params
+# (regex on the pytree path, base spec applied to the TRAILING dims).
+_RULES: list[tuple[str, tuple]] = [
+    (r"\['(emb|unemb)'\]$",                      (None, "model")),
+    (r"\['router'\]\['w'\]$",                    (None, None)),
+    # MoE experts: (E, d_in, d_ff) / (E, d_ff, d_out)
+    (r"\['w1'\]$|\['w3'\]$",                     ("model", "data", None)),
+    (r"\['w2'\]$",                               ("model", None, "data")),
+    # attention / projections (these fire before the generic w1/w2 above
+    # because the list is scanned in order and these paths are longer).
+    (r"\['(wq|wk|wv|wq_a|wq_b|wkv_a|wkv_b|in_proj|x_proj)'\]\['w'\]$", ("data", "model")),
+    (r"\['(wo|out_proj)'\]\['w'\]$",             ("model", "data")),
+    (r"\['dt_proj'\]\['w'\]$",                   (None, "model")),
+    (r"\['(fc1|fc2|fc3)'\]\['w'\]$",             ("data", "model")),
+    (r"\['proj'\]\['w'\]$",                      ("data", "model")),
+    # dense swiglu inside 'mlp'/'shared' dicts: 2-D (d, ff) / (ff, d)
+    (r"\['(mlp|shared)'\]\['(w1|w3)'\]\['w'\]$", ("data", "model")),
+    (r"\['(mlp|shared)'\]\['w2'\]\['w'\]$",      ("model", "data")),
+    # mamba
+    (r"\['conv_w'\]$",                           (None, "model")),
+    (r"\['conv_b'\]$",                           ("model",)),
+    (r"\['A_log'\]$",                            ("model", None)),
+    (r"\['D'\]$",                                ("model",)),
+    # hyena implicit filters
+    (r"\['short_w'\]$",                          (None, "model")),
+    (r"\['alphas'\]$",                           (None, "model")),
+]
+
+
+def param_spec_for_path(path_str: str, ndim: int, shape: tuple, mesh: Mesh) -> P:
+    base: tuple | None = None
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            base = spec
+            break
+    if base is None:
+        return P()  # norms, biases, scalars: replicated
+    if len(base) > ndim:  # e.g. 1-D bias matched a 2-D rule — replicate
+        return P()
+    # left-pad with None for stacked leading axes (scan repeat dims)
+    full = (None,) * (ndim - len(base)) + base
+    return _guard(mesh, full, shape)
+
+
+def param_specs(params: Any, mesh: Mesh) -> Any:
+    def spec(path, leaf):
+        ps = param_spec_for_path(jax.tree_util.keystr(path), leaf.ndim,
+                                 leaf.shape, mesh)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+# ----------------------------------------------------------------- batches
+def batch_specs(batch: Any, mesh: Mesh) -> Any:
+    """Shard the batch (leading) axis over (pod, data); pos3 has its batch
+    axis second."""
+    dp = data_axes(mesh)
+
+    def spec(path, leaf):
+        key = jax.tree_util.keystr(path)
+        if "pos3" in key:
+            ps = _guard(mesh, (None, dp, None), leaf.shape)
+        else:
+            ps = _guard(mesh, (dp,) + (None,) * (leaf.ndim - 1), leaf.shape)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def token_specs(tok: Any, mesh: Mesh) -> Any:
+    return batch_specs(tok, mesh)
+
+
+# ------------------------------------------------------------------ caches
+def cache_specs(caches: Any, mesh: Mesh, *, shard_seq: bool = False) -> Any:
+    """Decode caches. Leaves are (repeat, B, ...).
+
+    KV-like caches shard batch→(pod,data) AND sequence→model: the S axis
+    carries the bulk of decode state, and sequence-parallel attention only
+    needs tiny softmax-stat / output all-reduces (vs. all-gathering the
+    cache if S were replicated over model).  kv_heads (2–8 < 16) stay
+    replicated.  ``shard_seq`` (long_500k, B=1): the batch axis can't
+    shard, so S takes BOTH axes (data, model).
+    """
+    dp = data_axes(mesh)
+    seq_ax = ("data", "model") if shard_seq else "model"
+    b_ax = None if shard_seq else dp
+
+    def spec(path, leaf):
+        key = jax.tree_util.keystr(path)
+        nd = leaf.ndim
+        if nd <= 1:
+            ps = P()
+        elif "pos" in key and nd == 2:
+            ps = _guard(mesh, (None, b_ax), leaf.shape)
+        elif "ssm" in key and nd >= 3:
+            # (repeat, B, d_inner, N): batch→dp, channels→model
+            ps = _guard(mesh, (None, b_ax, "model") + (None,) * (nd - 3), leaf.shape)
+        elif "conv" in key and nd >= 3:
+            ps = _guard(mesh, (None, b_ax, None, "model")[: nd], leaf.shape)
+        elif nd >= 3:
+            # KV / MLA / cross caches: (repeat, B, S, ...) — S→model
+            ps = _guard(mesh, (None, b_ax, seq_ax) + (None,) * (nd - 3), leaf.shape)
+        else:
+            ps = _guard(mesh, (None, b_ax) + (None,) * (nd - 2), leaf.shape)
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+# ------------------------------------------------------------- LCSM buffers
+def lcsm_buffer_specs(bufs: Any, mesh: Mesh, *, shard_seq: bool) -> Any:
+    """Flash-Inference plane-stacked buffers (see launch/lcsm_steps.py):
+      streams/b : (planes, B, Lbuf, D)  — batch→(pod,data), D→model
+      rho       : (levels, Lbuf, D)     — D→model
+      rho0      : (levels, D)
+    ``shard_seq`` (long_500k, B=1): D takes BOTH axes, L replicated —
+    slicing a traced position from an L-sharded buffer all-gathers it."""
+    dp = data_axes(mesh)
+    ch = ("data", "model") if shard_seq else "model"
+
+    def spec(path, leaf):
+        nd = leaf.ndim
+        if nd == 4:  # (planes, B, L, D)
+            ps = _guard(mesh, (None, None if shard_seq else dp, None, ch),
+                        leaf.shape)
+        elif nd == 3:  # rho (levels, L, D)
+            ps = _guard(mesh, (None, None, ch), leaf.shape)
+        elif nd == 2:  # rho0 (levels, D)
+            ps = _guard(mesh, (None, ch), leaf.shape)
+        else:
+            ps = P()
+        return NamedSharding(mesh, ps)
+
+    return jax.tree_util.tree_map_with_path(spec, bufs)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,283 @@
+"""Dry-run case builder: (arch × input-shape) → step fn + ShapeDtypeStruct
+inputs + shardings.
+
+Every case captures one jit-able program:
+  train_4k    → train_step (fwd + bwd + AdamW)
+  prefill_32k → prefill (full-seq forward, emits decode caches)
+  decode_32k  → serve_step (ONE token against a 32k cache)
+  long_500k   → serve_step with a 524288-token context — sub-quadratic
+                paths only: SSM/hybrid native state decode; dense/MoE/VLM
+                run the sliding-window(8192) variant; LCSM runs the Flash
+                Inference red step; whisper skipped (enc-dec, 448-token
+                decoder by construction).
+
+No real arrays are built for the full configs: params come from
+``jax.eval_shape(model.init, ...)``, inputs from ShapeDtypeStructs.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import make_batch_specs
+from repro.launch import lcsm_steps, sharding as sh
+from repro.models.lm import LM
+from repro.optim import AdamWConfig, adamw_init
+from repro.train_loop import make_train_step
+
+SHAPES: dict[str, dict] = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+LONG_WINDOW = 8192  # sliding-window size for dense archs at 500k (DESIGN §5)
+
+
+@dataclass
+class Case:
+    arch: str
+    shape: str
+    step_fn: Callable
+    args: tuple                 # ShapeDtypeStructs (positional)
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+    note: str = ""
+
+
+@dataclass
+class Skip:
+    arch: str
+    shape: str
+    reason: str
+
+
+def _params_sds(model: LM):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def _to_inference_dtype(sds_tree):
+    """Serving runs bf16 weights (training keeps f32 masters)."""
+    def cast(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        return s
+    return jax.tree.map(cast, sds_tree)
+
+
+def build_case(cfg: ModelConfig, shape_name: str, mesh) -> Case | Skip:
+    info = SHAPES[shape_name]
+    S, B, kind = info["seq_len"], info["global_batch"], info["kind"]
+    dp = sh.data_axes(mesh)
+    n_dp = 1
+    for ax in (dp if isinstance(dp, tuple) else (dp,)):
+        n_dp *= mesh.shape[ax]
+
+    # ----------------------------------------------------------- skip rules
+    if shape_name == "long_500k":
+        if cfg.long_ctx_mode == "skip":
+            return Skip(cfg.name, shape_name,
+                        "enc-dec decoder is 448 tokens by construction "
+                        "(noted in DESIGN §5)")
+    if B % n_dp and B > 1:
+        return Skip(cfg.name, shape_name, f"batch {B} not divisible by data axis {n_dp}")
+
+    if cfg.family == "lcsm":
+        return _lcsm_case(cfg, shape_name, mesh)
+
+    model = LM(cfg)
+    params = _params_sds(model)
+    pspecs = sh.param_specs(params, mesh)
+    n_vis = min(1024, S // 4) if cfg.m_rope else 0
+
+    if kind == "train":
+        opt_cfg = AdamWConfig()
+        base_step = make_train_step(model, opt_cfg)
+        from jax.sharding import PartitionSpec as P
+        from repro.models.lm import activation_sharding
+
+        def step(params, opt_state, batch, _dp=dp, _mesh=mesh):
+            with activation_sharding(P(_dp), mesh=_mesh):
+                return base_step(params, opt_state, batch)
+        opt_sds = jax.eval_shape(adamw_init, params)
+        # OptState(m, v, step): m/v shard like params, step replicated.
+        from repro.optim.adamw import OptState
+        opt_specs = OptState(m=pspecs, v=pspecs, step=sh.replicated(mesh))
+        batch = make_batch_specs(cfg, B, S - n_vis if cfg.m_rope else S, n_vis=n_vis)
+        bspecs = sh.batch_specs(batch, mesh)
+        metrics_spec = {"lr": sh.replicated(mesh), "grad_norm": sh.replicated(mesh),
+                        "loss": sh.replicated(mesh)}
+        return Case(cfg.name, shape_name, step,
+                    (params, opt_sds, batch),
+                    (pspecs, opt_specs, bspecs),
+                    (pspecs, opt_specs, metrics_spec),
+                    donate=(0, 1),
+                    note=f"n_vis={n_vis}" if n_vis else "")
+
+    if kind == "prefill":
+        params = _to_inference_dtype(params)
+        pspecs = sh.param_specs(params, mesh)
+
+        from jax.sharding import PartitionSpec as P
+        from repro.models.lm import activation_sharding
+
+        def step(params, batch, _dp=dp, _mesh=mesh):
+            with activation_sharding(P(_dp), mesh=_mesh):
+                return model.prefill(params, batch, S)
+        batch = make_batch_specs(cfg, B, S - n_vis if cfg.m_rope else S, n_vis=n_vis)
+        bspecs = sh.batch_specs(batch, mesh)
+        caches_sds = jax.eval_shape(
+            lambda: model.init_caches(B, S, enc_S=cfg.enc_positions))
+        cspecs = sh.cache_specs(caches_sds, mesh)
+        logit_spec = sh.batch_specs(
+            jax.ShapeDtypeStruct((B, cfg.vocab), jnp.float32), mesh)
+        return Case(cfg.name, shape_name, step, (params, batch),
+                    (pspecs, bspecs), (logit_spec, cspecs),
+                    note=f"n_vis={n_vis}" if n_vis else "")
+
+    # ------------------------------------------------------------- decode
+    window = None
+    note = ""
+    if shape_name == "long_500k":
+        if cfg.long_ctx_mode == "window":
+            window = LONG_WINDOW
+            note = f"sliding-window({LONG_WINDOW}) variant (full attention is quadratic)"
+        else:
+            note = "native state-space decode (O(1)/token)"
+    shard_seq = B == 1
+    params = _to_inference_dtype(params)
+    caches_sds = jax.eval_shape(
+        lambda: model.init_caches(B, S, window=window, enc_S=cfg.enc_positions))
+    cspecs = sh.cache_specs(caches_sds, mesh, shard_seq=shard_seq)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tspec = sh.batch_specs(tok, mesh)
+    pos3 = jax.ShapeDtypeStruct((3, B, 1), jnp.int32) if cfg.m_rope else None
+
+    if cfg.m_rope:
+        def step(params, token, caches, pos3):
+            return model.decode_step(params, token, caches,
+                                     window=window, pos3=pos3)
+        args = (params, tok, caches_sds, pos3)
+        in_sh = (pspecs, tspec, cspecs, sh.batch_specs(pos3, mesh))
+    else:
+        def step(params, token, caches):
+            return model.decode_step(params, token, caches, window=window)
+        args = (params, tok, caches_sds)
+        in_sh = (pspecs, tspec, cspecs)
+    logit_spec = sh.batch_specs(
+        jax.ShapeDtypeStruct((B, cfg.vocab), jnp.float32), mesh)
+    return Case(cfg.name, shape_name, step, args, in_sh,
+                (logit_spec, cspecs), donate=(2,), note=note)
+
+
+# ------------------------------------------------------------------- LCSM
+def _lcsm_case(cfg: ModelConfig, shape_name: str, mesh) -> Case | Skip:
+    from repro.models.hyena import HyenaLCSM
+
+    info = SHAPES[shape_name]
+    S, B, kind = info["seq_len"], info["global_batch"], info["kind"]
+    model = HyenaLCSM(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = sh.param_specs(params, mesh)
+
+    if kind == "train":
+        lm = LM(cfg)
+        opt_cfg = AdamWConfig()
+        base_step = make_train_step(lm, opt_cfg)
+        from jax.sharding import PartitionSpec as P
+        from repro.models.lm import activation_sharding
+        dp = sh.data_axes(mesh)
+        note = ""
+        if cfg.d_model < 2048:
+            # §Perf P12: at hyena scale (46M params, d=768) 16-way TP costs
+            # a 12.6 GB/step activation all-reduce; pure DP over
+            # (data×model) replicates the small weights and reduces only
+            # ~0.2 GB of gradients.  (*-hyena twins with big d keep TP.)
+            dp = ("data", "model")
+            params = jax.tree.map(
+                lambda s: s, params)  # unchanged SDS; specs replicated below
+            pspecs = jax.tree.map(lambda _: sh.replicated(mesh), params)
+            note = "pure-DP (d_model too small for TP)"
+
+        def step(params, opt_state, batch, _dp=dp, _mesh=mesh):
+            with activation_sharding(P(_dp), mesh=_mesh):
+                return base_step(params, opt_state, batch)
+        opt_sds = jax.eval_shape(adamw_init, params)
+        from repro.optim.adamw import OptState
+        opt_specs = OptState(m=pspecs, v=pspecs, step=sh.replicated(mesh))
+        batch = make_batch_specs(cfg, B, S)
+        if note:  # pure-DP: batch over (data, model)
+            from jax.sharding import NamedSharding
+            bspecs = jax.tree.map(
+                lambda s_: NamedSharding(mesh, P(dp) if s_.shape[0] % 256 == 0
+                                         else P()), batch)
+        else:
+            bspecs = sh.batch_specs(batch, mesh)
+        metrics_spec = {"lr": sh.replicated(mesh), "grad_norm": sh.replicated(mesh),
+                        "loss": sh.replicated(mesh)}
+        return Case(cfg.name, shape_name, step, (params, opt_sds, batch),
+                    (pspecs, opt_specs, bspecs),
+                    (pspecs, opt_specs, metrics_spec), donate=(0, 1),
+                    note=note)
+
+    if kind == "prefill":
+        base = lcsm_steps.make_prefill_step(cfg)
+        from jax.sharding import PartitionSpec as P
+        from repro.models.lm import activation_sharding
+        dp = sh.data_axes(mesh)
+
+        def step(params, tokens, _dp=dp, _mesh=mesh):
+            with activation_sharding(P(_dp), mesh=_mesh):
+                return base(params, tokens)
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        tspec = sh.batch_specs(tok, mesh)
+        out_spec = sh.batch_specs(
+            jax.ShapeDtypeStruct((B, S, cfg.vocab), jnp.float32), mesh)
+        return Case(cfg.name, shape_name, step, (params, tok),
+                    (pspecs, tspec), out_spec,
+                    note="static FFT path (Massaroli Lemma 2.1)")
+
+    # decode: the Flash Inference red step (per-token critical path).
+    shard_seq = B == 1
+    params = _to_inference_dtype(params)
+    pspecs = sh.param_specs(params, mesh)
+    bufs = lcsm_steps.buffer_shapes(cfg, B, S)
+    bspecs = sh.lcsm_buffer_specs(bufs, mesh, shard_seq=shard_seq)
+    red = lcsm_steps.make_red_step(cfg)
+
+    def step(params, streams, b, pos, rho0):
+        return red(params, streams, b, pos, rho0)
+
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (params, bufs["streams"], bufs["b"], pos, bufs["rho0"])
+    in_sh = (pspecs, bspecs["streams"], bspecs["b"], sh.replicated(mesh),
+             bspecs["rho0"])
+    tok_spec = sh.batch_specs(jax.ShapeDtypeStruct((B,), jnp.int32), mesh)
+    out_sh = (bspecs["streams"], bspecs["b"], tok_spec)
+    return Case(cfg.name, shape_name, step, args, in_sh, out_sh,
+                donate=(1, 2),
+                note="Flash Inference red step (gray tiles lowered separately)")
+
+
+def build_gray_case(cfg: ModelConfig, shape_name: str, mesh, U: int) -> Case:
+    """The side-U gray-tile program for an LCSM arch (Algorithm 3)."""
+    info = SHAPES[shape_name]
+    S, B = info["seq_len"], info["global_batch"]
+    bufs = lcsm_steps.buffer_shapes(cfg, B, S)
+    bspecs = sh.lcsm_buffer_specs(bufs, mesh, shard_seq=(B == 1))
+    gray = lcsm_steps.make_gray_step(cfg, U, dp=sh.data_axes(mesh), mesh=mesh,
+                                     shard_seq=(B == 1))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return Case(cfg.name, f"{shape_name}-gray{U}", gray,
+                (bufs["streams"], bufs["b"], pos, bufs["rho"]),
+                (bspecs["streams"], bspecs["b"], sh.replicated(mesh),
+                 bspecs["rho"]),
+                bspecs["b"], donate=(1,), note=f"gray tile U={U}")

@@ -1,0 +1,90 @@
+"""Multi-pod training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --steps 100 --global-batch 8 --seq-len 256 [--production-mesh]
+
+Default: a host mesh over the actually-present devices (runs real steps).
+``--production-mesh``: the 16×16 / 2×16×16 mesh (placeholder devices — use
+only for dry-run-style verification; see repro.launch.dryrun for the
+compile-only path).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.lm import LM, activation_sharding
+from repro.optim import AdamWConfig, adamw_init
+from repro.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_host_mesh())
+    dp = sh.data_axes(mesh)
+
+    model = LM(cfg)
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(1, args.steps // 10))
+    base_step = make_train_step(model, opt_cfg)
+
+    def step_fn(params, opt_state, batch):
+        with activation_sharding(P(dp)):
+            return base_step(params, opt_state, batch)
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        pspecs = sh.param_specs(params, mesh)
+        params = jax.device_put(params, pspecs)
+        opt_state = adamw_init(params)
+        from repro.optim.adamw import OptState
+        ospecs = OptState(m=pspecs, v=pspecs, step=sh.replicated(mesh))
+
+        step = jax.jit(step_fn, in_shardings=(pspecs, ospecs, None),
+                       out_shardings=(pspecs, ospecs, None),
+                       donate_argnums=(0, 1))
+        ds = SyntheticLMDataset(cfg, global_batch=args.global_batch,
+                                seq_len=args.seq_len,
+                                n_vis=min(16, args.seq_len // 4) if cfg.m_rope else 0)
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            batch = ds.batch(i)
+            batch = jax.device_put(batch, sh.batch_specs(batch, mesh))
+            params, opt_state, metrics = step(params, opt_state, batch)
+            if i % 5 == 0 or i == args.steps - 1:
+                print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  "
+                      f"({time.perf_counter() - t0:.1f}s)")
+        if args.ckpt_dir:
+            from repro.checkpoint import save_checkpoint
+
+            save_checkpoint(args.ckpt_dir, args.steps,
+                            {"params": params, "opt": opt_state})
+            print(f"checkpoint -> {args.ckpt_dir}/step_{args.steps:08d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,448 @@
+"""Attention mixers: GQA/MHA with RoPE / M-RoPE / QKV-bias / sliding window,
+and MLA (DeepSeek multi-head latent attention).
+
+Functional style: ``init_*`` builds a params pytree, ``*_train`` runs the
+full-sequence causal form, ``*_decode`` runs one step against a cache.
+Shapes use (B, T, H, hd); GQA expands kv heads by repetition at contraction
+time (no materialized repeat for the train path — einsum grouping).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.components import init_dense
+
+_F32 = jnp.float32
+_NEG = -1e9
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=_F32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, freqs: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, T, H, hd); pos: (B, T) int32; freqs: (hd/2,)."""
+    ang = pos[..., None].astype(_F32) * freqs  # (B, T, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(_F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x: jnp.ndarray, pos3: jnp.ndarray, freqs: jnp.ndarray,
+                 sections=(16, 24, 24)) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: head_dim/2 frequency slots split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (B, T, H, hd); pos3: (3, B, T); sections sum to hd/2.
+    """
+    hd2 = x.shape[-1] // 2
+    assert sum(sections) == hd2, (sections, hd2)
+    ang_parts = []
+    lo = 0
+    for s, sec in enumerate(sections):
+        ang_parts.append(pos3[s][..., None].astype(_F32) * freqs[lo : lo + sec])
+        lo += sec
+    ang = jnp.concatenate(ang_parts, axis=-1)  # (B, T, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(_F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- masking
+def causal_mask(T: int, window: int | None = None) -> jnp.ndarray:
+    """(T, T) additive mask; sliding window keeps [t-window+1, t]."""
+    t = jnp.arange(T)
+    m = t[None, :] <= t[:, None]
+    if window is not None:
+        m &= t[None, :] > t[:, None] - window
+    return jnp.where(m, 0.0, _NEG).astype(_F32)
+
+
+def _blocks(x, nc, chunk):
+    """(B, S, Hkv, d) -> (nc, B, chunk, Hkv, d)."""
+    B = x.shape[0]
+    return x.reshape(B, nc, chunk, *x.shape[2:]).transpose(1, 0, 2, 3, 4)
+
+
+def _block_mask(ci, chunk, S, T, causal, window):
+    """(T, chunk) validity of kv block ci against end-aligned queries."""
+    kpos = ci * chunk + jnp.arange(chunk)
+    qpos = (S - T) + jnp.arange(T)
+    valid = jnp.broadcast_to(kpos[None, :] < S, (T, chunk))
+    if causal:
+        valid = valid & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        valid = valid & (kpos[None, :] > qpos[:, None] - window)
+    return valid
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_fn(n_kv: int, causal: bool, window, chunk: int, scale):
+    """Flash attention with a flash *backward*: the VJP re-runs the KV-block
+    scan, recomputing each block's probabilities from (q, k, saved row
+    logsumexp) — so neither pass ever materializes the (T, S) matrix.
+    Plain jax.grad through the forward scan saves every block's logits
+    (~O(T*S) again), which is exactly what sank the train_4k dry-run to
+    96 GiB/chip of temp.
+    """
+
+    def fwd_scan(q, k, v):
+        B, T, H, hd = q.shape
+        v_hd = v.shape[-1]
+        sc = (1.0 / math.sqrt(hd)) if scale is None else scale
+        S = k.shape[1]
+        G = H // n_kv
+        nc = -(-S // chunk)
+        if nc * chunk != S:
+            k = jnp.pad(k, ((0, 0), (0, nc * chunk - S), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, nc * chunk - S), (0, 0), (0, 0)))
+        qg = q.reshape(B, T, n_kv, G, hd)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            ci, kb, vb = xs
+            lg = jnp.einsum("btkgh,bskh->bkgts", qg, kb,
+                            preferred_element_type=_F32) * sc
+            valid = _block_mask(ci, chunk, S, T, causal, window)
+            lg = jnp.where(valid[None, None, None], lg, _NEG)
+            m_new = jnp.maximum(m, lg.max(-1))
+            p = jnp.exp(lg - m_new[..., None])
+            resc = jnp.exp(m - m_new)
+            l_new = l * resc + p.sum(-1)
+            pv = jnp.einsum("bkgts,bskh->bkgth", p.astype(vb.dtype), vb,
+                            preferred_element_type=_F32)
+            return (m_new, l_new, pv + acc * resc[..., None]), None
+
+        m0 = jnp.full((B, n_kv, G, T), _NEG, _F32)
+        l0 = jnp.zeros((B, n_kv, G, T), _F32)
+        a0 = jnp.zeros((B, n_kv, G, T, v_hd), _F32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (jnp.arange(nc), _blocks(k, nc, chunk),
+                                 _blocks(v, nc, chunk)))
+        l = jnp.maximum(l, 1e-30)
+        out = acc / l[..., None]
+        lse = m + jnp.log(l)  # (B, K, G, T) row logsumexp
+        return out, lse  # out: (B, K, G, T, v_hd)
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        out, _ = fwd_scan(q, k, v)
+        B, T, H, _ = q.shape
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, -1).astype(q.dtype)
+
+    def flash_fwd(q, k, v):
+        out, lse = fwd_scan(q, k, v)
+        B, T, H, _ = q.shape
+        o = out.transpose(0, 3, 1, 2, 4).reshape(B, T, H, -1).astype(q.dtype)
+        return o, (q, k, v, out, lse)
+
+    def flash_bwd(res, g):
+        q, k, v, out, lse = res
+        B, T, H, hd = q.shape
+        v_hd = v.shape[-1]
+        sc = (1.0 / math.sqrt(hd)) if scale is None else scale
+        S = k.shape[1]
+        G = H // n_kv
+        nc = -(-S // chunk)
+        Sp = nc * chunk
+        kp = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0))) if Sp != S else k
+        vp = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0))) if Sp != S else v
+        qg = q.reshape(B, T, n_kv, G, hd)
+        go = g.reshape(B, T, n_kv, G, v_hd).transpose(0, 2, 3, 1, 4).astype(_F32)
+        Dt = jnp.sum(go * out, axis=-1)  # (B, K, G, T) rowsum(dout*out)
+
+        def body(dq, xs):
+            ci, kb, vb = xs
+            lg = jnp.einsum("btkgh,bskh->bkgts", qg, kb,
+                            preferred_element_type=_F32) * sc
+            valid = _block_mask(ci, chunk, S, T, causal, window)
+            lg = jnp.where(valid[None, None, None], lg, _NEG)
+            p = jnp.exp(lg - lse[..., None])  # zero where masked
+            dv = jnp.einsum("bkgts,bkgtd->bskd", p.astype(go.dtype), go)
+            dp = jnp.einsum("bkgtd,bskd->bkgts", go, vb.astype(_F32))
+            ds = p * (dp - Dt[..., None]) * sc
+            dq = dq + jnp.einsum("bkgts,bskh->btkgh", ds.astype(kb.dtype), kb,
+                                 preferred_element_type=_F32)
+            dk = jnp.einsum("bkgts,btkgh->bskh", ds.astype(qg.dtype), qg,
+                            preferred_element_type=_F32)
+            return dq, (dk, dv)
+
+        dq0 = jnp.zeros((B, T, n_kv, G, hd), _F32)
+        dq, (dks, dvs) = jax.lax.scan(
+            body, dq0, (jnp.arange(nc), _blocks(kp, nc, chunk),
+                        _blocks(vp, nc, chunk)))
+        dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Sp, n_kv, hd)[:, :S]
+        dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, n_kv, v_hd)[:, :S]
+        return (dq.reshape(B, T, H, hd).astype(q.dtype), dk.astype(k.dtype),
+                dv.astype(v.dtype))
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
+
+
+def _sdpa_chunked(q, k, v, n_kv: int, *, causal: bool = True,
+                  window: int | None = None, chunk: int = 1024,
+                  scale: float | None = None):
+    """Flash-style attention (see _flash_fn). q: (B,T,H,hd);
+    k/v: (B,S,Hkv,.); queries end-aligned (query t at position S-T+t)."""
+    return _flash_fn(n_kv, causal, window, chunk, scale)(q, k, v)
+
+
+# Full-materialization is fine below this sequence length (and cheaper —
+# no rescaling passes); above it the chunked path bounds memory.
+_CHUNKED_MIN_T = 2048
+
+
+# -------------------------------------------------------------------- GQA
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S, Hkv, hd)
+    v: jnp.ndarray  # (B, S, Hkv, hd)
+    pos: jnp.ndarray  # (B,) int32 — per-slot valid length (continuous batching)
+
+
+def init_gqa(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+             *, qkv_bias: bool = False, dtype=_F32):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], d_model, n_heads * head_dim, bias=qkv_bias, dtype=dtype),
+        "wk": init_dense(ks[1], d_model, n_kv * head_dim, bias=qkv_bias, dtype=dtype),
+        "wv": init_dense(ks[2], d_model, n_kv * head_dim, bias=qkv_bias, dtype=dtype),
+        "wo": init_dense(ks[3], n_heads * head_dim, d_model, dtype=dtype),
+    }
+
+
+def _proj(p, x, H, hd):
+    y = jnp.einsum("btd,df->btf", x, p["w"], preferred_element_type=_F32)
+    if "b" in p:
+        y = y + p["b"]
+    B, T = x.shape[:2]
+    return y.reshape(B, T, H, hd).astype(x.dtype)
+
+
+def _sdpa(q, k, v, mask, n_kv: int):
+    """q: (B,T,H,hd), k/v: (B,S,Hkv,hd), mask: (T,S) or (B,T,S) additive.
+
+    k/v stay in their storage dtype (bf16 cache) — accumulation happens in
+    f32 via preferred_element_type.  Upcasting the cache itself would
+    materialize a 2× copy of the largest tensor in decode (and GSPMD then
+    reshards the copy — the all-gather this comment is guarding against).
+    """
+    B, T, H, hd = q.shape
+    G = H // n_kv
+    qg = q.reshape(B, T, n_kv, G, hd)
+    logits = jnp.einsum("btkgh,bskh->bkgts", qg, k,
+                        preferred_element_type=_F32)
+    logits = logits / math.sqrt(hd)
+    if mask is not None:
+        mb = mask if mask.ndim == 3 else mask[None]
+        logits = logits + mb[:, None, None]
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", w.astype(v.dtype), v,
+                     preferred_element_type=_F32)
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def gqa_train(p, x, *, n_heads, n_kv, head_dim, freqs, pos=None,
+              window=None, m_rope_pos=None, m_rope_sections=None):
+    """Full-sequence causal attention. x: (B, T, D) -> (B, T, D)."""
+    B, T, _ = x.shape
+    q = _proj(p["wq"], x, n_heads, head_dim)
+    k = _proj(p["wk"], x, n_kv, head_dim)
+    v = _proj(p["wv"], x, n_kv, head_dim)
+    if m_rope_pos is not None:
+        q = apply_m_rope(q, m_rope_pos, freqs, m_rope_sections)
+        k = apply_m_rope(k, m_rope_pos, freqs, m_rope_sections)
+    else:
+        pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T)) if pos is None else pos
+        q = apply_rope(q, pos, freqs)
+        k = apply_rope(k, pos, freqs)
+    if T >= _CHUNKED_MIN_T:
+        out = _sdpa_chunked(q, k, v, n_kv, causal=True, window=window)
+    else:
+        out = _sdpa(q, k, v, causal_mask(T, window), n_kv)
+    y = jnp.einsum("btf,fd->btd", out.reshape(B, T, -1), p["wo"]["w"],
+                   preferred_element_type=_F32)
+    return y.astype(x.dtype)
+
+
+def gqa_decode(p, x, cache: KVCache, *, n_heads, n_kv, head_dim, freqs,
+               window=None, m_rope_pos=None, m_rope_sections=None):
+    """One-token step. x: (B, 1, D); cache ring-buffered when window is set.
+
+    Returns (y (B,1,D), new cache).
+    """
+    B = x.shape[0]
+    S = cache.k.shape[1]
+    q = _proj(p["wq"], x, n_heads, head_dim)
+    k = _proj(p["wk"], x, n_kv, head_dim)
+    v = _proj(p["wv"], x, n_kv, head_dim)
+    pos = cache.pos[:, None]  # (B, 1) per-slot positions
+    if m_rope_pos is not None:
+        q = apply_m_rope(q, m_rope_pos, freqs, m_rope_sections)
+        k = apply_m_rope(k, m_rope_pos, freqs, m_rope_sections)
+    else:
+        q = apply_rope(q, pos, freqs)
+        k = apply_rope(k, pos, freqs)
+    # write slot (per row): plain append, or ring slot pos % S when windowed.
+    if window is None:
+        slot = jnp.minimum(cache.pos, S - 1)  # (B,)
+    else:
+        slot = cache.pos % S
+    # select-based update (not scatter): elementwise over (B, S), so GSPMD
+    # keeps it fully sharded along batch — no all-gather of the cache.
+    hit = (jnp.arange(S)[None, :] == slot[:, None])[..., None, None]  # (B,S,1,1)
+    kc = jnp.where(hit, k.astype(cache.k.dtype), cache.k)
+    vc = jnp.where(hit, v.astype(cache.v.dtype), cache.v)
+    # validity mask over cache slots, per row.
+    idx = jnp.arange(S)[None, :]
+    if window is None:
+        valid = idx <= cache.pos[:, None]
+    else:
+        # ring buffer holds the last min(pos+1, S) positions.
+        valid = idx < jnp.minimum(cache.pos + 1, S)[:, None]
+    mask = jnp.where(valid, 0.0, _NEG).astype(_F32)[:, None, :]  # (B,1,S)
+    out = _sdpa(q, kc, vc, mask, n_kv)
+    y = jnp.einsum("btf,fd->btd", out.reshape(B, 1, -1), p["wo"]["w"],
+                   preferred_element_type=_F32).astype(x.dtype)
+    return y, KVCache(kc, vc, cache.pos + 1)
+
+
+# ------------------------------------------------------------- cross-attn
+def init_cross(key, d_model: int, n_heads: int, head_dim: int, dtype=_F32):
+    return init_gqa(key, d_model, n_heads, n_heads, head_dim, dtype=dtype)
+
+
+def cross_attention(p, x, enc_kv, *, n_heads, head_dim):
+    """x: (B, T, D) queries; enc_kv: (B, S, D) encoder output (no mask)."""
+    B, T, _ = x.shape
+    q = _proj(p["wq"], x, n_heads, head_dim)
+    k = _proj(p["wk"], enc_kv, n_heads, head_dim)
+    v = _proj(p["wv"], enc_kv, n_heads, head_dim)
+    out = _sdpa(q, k, v, None, n_heads)
+    y = jnp.einsum("btf,fd->btd", out.reshape(B, T, -1), p["wo"]["w"],
+                   preferred_element_type=_F32)
+    return y.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- MLA
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray    # (B, S, kv_lora) compressed latent
+    k_rope: jnp.ndarray # (B, S, rope_dim) shared rotary key
+    pos: jnp.ndarray    # (B,) int32 per-slot valid length
+
+
+def init_mla(key, d_model: int, n_heads: int, *, q_lora: int, kv_lora: int,
+             rope_dim: int, head_dim: int, v_head_dim: int | None = None,
+             dtype=_F32):
+    """DeepSeek-V2/V3 MLA. Decode caches only (kv_lora + rope_dim) per pos."""
+    v_head_dim = head_dim if v_head_dim is None else v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": init_dense(ks[0], d_model, q_lora, dtype=dtype),
+        "wq_b": init_dense(ks[1], q_lora, n_heads * (head_dim + rope_dim), dtype=dtype),
+        "wkv_a": init_dense(ks[2], d_model, kv_lora + rope_dim, dtype=dtype),
+        "wkv_b": init_dense(ks[3], kv_lora, n_heads * (head_dim + v_head_dim), dtype=dtype),
+        "wo": init_dense(ks[4], n_heads * v_head_dim, d_model, dtype=dtype),
+    }
+
+
+def _mla_qkv(p, x, *, n_heads, head_dim, rope_dim, kv_lora, freqs, pos):
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,df->btf", x, p["wq_a"]["w"], preferred_element_type=_F32)
+    q = jnp.einsum("btf,fg->btg", q, p["wq_b"]["w"], preferred_element_type=_F32)
+    q = q.reshape(B, T, n_heads, head_dim + rope_dim)
+    q_nope, q_rope = q[..., :head_dim], q[..., head_dim:]
+    q_rope = apply_rope(q_rope.astype(x.dtype), pos, freqs)
+    kv = jnp.einsum("btd,df->btf", x, p["wkv_a"]["w"], preferred_element_type=_F32)
+    ckv, k_rope = kv[..., :kv_lora], kv[..., kv_lora:]
+    k_rope = apply_rope(k_rope[:, :, None].astype(x.dtype), pos, freqs)[:, :, 0]
+    return q_nope.astype(x.dtype), q_rope, ckv.astype(x.dtype), k_rope
+
+
+def _mla_attend(p, q_nope, q_rope, ckv, k_rope, mask, *, n_heads, head_dim,
+                rope_dim, v_head_dim):
+    """Latent-space attention: fold wkv_b's K-half into the query so scores
+    contract against the compressed cache directly (decode-optimal form)."""
+    B, T = q_nope.shape[:2]
+    kv_lora = ckv.shape[-1]
+    wkv_b = p["wkv_b"]["w"].reshape(kv_lora, n_heads, head_dim + v_head_dim)
+    wk, wv = wkv_b[..., :head_dim], wkv_b[..., head_dim:]
+    # absorb: q_lat[b,t,h,l] = q_nope . wk   (cache stays in storage dtype —
+    # see _sdpa's note; accumulate f32 via preferred_element_type)
+    q_lat = jnp.einsum("bthd,lhd->bthl", q_nope, wk, preferred_element_type=_F32)
+    logits = jnp.einsum("bthl,bsl->bhts", q_lat.astype(ckv.dtype), ckv,
+                        preferred_element_type=_F32)
+    logits += jnp.einsum("bthr,bsr->bhts", q_rope, k_rope,
+                         preferred_element_type=_F32)
+    logits = logits / math.sqrt(head_dim + rope_dim)
+    if mask is not None:
+        logits = logits + (mask if mask.ndim == 3 else mask[None])[:, None]
+    w = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhts,bsl->bthl", w.astype(ckv.dtype), ckv,
+                       preferred_element_type=_F32)
+    out = jnp.einsum("bthl,lhd->bthd", o_lat, wv.astype(_F32))  # (B,T,H,vhd)
+    y = jnp.einsum("btf,fd->btd", out.reshape(B, T, -1), p["wo"]["w"].astype(_F32))
+    return y
+
+
+def mla_train(p, x, *, n_heads, head_dim, rope_dim, kv_lora, v_head_dim, freqs):
+    B, T, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(
+        p, x, n_heads=n_heads, head_dim=head_dim, rope_dim=rope_dim,
+        kv_lora=kv_lora, freqs=freqs, pos=pos)
+    if T >= _CHUNKED_MIN_T:
+        # latent-space MLA == SDPA over 1 shared "key head" of dim
+        # kv_lora+rope_dim with values = the latent cache itself.
+        wkv_b = p["wkv_b"]["w"].reshape(kv_lora, n_heads, head_dim + v_head_dim)
+        wk = wkv_b[..., :head_dim]
+        q_lat = jnp.einsum("bthd,lhd->bthl", q_nope, wk,
+                           preferred_element_type=_F32).astype(x.dtype)
+        q_all = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,T,H,l+r)
+        k_all = jnp.concatenate([ckv, k_rope], axis=-1)[:, :, None]  # (B,S,1,l+r)
+        o_lat = _sdpa_chunked(
+            q_all, k_all, ckv[:, :, None], n_kv=1, causal=True,
+            scale=1.0 / math.sqrt(head_dim + rope_dim))  # (B,T,H,l)
+        wv = wkv_b[..., head_dim:]
+        out = jnp.einsum("bthl,lhd->bthd", o_lat.astype(_F32), wv.astype(_F32))
+        y = jnp.einsum("btf,fd->btd", out.reshape(B, T, -1),
+                       p["wo"]["w"].astype(_F32))
+        return y.astype(x.dtype)
+    y = _mla_attend(p, q_nope, q_rope, ckv, k_rope, causal_mask(T),
+                    n_heads=n_heads, head_dim=head_dim, rope_dim=rope_dim,
+                    v_head_dim=v_head_dim)
+    return y.astype(x.dtype)
+
+
+def mla_decode(p, x, cache: MLACache, *, n_heads, head_dim, rope_dim,
+               kv_lora, v_head_dim, freqs, window=None):
+    B = x.shape[0]
+    S = cache.ckv.shape[1]
+    pos = cache.pos[:, None]  # (B, 1)
+    q_nope, q_rope, ckv, k_rope = _mla_qkv(
+        p, x, n_heads=n_heads, head_dim=head_dim, rope_dim=rope_dim,
+        kv_lora=kv_lora, freqs=freqs, pos=pos)
+    if window is None:
+        slot = jnp.minimum(cache.pos, S - 1)
+        valid = jnp.arange(S)[None, :] <= cache.pos[:, None]
+    else:  # ring buffer over the last min(pos+1, S) positions
+        slot = cache.pos % S
+        valid = jnp.arange(S)[None, :] < jnp.minimum(cache.pos + 1, S)[:, None]
+    hit = (jnp.arange(S)[None, :] == slot[:, None])[..., None]  # (B, S, 1)
+    cc = jnp.where(hit, ckv.astype(cache.ckv.dtype), cache.ckv)
+    kr = jnp.where(hit, k_rope.astype(cache.k_rope.dtype), cache.k_rope)
+    mask = jnp.where(valid, 0.0, _NEG).astype(_F32)[:, None, :]
+    y = _mla_attend(p, q_nope, q_rope, cc, kr, mask,
+                    n_heads=n_heads, head_dim=head_dim, rope_dim=rope_dim,
+                    v_head_dim=v_head_dim)
+    return y.astype(x.dtype), MLACache(cc, kr, cache.pos + 1)

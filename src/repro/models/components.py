@@ -1,0 +1,135 @@
+"""Shared neural-net building blocks (pure JAX, functional, pytree params)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(_F32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * weight).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(_F32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * weight + bias).astype(dt)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None) -> jnp.ndarray:
+    y = jnp.einsum("...d,df->...f", x, w, preferred_element_type=_F32)
+    if b is not None:
+        y = y + b
+    return y.astype(x.dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False, scale: float | None = None,
+               dtype=_F32):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    p = {"w": (jax.random.normal(key, (d_in, d_out), _F32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def apply_dense(p, x):
+    return dense(x, p["w"], p.get("b"))
+
+
+def mlp_gelu(p, x):
+    """Paper §5 synthetic block: MLP with hidden 2D and GELU."""
+    h = jax.nn.gelu(apply_dense(p["fc1"], x))
+    return apply_dense(p["fc2"], h)
+
+
+def init_mlp_gelu(key, d: int, hidden: int, dtype=_F32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": init_dense(k1, d, hidden, bias=True, dtype=dtype),
+        "fc2": init_dense(k2, hidden, d, bias=True, dtype=dtype),
+    }
+
+
+def swiglu(p, x):
+    """SwiGLU feed-forward: w2( silu(w1 x) * w3 x )."""
+    gate = jax.nn.silu(apply_dense(p["w1"], x))
+    up = apply_dense(p["w3"], x)
+    return apply_dense(p["w2"], gate * up)
+
+
+def init_swiglu(key, d: int, d_ff: int, dtype=_F32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": init_dense(k1, d, d_ff, dtype=dtype),
+        "w3": init_dense(k3, d, d_ff, dtype=dtype),
+        "w2": init_dense(k2, d_ff, d, dtype=dtype),
+    }
+
+
+def causal_shortconv_from_window(win: jnp.ndarray, weights: jnp.ndarray,
+                                 T: int) -> jnp.ndarray:
+    """Depthwise causal FIR over a window buffer.
+
+    win: (B, w + T, C) where index w+t corresponds to output position t.
+    weights: (k, C) with k <= w + 1; tap d multiplies position t - d.
+    Returns (B, T, C).
+    """
+    w = win.shape[1] - T
+    k = weights.shape[0]
+    out = jnp.zeros((win.shape[0], T, win.shape[2]), _F32)
+    for d in range(k):
+        seg = jax.lax.slice_in_dim(win, w - d, w - d + T, axis=1)
+        out = out + seg.astype(_F32) * weights[d]
+    return out.astype(win.dtype)
+
+
+# --------------------------------------------------------------------------
+# Activation-sharding constraint hook.  GSPMD sometimes drops the batch
+# sharding of intermediates inside scanned/looped stacks; the launcher pins
+# the batch axis explicitly via this context (CPU tests leave it unset).
+import contextlib as _contextlib
+
+_ACT_SPEC = None
+_ACT_MESH = None
+
+
+@_contextlib.contextmanager
+def activation_sharding(spec, mesh=None):
+    """spec: PartitionSpec whose FIRST entry is the batch mesh axis.
+    mesh: optional — lets model code shard_map channel-separable ops
+    (FFT convolutions) that XLA's SPMD partitioner would replicate."""
+    global _ACT_SPEC, _ACT_MESH
+    old, _ACT_SPEC = _ACT_SPEC, spec
+    oldm, _ACT_MESH = _ACT_MESH, mesh
+    try:
+        yield
+    finally:
+        _ACT_SPEC = old
+        _ACT_MESH = oldm
+
+
+def sharding_ctx():
+    """(batch_axis, mesh) or (None, None)."""
+    if _ACT_SPEC is None:
+        return None, None
+    return (_ACT_SPEC[0] if len(_ACT_SPEC) else None), _ACT_MESH
+
+
+def constrain(x):
+    if _ACT_SPEC is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    batch_ax = _ACT_SPEC[0] if len(_ACT_SPEC) else None
+    return jax.lax.with_sharding_constraint(
+        x, P(batch_ax, *([None] * (x.ndim - 1))))

@@ -1,0 +1,280 @@
+"""Hyena operators (Poli et al. 2023) — the paper's LCSM case study.
+
+Order-3 operator on input u (B, T, D):
+
+    (v, x1, x2) = split(in_proj(norm1(u)), 3)       # width 3D
+    v, x1, x2   = shortconv(v), shortconv(x1), shortconv(x2)
+    v1 = x1 ⊙ (rho1 * v)          # long conv 1   — engine level 2k
+    v2 = x2 ⊙ (rho2 * v1)         # long conv 2   — engine level 2k+1
+    y  = u + out_proj(v2)
+    u' = y + mlp(norm2(y))
+
+Filters are implicit (positional-feature MLP × learned per-channel
+exponential-decay window) and data-independent → Algorithm 2's rectangle
+tiling applies.
+
+Two equivalent execution paths (tests assert they agree):
+  * ``hyena_forward``  — static full-sequence form (training / prefill):
+    FFT long convs (tau.conv_causal_fft) + Pallas short convs.
+  * ``HyenaLCSM``      — FlashEngine-compatible decode (LCSMModel protocol).
+    The v-stream short conv is *folded into the long filter* (causal LTI
+    composition: shortconv then rho  ==  (rho ∗ w_short) as one filter), so
+    each operator maps to exactly 2 engine mixer levels; gate-stream short
+    convs run in-block from the activation window.
+
+Engine activation layout (D = d_model):
+  a[2k]   width 4D: (v_raw, x1_raw, x2_raw, u)   — operator-k inputs
+  a[2k+1] width 3D: (v1, x2_raw, u)
+  a[2k+2] width 4D (next op) or D (final u' of the last operator).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tau as tau_mod
+from repro.core.engine import LevelSpec
+from repro.kernels import ops as kops
+from repro.models import components as C
+
+_F32 = jnp.float32
+
+
+# ---------------------------------------------------------- implicit filter
+def positional_features(length: int, dim: int) -> jnp.ndarray:
+    """(length, dim): normalized time + sin/cos harmonics."""
+    t = jnp.arange(length, dtype=_F32) / max(length, 1)
+    feats = [t]
+    k = 1
+    while len(feats) < dim:
+        feats.append(jnp.sin(2 * math.pi * k * t))
+        if len(feats) < dim:
+            feats.append(jnp.cos(2 * math.pi * k * t))
+        k += 1
+    return jnp.stack(feats, axis=-1)  # (length, dim)
+
+
+def init_filter(key, d_model: int, *, pos_dim: int, width: int,
+                decay_fast: float, decay_slow: float, n_filters: int = 2,
+                groups: int = 0):
+    """groups > 0: multi-head Hyena (Massaroli et al.) — one implicit filter
+    per group of D/groups channels instead of per channel."""
+    ch = groups if groups else d_model
+    ks = jax.random.split(key, 4)
+    lo, hi = math.log(decay_slow), math.log(decay_fast)
+    alphas = jnp.exp(
+        lo + (hi - lo) * jax.random.uniform(ks[3], (n_filters, ch), _F32))
+    return {
+        "fc1": C.init_dense(ks[0], pos_dim, width, bias=True),
+        "fc2": C.init_dense(ks[1], width, width, bias=True),
+        "fc3": C.init_dense(ks[2], width, n_filters * ch, bias=True),
+        "alphas": alphas,  # (n_filters, ch) decay rates
+    }
+
+
+def materialize_filters(p, length: int, d_model: int, *, pos_dim: int):
+    """Returns (n_filters, length, D) data-independent filters.  With
+    grouped (multi-head) filters, each group's filter is broadcast across
+    its D/groups channels."""
+    feats = positional_features(length, pos_dim)
+    h = jnp.sin(C.apply_dense(p["fc1"], feats))
+    h = jnp.sin(C.apply_dense(p["fc2"], h))
+    h = C.apply_dense(p["fc3"], h)  # (length, n_filters*ch)
+    nf, ch = p["alphas"].shape
+    h = h.reshape(length, nf, ch).transpose(1, 0, 2)  # (nf, L, ch)
+    t = jnp.arange(length, dtype=_F32)[None, :, None]
+    window = jnp.exp(-p["alphas"][:, None, :] * t)
+    rho = h * window / math.sqrt(length)
+    if ch != d_model:  # shared filters: repeat per group
+        rho = jnp.repeat(rho, d_model // ch, axis=-1)
+    return rho
+
+
+def compose_filters(rho: jnp.ndarray, taps: jnp.ndarray) -> jnp.ndarray:
+    """(rho ∗ taps) truncated to len(rho): fold a K-tap causal FIR into a
+    long filter (exact — both are causal LTI)."""
+    L = rho.shape[0]
+    out = jnp.zeros_like(rho)
+    for d in range(taps.shape[0]):
+        out = out.at[d:].add(rho[: L - d] * taps[d])
+    return out
+
+
+# ------------------------------------------------------------------ params
+def init_hyena_operator(key, d_model: int, d_ff: int, cfg) -> dict:
+    ks = jax.random.split(key, 6)
+    K = cfg.short_conv_k
+    return {
+        "norm1": jnp.ones((d_model,), _F32),
+        "in_proj": C.init_dense(ks[0], d_model, 3 * d_model),
+        "short_w": (jax.random.normal(ks[1], (K, 3 * d_model), _F32) / K),
+        "filter": init_filter(
+            ks[2], d_model, pos_dim=cfg.filter_pos_dim,
+            width=cfg.filter_mlp_width, decay_fast=cfg.filter_decay_fast,
+            decay_slow=cfg.filter_decay_slow,
+            groups=cfg.hyena_filter_groups),
+        "out_proj": C.init_dense(ks[3], d_model, d_model),
+        "norm2": jnp.ones((d_model,), _F32),
+        "mlp": C.init_swiglu(ks[4], d_model, d_ff),
+    }
+
+
+# ------------------------------------------------------- static (train) path
+def _fftconv(y: jnp.ndarray, rho: jnp.ndarray) -> jnp.ndarray:
+    """Causal FFT conv, shard_map'd per (batch, channel) shard when a mesh
+    context is active — XLA's SPMD partitioner has no FFT partitioning rule
+    and replicates the operands otherwise (measured 12 GiB c64 temps per
+    conv at hyena train scale).  τ is channel-separable so the local form
+    is exact."""
+    dp, mesh = C.sharding_ctx()
+    if mesh is None:
+        return tau_mod.conv_causal_fft(y, rho[None])
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    ch = None if "model" in dp_axes else "model"  # pure-DP: channels local
+    spec = P(dp, None, ch)
+    return shard_map(lambda yl, rl: tau_mod.conv_causal_fft(yl, rl[None]),
+                     mesh=mesh, in_specs=(spec, P(None, ch)),
+                     out_specs=spec, check_rep=False)(y, rho)
+
+
+def hyena_operator_forward(p, u: jnp.ndarray, *, pos_dim: int) -> jnp.ndarray:
+    """One operator, full sequence. u: (B, T, D)."""
+    B, T, D = u.shape
+    z = C.dense(C.rms_norm(u, p["norm1"]), p["in_proj"]["w"])  # (B, T, 3D)
+    z = kops.short_conv(z, p["short_w"])
+    v, x1, x2 = jnp.split(z, 3, axis=-1)
+    rho = materialize_filters(p["filter"], T, D, pos_dim=pos_dim)  # (2, T, D)
+    v1 = x1 * _fftconv(v.astype(_F32), rho[0]).astype(u.dtype)
+    v2 = x2 * _fftconv(v1.astype(_F32), rho[1]).astype(u.dtype)
+    y = u + C.dense(v2, p["out_proj"]["w"])
+    return y + C.swiglu(p["mlp"], C.rms_norm(y, p["norm2"]))
+
+
+def hyena_forward(params: Sequence[dict], u: jnp.ndarray, *, pos_dim: int,
+                  remat: bool = False) -> jnp.ndarray:
+    if remat:
+        # close over pos_dim: jax.checkpoint traces keyword args.
+        op = jax.checkpoint(
+            lambda p, u: hyena_operator_forward(p, u, pos_dim=pos_dim),
+            policy=jax.checkpoint_policies.nothing_saveable)
+    else:
+        op = lambda p, u: hyena_operator_forward(p, u, pos_dim=pos_dim)  # noqa: E731
+    for p in params:
+        u = C.constrain(op(p, u))
+    return u
+
+
+# ------------------------------------------------- FlashEngine-compatible
+class HyenaLCSM:
+    """LCSMModel-protocol wrapper: n_ops operators -> 2·n_ops mixer levels.
+
+    Decode for the 'hyena' arch and all '*-hyena' twins runs through
+    repro.core.engine.FlashEngine with this model.
+    """
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.D = cfg.d_model
+        self.n_ops = cfg.n_layers // (cfg.hyena_order - 1)
+        self.ctx_window = cfg.short_conv_k - 1
+        self.a0_width = 4 * self.D
+        levels = []
+        for k in range(self.n_ops):
+            last = k == self.n_ops - 1
+            levels.append(LevelSpec(width=3 * self.D, conv_start=0, conv_size=self.D))
+            levels.append(LevelSpec(width=(self.D if last else 4 * self.D),
+                                    conv_start=0, conv_size=self.D))
+        self.levels = tuple(levels)
+
+    # params: {"emb": (V, D), "ops": [op0..], "norm_f": (D,), "head": {...}}
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        ks = jax.random.split(key, self.n_ops + 2)
+        return {
+            "emb": jax.random.normal(ks[0], (cfg.vocab, self.D), _F32) * 0.02,
+            "ops": [init_hyena_operator(ks[1 + k], self.D, cfg.d_ff, cfg)
+                    for k in range(self.n_ops)],
+            "norm_f": jnp.ones((self.D,), _F32),
+        }
+
+    # ---------------------------------------------------------- embeddings
+    def embed_entry(self, params, e: jnp.ndarray) -> jnp.ndarray:
+        """Token embedding e (B, D) -> a0 row (B, 4D): raw operator-0 streams."""
+        z = C.dense(C.rms_norm(e, params["ops"][0]["norm1"]),
+                    params["ops"][0]["in_proj"]["w"])  # (B, 3D)
+        return jnp.concatenate([z, e], axis=-1)
+
+    def embed_tokens(self, params, tokens: jnp.ndarray) -> jnp.ndarray:
+        e = params["emb"][tokens]  # (B, T, D)
+        z = C.dense(C.rms_norm(e, params["ops"][0]["norm1"]),
+                    params["ops"][0]["in_proj"]["w"])
+        return jnp.concatenate([z, e], axis=-1)  # (B, T, 4D)
+
+    # -------------------------------------------------------------- filters
+    def filters(self, params, length: int):
+        out = []
+        for k in range(self.n_ops):
+            op = params["ops"][k]
+            rho = materialize_filters(op["filter"], length, self.D,
+                                      pos_dim=self.cfg.filter_pos_dim)
+            w_v = op["short_w"][:, : self.D]  # v-stream taps
+            out.append(compose_filters(rho[0], w_v))  # level 2k
+            out.append(rho[1])                        # level 2k+1
+        return out
+
+    # ---------------------------------------------------------------- block
+    def block(self, params, level: int, b: jnp.ndarray,
+              acts: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        D = self.D
+        T = b.shape[1]
+        k, phase = divmod(level, 2)
+        op = params["ops"][k]
+        win = acts[level]  # (B, w+T, width of a[level])
+        if phase == 0:
+            # gate with shortconv(x1); pass x2_raw and u through.
+            x1 = C.causal_shortconv_from_window(
+                win[:, :, D : 2 * D], op["short_w"][:, D : 2 * D], T)
+            v1 = x1 * b
+            rest = win[:, -T:, 2 * D : 4 * D]  # (x2_raw, u)
+            return jnp.concatenate([v1, rest], axis=-1)
+        # phase 1: finish the operator.
+        x2 = C.causal_shortconv_from_window(
+            win[:, :, D : 2 * D], op["short_w"][:, 2 * D : 3 * D], T)
+        u = win[:, -T:, 2 * D : 3 * D]
+        y = u + C.dense(x2 * b, op["out_proj"]["w"])
+        z = y + C.swiglu(op["mlp"], C.rms_norm(y, op["norm2"]))
+        if k == self.n_ops - 1:
+            return z
+        nxt = params["ops"][k + 1]
+        zp = C.dense(C.rms_norm(z, nxt["norm1"]), nxt["in_proj"]["w"])
+        return jnp.concatenate([zp, z], axis=-1)
+
+    # -------------------------------------------------------------- advance
+    def logits(self, params, z: jnp.ndarray) -> jnp.ndarray:
+        h = C.rms_norm(z, params["norm_f"])
+        return jnp.einsum("...d,vd->...v", h, params["emb"],
+                          preferred_element_type=_F32)
+
+    def advance(self, params, acts: Sequence[jnp.ndarray], rng):
+        z = acts[2 * self.n_ops][:, -1]  # (B, D) — final activation
+        logits = self.logits(params, z)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        e = params["emb"][token]
+        return self.embed_entry(params, e), token
+
+    # ------------------------------------------------- static reference path
+    def forward_tokens(self, params, tokens: jnp.ndarray,
+                       remat: bool = False) -> jnp.ndarray:
+        """(B, T) tokens -> (B, T, V) logits, static path (train/prefill)."""
+        e = params["emb"][tokens]
+        z = hyena_forward(params["ops"], e, pos_dim=self.cfg.filter_pos_dim,
+                          remat=remat)
+        return self.logits(params, z)

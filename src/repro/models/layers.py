@@ -1,0 +1,269 @@
+"""Layer assembly: (mixer, ffn) pairs per configs.base.LayerDef.
+
+Pre-norm residual blocks:  x += mixer(norm1(x));  x += ffn(norm2(x)).
+Every function is functional (params pytree in, arrays out) and works both
+under a python loop and under jax.lax.scan over a stacked leading axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerDef, ModelConfig
+from repro.models import attention as A
+from repro.models import components as C
+from repro.models import mamba as S
+from repro.models import moe as E
+
+_F32 = jnp.float32
+
+
+def _init_norm(cfg: ModelConfig, d: int):
+    if cfg.norm == "rms":
+        return {"w": jnp.ones((d,), _F32)}
+    return {"w": jnp.ones((d,), _F32), "b": jnp.zeros((d,), _F32)}
+
+
+def _apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rms":
+        return C.rms_norm(x, p["w"])
+    return C.layer_norm(x, p["w"], p["b"])
+
+
+# ------------------------------------------------------------------- init
+def init_layer(key, cfg: ModelConfig, ld: LayerDef) -> dict:
+    k_mix, k_ffn = jax.random.split(key)
+    p: dict[str, Any] = {"norm1": _init_norm(cfg, cfg.d_model)}
+    if ld.mixer == "attn":
+        p["attn"] = A.init_gqa(k_mix, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, qkv_bias=cfg.qkv_bias)
+    elif ld.mixer == "attn_cross":
+        k1, k2 = jax.random.split(k_mix)
+        p["attn"] = A.init_gqa(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim, qkv_bias=cfg.qkv_bias)
+        p["cross"] = A.init_cross(k2, cfg.d_model, cfg.n_heads, cfg.head_dim)
+        p["norm_c"] = _init_norm(cfg, cfg.d_model)
+    elif ld.mixer == "mla":
+        p["mla"] = A.init_mla(k_mix, cfg.d_model, cfg.n_heads,
+                              q_lora=cfg.q_lora, kv_lora=cfg.kv_lora,
+                              rope_dim=cfg.rope_dim, head_dim=cfg.head_dim,
+                              v_head_dim=cfg.v_head_dim)
+    elif ld.mixer == "mamba":
+        p["mamba"] = S.init_mamba(k_mix, cfg.d_model, d_inner=cfg.d_inner,
+                                  N=cfg.ssm_state, K=cfg.conv_k)
+    else:
+        raise ValueError(ld.mixer)
+
+    if ld.ffn == "dense":
+        p["norm2"] = _init_norm(cfg, cfg.d_model)
+        if cfg.family == "audio":
+            p["mlp"] = C.init_mlp_gelu(k_ffn, cfg.d_model, cfg.d_ff)
+        else:
+            p["mlp"] = C.init_swiglu(k_ffn, cfg.d_model, cfg.d_ff)
+    elif ld.ffn == "moe":
+        p["norm2"] = _init_norm(cfg, cfg.d_model)
+        p["moe"] = E.init_moe(k_ffn, cfg.d_model, cfg.moe_d_ff, cfg.n_experts,
+                              top_k=cfg.top_k, n_shared=cfg.n_shared_experts,
+                              shared_d_ff=cfg.moe_d_ff)
+    return p
+
+
+# ------------------------------------------------------------------ caches
+class LayerCache(NamedTuple):
+    """Union cache: exactly one member populated per mixer kind (the other
+    is a zero-size placeholder so scan pytrees stay uniform per stack)."""
+
+    kv: Any
+    ssm: Any
+    cross: Any
+
+
+def _zero_kv(cfg, batch: int, S: int, dtype) -> A.KVCache:
+    return A.KVCache(
+        k=jnp.zeros((batch, S, cfg.n_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, S, cfg.n_kv_heads, cfg.head_dim), dtype),
+        pos=jnp.zeros((batch,), jnp.int32))
+
+
+def init_layer_cache(cfg: ModelConfig, ld: LayerDef, batch: int, S_cap: int,
+                     dtype=jnp.bfloat16, enc_S: int = 0,
+                     window: int | None = None) -> LayerCache:
+    kv = ssm = cross = ()
+    if ld.mixer == "attn":
+        win = window or cfg.sliding_window
+        cap = min(S_cap, win) if win else S_cap
+        kv = _zero_kv(cfg, batch, cap, dtype)
+    elif ld.mixer == "attn_cross":
+        kv = _zero_kv(cfg, batch, S_cap, dtype)
+        cross = (jnp.zeros((batch, enc_S, cfg.n_heads, cfg.head_dim), dtype),
+                 jnp.zeros((batch, enc_S, cfg.n_heads, cfg.head_dim), dtype))
+    elif ld.mixer == "mla":
+        win = window or cfg.sliding_window
+        cap = min(S_cap, win) if win else S_cap
+        kv = A.MLACache(
+            ckv=jnp.zeros((batch, cap, cfg.kv_lora), dtype),
+            k_rope=jnp.zeros((batch, cap, cfg.rope_dim), dtype),
+            pos=jnp.zeros((batch,), jnp.int32))
+    elif ld.mixer == "mamba":
+        d_inner = cfg.d_inner or 2 * cfg.d_model
+        ssm = S.init_mamba_state(batch, d_inner, cfg.ssm_state, cfg.conv_k, dtype)
+    return LayerCache(kv=kv, ssm=ssm, cross=cross)
+
+
+# ------------------------------------------------------------------- apply
+def _mixer_train(p, cfg: ModelConfig, ld: LayerDef, x, aux_in: dict):
+    freqs = A.rope_freqs(cfg.rope_dim if ld.mixer == "mla" else cfg.head_dim,
+                         cfg.rope_theta)
+    if ld.mixer == "attn":
+        return A.gqa_train(
+            p["attn"], x, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, freqs=freqs, window=aux_in.get("window"),
+            m_rope_pos=aux_in.get("pos3") if cfg.m_rope else None,
+            m_rope_sections=cfg.m_rope_sections)
+    if ld.mixer == "mla":
+        return A.mla_train(p["mla"], x, n_heads=cfg.n_heads, head_dim=cfg.head_dim,
+                           rope_dim=cfg.rope_dim, kv_lora=cfg.kv_lora,
+                           v_head_dim=cfg.v_head_dim or cfg.head_dim, freqs=freqs)
+    if ld.mixer == "mamba":
+        return S.mamba_train(p["mamba"], x, N=cfg.ssm_state)
+    raise ValueError(ld.mixer)
+
+
+def apply_layer_train(p, cfg: ModelConfig, ld: LayerDef, x, aux_in: dict):
+    """Returns (x', moe_aux)."""
+    h = _apply_norm(cfg, p["norm1"], x)
+    if ld.mixer == "attn_cross":
+        freqs = A.rope_freqs(cfg.head_dim, cfg.rope_theta)
+        y = A.gqa_train(p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                        head_dim=cfg.head_dim, freqs=freqs)
+        x = x + y
+        hc = _apply_norm(cfg, p["norm_c"], x)
+        x = x + A.cross_attention(p["cross"], hc, aux_in["enc_out"],
+                                  n_heads=cfg.n_heads, head_dim=cfg.head_dim)
+    else:
+        x = x + _mixer_train(p, cfg, ld, h, aux_in)
+    aux = jnp.zeros((), _F32)
+    if ld.ffn == "dense":
+        h = _apply_norm(cfg, p["norm2"], x)
+        f = C.mlp_gelu(p["mlp"], h) if cfg.family == "audio" else C.swiglu(p["mlp"], h)
+        x = x + f
+    elif ld.ffn == "moe":
+        h = _apply_norm(cfg, p["norm2"], x)
+        f, aux = E.moe_ffn(p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                           capacity_factor=cfg.moe_capacity_factor,
+                           group_size=cfg.moe_group_size)
+        x = x + f
+    return x, aux
+
+
+def apply_layer_decode(p, cfg: ModelConfig, ld: LayerDef, x, cache: LayerCache,
+                       aux_in: dict):
+    """x: (B, 1, D). Returns (x', new cache)."""
+    freqs = A.rope_freqs(cfg.rope_dim if ld.mixer == "mla" else cfg.head_dim,
+                         cfg.rope_theta)
+    h = _apply_norm(cfg, p["norm1"], x)
+    kv, ssm, cross = cache
+    if ld.mixer == "attn":
+        y, kv = A.gqa_decode(
+            p["attn"], h, kv, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, freqs=freqs, window=aux_in.get("window"),
+            m_rope_pos=aux_in.get("pos3") if cfg.m_rope else None,
+            m_rope_sections=cfg.m_rope_sections)
+    elif ld.mixer == "attn_cross":
+        y, kv = A.gqa_decode(p["attn"], h, kv, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                             freqs=freqs)
+        xc = x + y
+        ck, cv = cross
+        hc = _apply_norm(cfg, p["norm_c"], xc)
+        yc = _cross_decode(p["cross"], hc, ck, cv, n_heads=cfg.n_heads,
+                           head_dim=cfg.head_dim)
+        y = y + yc
+    elif ld.mixer == "mla":
+        y, kv = A.mla_decode(p["mla"], h, kv, n_heads=cfg.n_heads,
+                             head_dim=cfg.head_dim, rope_dim=cfg.rope_dim,
+                             kv_lora=cfg.kv_lora,
+                             v_head_dim=cfg.v_head_dim or cfg.head_dim,
+                             freqs=freqs, window=aux_in.get("window"))
+    elif ld.mixer == "mamba":
+        y, ssm = S.mamba_decode(p["mamba"], h, ssm, N=cfg.ssm_state)
+    else:
+        raise ValueError(ld.mixer)
+    x = x + y
+    aux = jnp.zeros((), _F32)
+    if ld.ffn == "dense":
+        h = _apply_norm(cfg, p["norm2"], x)
+        f = C.mlp_gelu(p["mlp"], h) if cfg.family == "audio" else C.swiglu(p["mlp"], h)
+        x = x + f
+    elif ld.ffn == "moe":
+        h = _apply_norm(cfg, p["norm2"], x)
+        f, aux = E.moe_ffn(p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                           capacity_factor=cfg.moe_capacity_factor,
+                           group_size=cfg.moe_group_size)
+        x = x + f
+    return x, LayerCache(kv=kv, ssm=ssm, cross=cross)
+
+
+def _cross_decode(p, x, ck, cv, *, n_heads, head_dim):
+    out = A._sdpa(A._proj(p["wq"], x, n_heads, head_dim), ck, cv, None, n_heads)
+    B = x.shape[0]
+    y = jnp.einsum("btf,fd->btd", out.reshape(B, 1, -1), p["wo"]["w"],
+                   preferred_element_type=_F32)
+    return y.astype(x.dtype)
+
+
+def prefill_layer_cache(p, cfg: ModelConfig, ld: LayerDef, x, S_cap: int,
+                        aux_in: dict, dtype=jnp.bfloat16) -> LayerCache:
+    """Build the post-prompt cache from a full-sequence forward's inputs.
+    x is the *normed* mixer input (B, T, D); T <= S_cap."""
+    B, T, _ = x.shape
+    kv = ssm = cross = ()
+    freqs = A.rope_freqs(cfg.rope_dim if ld.mixer == "mla" else cfg.head_dim,
+                         cfg.rope_theta)
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    if ld.mixer in ("attn", "attn_cross"):
+        k = A._proj(p["attn"]["wk"], x, cfg.n_kv_heads, cfg.head_dim)
+        v = A._proj(p["attn"]["wv"], x, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.m_rope and aux_in.get("pos3") is not None:
+            k = A.apply_m_rope(k, aux_in["pos3"], freqs, cfg.m_rope_sections)
+        else:
+            k = A.apply_rope(k, pos, freqs)
+        window = aux_in.get("window")
+        cap = min(S_cap, window) if window else S_cap
+        kvc = _zero_kv(cfg, B, cap, dtype)
+        take = min(T, cap)
+        kv = A.KVCache(
+            k=kvc.k.at[:, :take].set(k[:, -take:].astype(dtype)),
+            v=kvc.v.at[:, :take].set(v[:, -take:].astype(dtype)),
+            pos=jnp.full((B,), T, jnp.int32))
+        if ld.mixer == "attn_cross":
+            enc = aux_in["enc_out"]
+            ck = A._proj(p["cross"]["wk"], enc, cfg.n_heads, cfg.head_dim)
+            cv = A._proj(p["cross"]["wv"], enc, cfg.n_heads, cfg.head_dim)
+            cross = (ck.astype(dtype), cv.astype(dtype))
+    elif ld.mixer == "mla":
+        kvp = jnp.einsum("btd,df->btf", x, p["mla"]["wkv_a"]["w"],
+                         preferred_element_type=_F32)
+        ckv, k_rope = kvp[..., : cfg.kv_lora], kvp[..., cfg.kv_lora :]
+        k_rope = A.apply_rope(k_rope[:, :, None].astype(x.dtype), pos, freqs)[:, :, 0]
+        base = A.MLACache(
+            ckv=jnp.zeros((B, S_cap, cfg.kv_lora), dtype),
+            k_rope=jnp.zeros((B, S_cap, cfg.rope_dim), dtype),
+            pos=jnp.full((B,), T, jnp.int32))
+        kv = A.MLACache(ckv=base.ckv.at[:, :T].set(ckv.astype(dtype)),
+                        k_rope=base.k_rope.at[:, :T].set(k_rope.astype(dtype)),
+                        pos=base.pos)
+    elif ld.mixer == "mamba":
+        d_inner = cfg.d_inner or 2 * cfg.d_model
+        xz = jnp.einsum("btd,df->btf", x, p["mamba"]["in_proj"]["w"],
+                        preferred_element_type=_F32).astype(x.dtype)
+        _, h_T = S.mamba_prefill_state(p["mamba"], xz, N=cfg.ssm_state)
+        xs = xz[..., :d_inner]
+        K = cfg.conv_k
+        tail = xs[:, -(K - 1):].astype(dtype)
+        pad = jnp.zeros((B, max(0, K - 1 - T), d_inner), dtype)
+        ssm = S.MambaState(conv=jnp.concatenate([pad, tail], 1)[:, -(K - 1):], ssm=h_T)
+    return LayerCache(kv=kv, ssm=ssm, cross=cross)

@@ -1,0 +1,316 @@
+"""Top-level language model: embedding → scanned layer stacks → head.
+
+One class serves all 11 architectures.  Stacks come from
+``ModelConfig.stacks()``; each Stack is lowered as one ``jax.lax.scan`` over
+its repeat axis (params stacked on a leading dim), keeping HLO size
+O(pattern length) regardless of depth.
+
+Entry points (all pure functions of (params, inputs)):
+  * ``loss(params, batch)``            — training objective (CE + MoE aux
+                                          + optional deepseek-MTP head).
+  * ``forward(params, batch)``         — hidden states (B, T, D).
+  * ``prefill(params, batch, S_cap)``  — forward + per-layer decode caches.
+  * ``decode_step(params, token, caches, ...)`` — one-token serve step.
+
+LCSM ('hyena' family) configs delegate to models.hyena.HyenaLCSM: the
+static path (train/prefill) is the FFT forward; decode runs through
+repro.core.engine.FlashEngine (the paper's contribution) — see
+repro/serving/lcsm_backend.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerDef, ModelConfig, Stack
+from repro.models import attention as A
+from repro.models import components as C
+from repro.models import layers as L
+
+_F32 = jnp.float32
+
+
+def _stack_keys(key, n):
+    return jax.random.split(key, n)
+
+
+# Activation-sharding hook lives in components (shared with hyena/mamba).
+from repro.models.components import activation_sharding, constrain as _constrain  # noqa: E402,F401
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.is_lcsm = cfg.family == "lcsm"
+        if self.is_lcsm:
+            from repro.models.hyena import HyenaLCSM
+
+            self.lcsm = HyenaLCSM(cfg)
+        else:
+            self.stacks: tuple[Stack, ...] = cfg.stacks()
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        if self.is_lcsm:
+            return self.lcsm.init(key)
+        ks = jax.random.split(key, 6 + len(self.stacks))
+        params: dict[str, Any] = {
+            "emb": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), _F32) * 0.02,
+            "norm_f": L._init_norm(cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["unemb"] = jax.random.normal(
+                ks[1], (cfg.vocab, cfg.d_model), _F32) * 0.02
+        for si, stack in enumerate(self.stacks):
+            def init_period(k, stack=stack):
+                kk = jax.random.split(k, len(stack.pattern))
+                return tuple(
+                    L.init_layer(kk[j], cfg, ld)
+                    for j, ld in enumerate(stack.pattern))
+            params[f"stack{si}"] = jax.vmap(init_period)(
+                _stack_keys(ks[2 + si], stack.repeat))
+        if cfg.enc_layers:
+            ke = jax.random.split(ks[-2], cfg.enc_layers)
+            enc_ld = LayerDef("attn", "dense")
+            params["enc"] = jax.vmap(
+                lambda k: (L.init_layer(k, cfg, enc_ld),))(ke)
+            params["enc_norm"] = L._init_norm(cfg, cfg.d_model)
+        if cfg.mtp:
+            params["mtp"] = {
+                "layer": L.init_layer(ks[-1], cfg, LayerDef("attn", "dense")),
+                "proj": C.init_dense(ks[-3], 2 * cfg.d_model, cfg.d_model),
+                "norm": L._init_norm(cfg, cfg.d_model),
+            }
+        return params
+
+    # --------------------------------------------------------------- encoder
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """Whisper encoder over precomputed mel-frame embeddings (stub
+        frontend per the assignment). Bidirectional attention."""
+        cfg = self.cfg
+        freqs = A.rope_freqs(cfg.head_dim, cfg.rope_theta)
+
+        def body(x, period):
+            (p,) = period
+            h = L._apply_norm(cfg, p["norm1"], x)
+            B, T, _ = h.shape
+            q = A._proj(p["attn"]["wq"], h, cfg.n_heads, cfg.head_dim)
+            k = A._proj(p["attn"]["wk"], h, cfg.n_kv_heads, cfg.head_dim)
+            v = A._proj(p["attn"]["wv"], h, cfg.n_kv_heads, cfg.head_dim)
+            pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+            q, k = A.apply_rope(q, pos, freqs), A.apply_rope(k, pos, freqs)
+            o = A._sdpa(q, k, v, None, cfg.n_kv_heads)  # no mask: bidirectional
+            y = jnp.einsum("btf,fd->btd", o.reshape(B, T, -1),
+                           p["attn"]["wo"]["w"], preferred_element_type=_F32)
+            x = x + y.astype(x.dtype)
+            h = L._apply_norm(cfg, p["norm2"], x)
+            x = x + C.mlp_gelu(p["mlp"], h)
+            return x, None
+
+        x, _ = jax.lax.scan(body, frames, params["enc"])
+        return L._apply_norm(cfg, params["enc_norm"], x)
+
+    # --------------------------------------------------------------- forward
+    def _embed(self, params, batch) -> jnp.ndarray:
+        x = params["emb"][batch["tokens"]]  # (B, T, D)
+        if "vis_embed" in batch:  # VLM stub frontend: prepend patch embeds
+            x = jnp.concatenate([batch["vis_embed"].astype(x.dtype), x], axis=1)
+        return x
+
+    def _aux_in(self, params, batch, *, window=None) -> dict:
+        aux: dict = {"window": window}
+        if self.cfg.m_rope:
+            if "pos3" in batch:
+                aux["pos3"] = batch["pos3"]
+            else:
+                B, T = batch["tokens"].shape
+                T += batch["vis_embed"].shape[1] if "vis_embed" in batch else 0
+                aux["pos3"] = jnp.broadcast_to(jnp.arange(T)[None, None], (3, B, T))
+        if self.cfg.enc_layers:
+            aux["enc_out"] = self.encode(params, batch["enc_frames"])
+        return aux
+
+    def forward(self, params, batch, *, window=None, remat: bool = False):
+        """Returns (hidden (B, T, D), moe_aux scalar).
+
+        ``remat=True`` (the training path) checkpoints each scan period:
+        only the (B, T, D) layer boundaries survive to the backward pass;
+        attention/MoE internals are recomputed — the standard memory/compute
+        trade that makes 4k×256 training fit HBM.
+        """
+        cfg = self.cfg
+        if self.is_lcsm:
+            from repro.models.hyena import hyena_forward
+
+            e = params["emb"][batch["tokens"]]
+            h = hyena_forward(params["ops"], e, pos_dim=cfg.filter_pos_dim,
+                              remat=remat)
+            return C.rms_norm(h, params["norm_f"]), jnp.zeros((), _F32)
+        x = _constrain(self._embed(params, batch))
+        aux_in = self._aux_in(params, batch, window=window)
+        aux = jnp.zeros((), _F32)
+        for si, stack in enumerate(self.stacks):
+            def body(carry, period, stack=stack):
+                x, aux = carry
+                for j, ld in enumerate(stack.pattern):
+                    def one_layer(p_, x_, ld=ld):
+                        return L.apply_layer_train(p_, self.cfg, ld, x_, aux_in)
+                    if remat and len(stack.pattern) > 1:
+                        # nested per-layer remat: a hybrid (Jamba) period is
+                        # 8 layers — without this the backward holds all 8
+                        # layers' recompute working set at once.
+                        one_layer = jax.checkpoint(
+                            one_layer,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+                    x, a = one_layer(period[j], x)
+                    x = _constrain(x)
+                    aux = aux + a
+                return (x, aux), None
+            if remat:
+                body = jax.checkpoint(body,
+                                      policy=jax.checkpoint_policies.nothing_saveable)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params[f"stack{si}"])
+        return L._apply_norm(cfg, params["norm_f"], x), aux
+
+    def logits(self, params, hidden: jnp.ndarray) -> jnp.ndarray:
+        w = params["emb"] if self.cfg.tie_embeddings or self.is_lcsm else params["unemb"]
+        return jnp.einsum("...d,vd->...v", hidden, w, preferred_element_type=_F32)
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch) -> jnp.ndarray:
+        cfg = self.cfg
+        if self.is_lcsm:
+            from repro.models.hyena import hyena_forward
+
+            e = params["emb"][batch["tokens"]]
+            h = hyena_forward(params["ops"], e, pos_dim=cfg.filter_pos_dim,
+                              remat=True)
+            h = C.rms_norm(h, params["norm_f"])
+            return _ce_from_hidden(params["emb"], h, batch["targets"])
+        hidden, aux = self.forward(params, batch, remat=True)
+        n_vis = batch["vis_embed"].shape[1] if "vis_embed" in batch else 0
+        w = params["emb"] if cfg.tie_embeddings else params["unemb"]
+        loss = _ce_from_hidden(w, hidden[:, n_vis:], batch["targets"]) + 0.01 * aux
+        if cfg.mtp:
+            # depth-1 MTP (deepseek-v3): predict t+2 from [h_t ; emb(x_{t+1})].
+            h = hidden[:, n_vis:]
+            emb_next = params["emb"][batch["targets"]]  # x_{t+1} = target_t
+            z = C.dense(jnp.concatenate([h[:, :-1], emb_next[:, :-1].astype(h.dtype)], -1),
+                        params["mtp"]["proj"]["w"])
+            z, _ = L.apply_layer_train(params["mtp"]["layer"], cfg,
+                                       LayerDef("attn", "dense"), z, {"window": None})
+            z = L._apply_norm(cfg, params["mtp"]["norm"], z)
+            loss = loss + 0.3 * _ce_from_hidden(w, z, batch["targets"][:, 1:])
+        return loss
+
+    # --------------------------------------------------------------- caches
+    def init_caches(self, batch_size: int, S: int, *, dtype=jnp.bfloat16,
+                    window: int | None = None, enc_S: int | None = None):
+        cfg = self.cfg
+        enc_S = enc_S if enc_S is not None else cfg.enc_positions
+        caches = []
+        for stack in self.stacks:
+            period = tuple(
+                L.init_layer_cache(cfg, ld, batch_size, S, dtype=dtype,
+                                   enc_S=enc_S, window=window)
+                for ld in stack.pattern)
+            caches.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (stack.repeat,) + x.shape)
+                if isinstance(x, jnp.ndarray) else x, period))
+        return caches
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, params, batch, S_cap: int, *, window=None,
+                cache_dtype=jnp.bfloat16):
+        """Full-sequence forward + decode caches. Returns (last_logits, caches)."""
+        cfg = self.cfg
+        x = _constrain(self._embed(params, batch))
+        aux_in = self._aux_in(params, batch, window=window)
+        caches = []
+        for si, stack in enumerate(self.stacks):
+            def body(x, period, stack=stack):
+                new_caches = []
+                for j, ld in enumerate(stack.pattern):
+                    h = L._apply_norm(cfg, period[j]["norm1"], x)
+                    new_caches.append(L.prefill_layer_cache(
+                        period[j], cfg, ld, h, S_cap, aux_in, dtype=cache_dtype))
+                    x, _ = L.apply_layer_train(period[j], cfg, ld, x, aux_in)
+                    x = _constrain(x)
+                return x, tuple(new_caches)
+            x, stack_caches = jax.lax.scan(body, x, params[f"stack{si}"])
+            caches.append(stack_caches)
+        h = L._apply_norm(cfg, params["norm_f"], x)
+        return self.logits(params, h[:, -1]), caches
+
+    # ---------------------------------------------------------- decode step
+    def decode_step(self, params, token: jnp.ndarray, caches, *,
+                    window: int | None = None, pos3=None, enc_out=None):
+        """token: (B, 1) int32 → (logits (B, V), new caches). One serve step."""
+        cfg = self.cfg
+        x = params["emb"][token]  # (B, 1, D)
+        aux_in = {"window": window, "pos3": pos3, "enc_out": enc_out}
+        new_caches = []
+        for si, stack in enumerate(self.stacks):
+            def body(x, xs, stack=stack):
+                period, cache_period = xs
+                new_period = []
+                for j, ld in enumerate(stack.pattern):
+                    x, c = L.apply_layer_decode(
+                        period[j], cfg, ld, x, cache_period[j], aux_in)
+                    x = _constrain(x)
+                    new_period.append(c)
+                return x, tuple(new_period)
+            x, nc = jax.lax.scan(body, x, (params[f"stack{si}"], caches[si]))
+            new_caches.append(nc)
+        h = L._apply_norm(cfg, params["norm_f"], x)
+        return self.logits(params, h[:, -1]), new_caches
+
+
+def _ce(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    lg = logits.astype(_F32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def _ce_from_hidden(w: jnp.ndarray, hidden: jnp.ndarray, targets: jnp.ndarray,
+                    chunk: int = 256) -> jnp.ndarray:
+    """Cross entropy without materializing (B, T, V) logits: scan over T
+    chunks, each chunk's logits live only inside a checkpointed body (the
+    backward recomputes them).  At vocab 152k × T 4096 the full logits are
+    ~40 GiB/chip f32 — the dominant train-memory term before this."""
+    B, T, D = hidden.shape
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // chunk
+    hb = hidden.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    tb = targets.reshape(B, nc, chunk).transpose(1, 0, 2)
+    mask = (jnp.arange(nc * chunk) < T).reshape(nc, chunk)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        h, t, mk = xs
+        lg = jnp.einsum("bcd,vd->bcv", h, w, preferred_element_type=_F32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        picked = jnp.take_along_axis(lg, t[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((lse - picked) * mk[None]), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), _F32), (hb, tb, mask))
+    return tot / (B * T)
+
+
+# ----------------------------------------------------------------- builders
+@functools.lru_cache(maxsize=None)
+def build(name_or_cfg) -> LM:
+    from repro.configs.base import get_config
+
+    cfg = get_config(name_or_cfg) if isinstance(name_or_cfg, str) else name_or_cfg
+    return LM(cfg)

@@ -1,0 +1,177 @@
+"""Mamba-1 selective SSM mixer (falcon-mamba / Jamba Mamba layers).
+
+Train/prefill path: depthwise short conv (Pallas kernel) + selective scan
+via ``jax.lax.associative_scan`` over the (decay, increment) monoid —
+O(T log T) work, parallel over (batch, channel, state) — the TPU-native
+replacement for the CUDA selective-scan kernel.
+
+Decode path: O(1)/token recurrence on carried (conv window, SSM state).
+This is exactly the "RNN-like" inference the paper contrasts against
+(§2.3.2) — kept as the native decode for SSM archs, per DESIGN §4.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.components import constrain, init_dense
+
+_F32 = jnp.float32
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray  # (B, K-1, d_inner) — trailing conv window
+    ssm: jnp.ndarray   # (B, d_inner, N)   — recurrent state
+
+
+def init_mamba(key, d_model: int, *, d_inner: int | None = None, N: int = 16,
+               K: int = 4, dt_rank: int | None = None, dtype=_F32):
+    d_inner = 2 * d_model if d_inner is None else d_inner
+    dt_rank = max(1, d_model // 16) if dt_rank is None else dt_rank
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=_F32)[None], (d_inner, 1))
+    return {
+        "in_proj": init_dense(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, d_inner), _F32) / K).astype(_F32),
+        "conv_b": jnp.zeros((d_inner,), _F32),
+        "x_proj": init_dense(ks[2], d_inner, dt_rank + 2 * N, dtype=dtype),
+        "dt_proj": init_dense(ks[3], dt_rank, d_inner, bias=True, dtype=_F32),
+        "A_log": jnp.log(A),          # (d_inner, N); A = -exp(A_log)
+        "D": jnp.ones((d_inner,), _F32),
+        "out_proj": init_dense(ks[4], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _ssm_inputs(p, xz, *, N: int):
+    """Common path: split/conv/activations -> (x, z, dt, B_, C_)."""
+    d_inner = p["A_log"].shape[0]
+    x, z = jnp.split(xz, 2, axis=-1)  # (B, T, d_inner) each
+    x = kops.short_conv(x, p["conv_w"], p["conv_b"])
+    x = constrain(jax.nn.silu(x.astype(_F32)))
+    proj = jnp.einsum("btd,df->btf", x, p["x_proj"]["w"].astype(_F32))
+    dt_rank = proj.shape[-1] - 2 * N
+    dt, B_, C_ = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = constrain(jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dt, p["dt_proj"]["w"].astype(_F32))
+        + p["dt_proj"]["b"]))
+    return x, z, dt, B_, C_
+
+
+def _scan_monoid(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def mamba_train(p, u, *, N: int = 16, chunk: int = 128):
+    """u: (B, T, D) -> (B, T, D).
+
+    Chunked parallel scan: a sequential lax.scan over T/chunk blocks carrying
+    the (B, C, N) state, with an associative scan *inside* each block.  Peak
+    memory is O(B·chunk·C·N) instead of O(B·T·C·N) — the full-length
+    associative scan materializes (decay, inc) over all T positions, which
+    at falcon-mamba scale (d_inner 8192, T 4096) is terabytes.  The TPU
+    analogue of the fused CUDA selective-scan kernel's chunking.
+    """
+    B, T, D = u.shape
+    xz = jnp.einsum("btd,df->btf", u, p["in_proj"]["w"],
+                    preferred_element_type=_F32).astype(u.dtype)
+    x, z, dt, B_, C_ = _ssm_inputs(p, xz, N=N)
+    A = -jnp.exp(p["A_log"])  # (d_inner, N)
+    Cdim = A.shape[0]
+
+    chunk = min(chunk, T)
+    if T % chunk:  # pad time to a whole number of chunks (dt=0 => identity)
+        pad = chunk - T % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    def reblk(a):  # (B, T, F) -> (nc, B, chunk, F)
+        return a.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def body(h0, xs):
+        # checkpointed: the backward recomputes this chunk's (B, Q, C, N)
+        # decay/inc instead of saving them for every chunk.
+        xb, dtb, Bb, Cb = xs  # (B, chunk, ·)
+        decay = jnp.exp(dtb[..., None] * A)                 # (B, Q, C, N)
+        inc = (dtb * xb)[..., None] * Bb[:, :, None, :]
+        cumdecay, hrel = jax.lax.associative_scan(_scan_monoid, (decay, inc), axis=1)
+        h = cumdecay * h0[:, None] + hrel                    # (B, Q, C, N)
+        yb = jnp.einsum("btcn,btn->btc", h, Cb)
+        return h[:, -1], yb
+
+    h0 = jnp.zeros((B, Cdim, N), _F32)
+    _, ys = jax.lax.scan(body, h0, (reblk(x), reblk(dt), reblk(B_), reblk(C_)))
+    y = constrain(ys.transpose(1, 0, 2, 3).reshape(B, -1, Cdim)[:, :T])
+    y = y + p["D"] * x[:, :T]
+    y = y * jax.nn.silu(z.astype(_F32))
+    out = jnp.einsum("btc,cd->btd", y, p["out_proj"]["w"].astype(_F32))
+    return out.astype(u.dtype)
+
+
+def mamba_prefill_state(p, xz, *, N: int = 16, chunk: int = 128):
+    """Final SSM state after ingesting xz (B, T, 2*d_inner) — for prefill.
+    Returns (None, h_T (B, d_inner, N) f32).  Chunked like mamba_train."""
+    x, _, dt, B_, _ = _ssm_inputs(p, xz, N=N)
+    A = -jnp.exp(p["A_log"])
+    B, T, Cdim = x.shape
+    chunk = min(chunk, T)
+    if T % chunk:
+        pad = chunk - T % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    def reblk(a):
+        return a.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+
+    def body(h0, xs):
+        xb, dtb, Bb = xs
+        decay = jnp.exp(dtb[..., None] * A)
+        inc = (dtb * xb)[..., None] * Bb[:, :, None, :]
+        cumdecay, hrel = jax.lax.associative_scan(_scan_monoid, (decay, inc), axis=1)
+        return cumdecay[:, -1] * h0 + hrel[:, -1], None
+
+    h0 = jnp.zeros((B, Cdim, N), _F32)
+    hT, _ = jax.lax.scan(body, h0, (reblk(x), reblk(dt), reblk(B_)))
+    return None, hT
+
+
+def init_mamba_state(batch: int, d_inner: int, N: int, K: int, dtype=_F32) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, K - 1, d_inner), dtype),
+        ssm=jnp.zeros((batch, d_inner, N), _F32),
+    )
+
+
+def mamba_decode(p, u, state: MambaState, *, N: int = 16):
+    """u: (B, 1, D); O(1) recurrent step. Returns (y (B,1,D), new state)."""
+    xz = jnp.einsum("btd,df->btf", u, p["in_proj"]["w"],
+                    preferred_element_type=_F32).astype(u.dtype)
+    x, z = jnp.split(xz, 2, axis=-1)  # (B, 1, d_inner)
+    win = jnp.concatenate([state.conv, x.astype(state.conv.dtype)], axis=1)  # (B, K, C)
+    # win rows are [x_{t-K+1} .. x_t]; tap d multiplies x_{t-d} => flip taps.
+    xc = jnp.einsum("bkc,kc->bc", win.astype(_F32),
+                    jnp.flip(p["conv_w"], axis=0)) + p["conv_b"]
+    xc = jax.nn.silu(xc)  # (B, C)
+    proj = jnp.einsum("bc,cf->bf", xc, p["x_proj"]["w"].astype(_F32))
+    dt_rank = proj.shape[-1] - 2 * N
+    dt, B_, C_ = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("br,rd->bd", dt, p["dt_proj"]["w"].astype(_F32)) + p["dt_proj"]["b"])
+    A = -jnp.exp(p["A_log"])
+    h = jnp.exp(dt[..., None] * A) * state.ssm \
+        + (dt * xc)[..., None] * B_[:, None, :]
+    y = jnp.einsum("bcn,bn->bc", h, C_) + p["D"] * xc
+    y = y * jax.nn.silu(z[:, 0].astype(_F32))
+    out = jnp.einsum("bc,cd->bd", y, p["out_proj"]["w"].astype(_F32))
+    return out[:, None].astype(u.dtype), MambaState(conv=win[:, 1:], ssm=h)

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts feed-forward (top-k router, capacity-based dispatch,
+optional shared experts, load-balance aux loss).
+
+Dispatch is the GShard/Mixtral einsum form: a one-hot (token, expert,
+capacity-slot) tensor routes tokens to per-expert buffers —
+
+    buf[e, c, d]  = Σ_t dispatch[t, e, c] · x[t, d]        (all-to-all #1)
+    out[t, d]     = Σ_{e,c} combine[t, e, c] · ffn(buf)[e, c, d]   (#2)
+
+Under the production mesh (tokens→data, experts→model) GSPMD lowers these
+two contractions to the canonical MoE all-to-alls, which is exactly the
+communication pattern the roofline analysis must see.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.components import init_dense
+
+_F32 = jnp.float32
+
+
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, *, top_k: int,
+             n_shared: int = 0, shared_d_ff: int | None = None, dtype=_F32):
+    import math
+
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d_model)
+    p = {
+        "router": init_dense(ks[0], d_model, n_experts, dtype=_F32),  # fp32 router
+        # experts stacked on a leading axis -> shards experts→model.
+        "w1": jax.random.normal(ks[1], (n_experts, d_model, d_ff), _F32) * scale,
+        "w3": jax.random.normal(ks[2], (n_experts, d_model, d_ff), _F32) * scale,
+        "w2": jax.random.normal(ks[3], (n_experts, d_ff, d_model), _F32) * (1.0 / math.sqrt(d_ff)),
+    }
+    p["w1"] = p["w1"].astype(dtype); p["w3"] = p["w3"].astype(dtype); p["w2"] = p["w2"].astype(dtype)
+    if n_shared:
+        sdf = d_ff if shared_d_ff is None else shared_d_ff
+        from repro.models.components import init_swiglu
+        p["shared"] = init_swiglu(ks[4], d_model, sdf * n_shared, dtype=dtype)
+    return p
+
+
+def moe_ffn(p, x, *, n_experts: int, top_k: int, capacity_factor: float = 1.25,
+            min_capacity: int = 4, group_size: int = 512):
+    """x: (B, T, D) -> (out (B, T, D), aux_loss scalar).
+
+    GShard-style *grouped* dispatch: tokens are split into groups of
+    ``group_size`` with per-group capacity ``Cg = g·k·f/E``, so the dispatch
+    one-hot is (G, g, E, Cg) — total elements tokens·g·k·f, independent of E
+    (the ungrouped form is tokens²·k·f/E and explodes at pod scale).  Groups
+    shard over the data axis, experts over model; GSPMD turns the two
+    dispatch/combine contractions into the canonical MoE all-to-alls.
+    """
+    B, T, D = x.shape
+    n_tok = B * T
+    g = min(group_size, n_tok)
+    while n_tok % g:  # keep groups exact (n_tok is a power-of-two-ish batch)
+        g //= 2
+    G = n_tok // g
+    xt = x.reshape(G, g, D)
+
+    logits = jnp.einsum("Gtd,de->Gte", xt.astype(_F32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, g, E)
+
+    # top-k gates, renormalized over the chosen experts.
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)  # (G, g, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    capacity = max(min_capacity, int(capacity_factor * top_k * g / n_experts))
+    capacity = min(capacity, g)
+
+    # position of each (token, choice) in its expert's per-group queue;
+    # priority: choice 0 of all tokens first, then choice 1, ...
+    onehot = jax.nn.one_hot(gate_idx, n_experts, dtype=_F32)  # (G, g, k, E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, top_k * g, n_experts)
+    pos_in_e = jnp.cumsum(flat, axis=1) - flat  # (G, k*g, E)
+    pos_in_e = pos_in_e.reshape(G, top_k, g, n_experts).transpose(0, 2, 1, 3)
+    slot = jnp.einsum("Gtke,Gtke->Gtk", pos_in_e, onehot)  # (G, g, k)
+    keep = slot < capacity
+    gate_vals = gate_vals * keep  # dropped tokens pass through (residual adds x)
+
+    slot_oh = jax.nn.one_hot(slot.astype(jnp.int32), capacity, dtype=_F32)
+    disp = jnp.einsum("Gtke,Gtkc->Gtec", onehot * keep[..., None], slot_oh)
+    comb = jnp.einsum("Gtk,Gtke,Gtkc->Gtec", gate_vals, onehot, slot_oh)
+
+    buf = jnp.einsum("Gtec,Gtd->Gecd", disp, xt.astype(_F32))  # a2a #1
+    h = jnp.einsum("Gecd,edf->Gecf", buf, p["w1"].astype(_F32))
+    gt = jnp.einsum("Gecd,edf->Gecf", buf, p["w3"].astype(_F32))
+    h = jax.nn.silu(h) * gt
+    eout = jnp.einsum("Gecf,efd->Gecd", h, p["w2"].astype(_F32))
+    out = jnp.einsum("Gtec,Gecd->Gtd", comb, eout)  # a2a #2
+
+    if "shared" in p:
+        from repro.models.components import swiglu
+        out = out + swiglu(p["shared"], xt.astype(_F32))
+
+    # load-balance aux (Switch): E * Σ_e f_e · P_e, averaged over groups.
+    me = probs.mean(1)  # (G, E)
+    ce = onehot.sum(2).mean(1) / top_k  # fraction routed per expert, (G, E)
+    aux = n_experts * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return out.reshape(B, T, D).astype(x.dtype), aux

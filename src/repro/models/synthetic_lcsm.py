@@ -1,0 +1,61 @@
+"""The paper's §5 synthetic LCSM: M mixer levels, MLP blocks (hidden 2D,
+GELU), advance = a_M + noise (a stand-in sampler so vocabulary size is out of
+scope, exactly as in the paper)."""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import LevelSpec
+from repro.models import components as C
+
+
+class SyntheticLCSM:
+    """Engine-compatible synthetic model (see repro.core.engine.LCSMModel)."""
+
+    ctx_window = 0
+
+    def __init__(self, n_levels: int, d_model: int, *, filter_decay: float = 0.02,
+                 mlp_mult: int = 2):
+        self.M = n_levels
+        self.d = d_model
+        self.a0_width = d_model
+        self.mlp_mult = mlp_mult
+        self.filter_decay = filter_decay
+        self.levels: Sequence[LevelSpec] = tuple(
+            LevelSpec(width=d_model, conv_start=0, conv_size=d_model)
+            for _ in range(n_levels)
+        )
+
+    def init(self, key) -> Any:
+        keys = jax.random.split(key, self.M + 1)
+        return {
+            "filter_key": jax.random.key_data(keys[0]),
+            "blocks": [
+                C.init_mlp_gelu(keys[1 + l], self.d, self.mlp_mult * self.d)
+                for l in range(self.M)
+            ],
+        }
+
+    def filters(self, params, length: int):
+        key = jax.random.wrap_key_data(params["filter_key"])
+        raw = jax.random.normal(key, (self.M, length, self.d), jnp.float32)
+        t = jnp.arange(length, dtype=jnp.float32)
+        decay = jnp.exp(-self.filter_decay * t)[None, :, None]
+        rho = raw * decay / jnp.sqrt(1.0 + t)[None, :, None]
+        return [rho[l] for l in range(self.M)]
+
+    def block(self, params, level: int, b: jnp.ndarray,
+              acts: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        del acts
+        return b + C.mlp_gelu(params["blocks"][level], b)
+
+    def advance(self, params, acts: Sequence[jnp.ndarray], rng) -> tuple:
+        top = acts[self.M][:, -1]  # (B, D) — just-finalized a_M
+        noise = 0.01 * jax.random.normal(rng, top.shape, top.dtype)
+        nxt = jnp.tanh(top) + noise
+        token = jnp.zeros((top.shape[0],), jnp.int32)
+        return nxt, token

@@ -1,0 +1,83 @@
+"""AdamW + cosine schedule + global-norm clipping, pure JAX pytrees.
+
+State mirrors the param pytree (m, v) plus a step counter; everything is a
+plain function usable under jit/pjit (optimizer states shard like params).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jnp.ndarray
+
+
+def adamw_init(params) -> OptState:
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=_F32), params)
+    return OptState(m=z, v=jax.tree.map(jnp.copy, z), step=jnp.zeros((), jnp.int32))
+
+
+def cosine_lr(cfg: AdamWConfig, step) -> jnp.ndarray:
+    step = step.astype(_F32)
+    warm = step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm_clip(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(_F32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(_F32) * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, st: OptState):
+    """Returns (new_params, new_state, metrics dict)."""
+    grads, gnorm = global_norm_clip(grads, cfg.clip_norm)
+    step = st.step + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(_F32)
+    bc2 = 1 - b2 ** step.astype(_F32)
+
+    def upd(p, g, m, v):
+        g = g.astype(_F32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat, vhat = m / bc1, v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(_F32)
+        return (p.astype(_F32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(st.m)
+    flat_v = treedef.flatten_up_to(st.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), {"lr": lr, "grad_norm": gnorm}

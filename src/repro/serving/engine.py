@@ -1,0 +1,128 @@
+"""Batched autoregressive serving with continuous batching.
+
+Fixed-slot design (the vLLM-style scheduler reduced to its core): the
+engine owns B slots, each bound to one in-flight request.  Every call to
+``step()`` advances ALL slots by one token with a single jitted
+``decode_step``.  Finished slots (EOS or max_new) are refilled from the
+admission queue: the new request is prefilled with batch=1 and its cache
+rows written into the batched cache at that slot (pure dynamic_update_slice
+on every cache leaf) — no other slot is disturbed, no recompile (shapes are
+static in B and S).
+
+Per-family caches come from models/lm.py: KV (GQA), MLA latent, SSM state,
+cross-KV — the engine is cache-agnostic (pytree surgery only).
+LCSM archs use serving/lcsm_backend.py instead (FlashEngine decode).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import LM
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (P,) int32
+    max_new: int
+    eos_id: int = -1                # -1: never stops early
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, n_slots: int,
+                 max_seq: int, window: int | None = None,
+                 cache_dtype=jnp.bfloat16):
+        assert cfg.family != "lcsm", "use LCSMServer for LCSM archs"
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.params = params
+        self.B = n_slots
+        self.S = max_seq
+        self.window = window
+        self.cache_dtype = cache_dtype
+        self.caches = self.model.init_caches(
+            n_slots, max_seq, dtype=cache_dtype, window=window)
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self.slots: list[Request | None] = [None] * n_slots
+        self.queue: list[Request] = []
+
+        self._decode = jax.jit(functools.partial(
+            self.model.decode_step, window=window))
+        self._prefill1 = jax.jit(functools.partial(
+            self.model.prefill, window=window, cache_dtype=cache_dtype),
+            static_argnames=("S_cap",))
+
+    # ------------------------------------------------------------ admission
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _write_slot_cache(self, slot: int, cache1) -> None:
+        """Write a batch-1 cache pytree into row ``slot`` of the batched
+        caches.  Every cache leaf is (repeat, B, ...) — layer-stacked with
+        the batch on axis 1 (pos counters are (repeat, B)) — so the merge is
+        one dynamic_update_slice per leaf at (0, slot, 0, ...)."""
+        def merge(big, one):
+            if not isinstance(big, jnp.ndarray):
+                return big
+            assert one.shape[1] == 1 and big.shape[0] == one.shape[0], (
+                f"cache leaf shapes {big.shape} vs {one.shape}")
+            idx = (0, slot) + (0,) * (big.ndim - 2)
+            return jax.lax.dynamic_update_slice(big, one.astype(big.dtype), idx)
+
+        self.caches = jax.tree.map(merge, self.caches, cache1)
+
+    def _admit(self, slot: int, req: Request) -> None:
+        P = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        last_logits, cache1 = self._prefill1(self.params, batch, S_cap=self.S)
+        self._write_slot_cache(slot, cache1)
+        nxt = int(jnp.argmax(last_logits[0]))
+        req.out.append(nxt)
+        self.tokens = self.tokens.at[slot, 0].set(nxt)
+        self.slots[slot] = req
+
+    def _fill_free_slots(self) -> None:
+        for slot in range(self.B):
+            if self.slots[slot] is None and self.queue:
+                self._admit(slot, self.queue.pop(0))
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> list[Request]:
+        """Advance every active slot one token; returns requests finished
+        this step."""
+        self._fill_free_slots()
+        if all(s is None for s in self.slots):
+            return []
+        logits, self.caches = self._decode(self.params, self.tokens, self.caches)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        finished = []
+        new_tok = np.asarray(self.tokens).copy()
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            new_tok[slot, 0] = tok
+            if tok == req.eos_id or len(req.out) >= req.max_new:
+                req.done = True
+                finished.append(req)
+                self.slots[slot] = None
+        self.tokens = jnp.asarray(new_tok)
+        return finished
+
+    def run(self) -> list[Request]:
+        """Drain queue + slots to completion."""
+        done: list[Request] = []
+        while self.queue or any(s is not None for s in self.slots):
+            done.extend(self.step())
+        return done

@@ -1,0 +1,57 @@
+"""Serving backend for LCSM (Hyena) architectures: Flash Inference decode.
+
+Wraps repro.core.engine.FlashEngine (Algorithms 2/3) behind the same
+surface as ServingEngine.  All slots advance in lockstep positions (the
+fractal tile schedule is position-indexed), so admission is batch-at-once:
+a group of prompts is prefilled together (static FFT path, Massaroli
+Lemma 2.1) and then generated together — the natural serving regime for
+the paper's algorithm, and the one its experiments use (§5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.engine import FlashEngine
+from repro.models.hyena import HyenaLCSM
+
+
+class LCSMServer:
+    def __init__(self, cfg: ModelConfig, params: Any, *, batch: int,
+                 gen_max: int, prompt_max: int = 0,
+                 strategy: str = "flash", tau_impl: str = "hybrid",
+                 direct_max: int = 32, use_pallas: bool = False):
+        assert cfg.family == "lcsm"
+        self.cfg = cfg
+        self.model = HyenaLCSM(cfg)
+        self.params = params
+        self.engine = FlashEngine(
+            self.model, params, batch=batch, gen_max=gen_max,
+            prompt_max=prompt_max, strategy=strategy, tau_impl=tau_impl,
+            direct_max=direct_max, use_pallas=use_pallas)
+        self.batch = batch
+
+    def generate(self, prompts: np.ndarray | None, n_tokens: int,
+                 seed: int = 0) -> np.ndarray:
+        """prompts: (B, P) int32 or None (generate from BOS=0).
+        Returns (B, n_tokens) int32 greedy samples."""
+        eng, model, params = self.engine, self.model, self.params
+        state = eng.init_state()
+        if prompts is not None and prompts.shape[1] > 0:
+            a0 = model.embed_tokens(params, jnp.asarray(prompts))
+            state = eng.prefill(state, a0)
+            origin = prompts.shape[1]
+        else:
+            tok0 = jnp.zeros((self.batch,), jnp.int32)
+            e = params["emb"][tok0]
+            state = eng.set_first(state, model.embed_entry(params, e))
+            origin = 0
+        state, toks = eng.generate(
+            state, n_tokens, origin=origin, rng=jax.random.PRNGKey(seed))
+        self.last_state = state
+        return np.asarray(toks)

@@ -1,0 +1,1 @@
+from repro.train_loop.loop import Trainer, make_train_step  # noqa: F401

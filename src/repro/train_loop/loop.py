@@ -1,0 +1,112 @@
+"""Training loop: jitted (loss, grad, AdamW) step + host-side driver.
+
+``make_train_step`` builds the pure step function used everywhere — the CPU
+driver jits it directly; the launcher (repro/launch/train.py) wraps the same
+function in pjit with mesh shardings; the dry-run lowers it with
+ShapeDtypeStructs.  One function, three consumers — no divergence.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.lm import LM
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(model: LM, opt_cfg: AdamWConfig) -> Callable:
+    """Builds the train step; ``cfg.train_microbatch > 1`` enables gradient
+    accumulation (scan over microbatches) — the standard memory/throughput
+    trade for the biggest configs (jamba-398B, deepseek-v3) whose per-layer
+    backward working set exceeds HBM at full per-chip batch."""
+    micro = getattr(model.cfg, "train_microbatch", 1)
+
+    def split_mb(batch):
+        from repro.models.components import sharding_ctx
+
+        dp, _ = sharding_ctx()
+        out = {}
+        for k, v in batch.items():
+            if k == "pos3":  # (3, B, T) — batch on axis 1
+                r = v.reshape(3, micro, -1, v.shape[-1]).transpose(1, 0, 2, 3)
+                spec = (None, None, dp)
+            else:
+                r = v.reshape((micro, v.shape[0] // micro) + v.shape[1:])
+                spec = (None, dp)
+            if dp is not None:
+                from jax.sharding import PartitionSpec as P
+
+                r = jax.lax.with_sharding_constraint(
+                    r, P(*spec, *([None] * (r.ndim - len(spec)))))
+            out[k] = r
+        return out
+
+    def train_step(params, opt_state, batch):
+        if micro <= 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(model.loss)(params, mb)
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, g_acc, g)), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), g0), split_mb(batch))
+            loss = loss / micro
+            grads = jax.tree.map(lambda g: g / micro, grads)
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: LM) -> Callable:
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+
+    return eval_step
+
+
+class Trainer:
+    """Single-process driver (CPU tests / examples).  Multi-pod launch lives
+    in repro/launch/train.py and reuses make_train_step under pjit."""
+
+    def __init__(self, cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.model = LM(cfg)
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        self.opt_state = adamw_init(self.params)
+        self._step = jax.jit(make_train_step(self.model, self.opt_cfg))
+
+    def fit(self, dataset, n_steps: int, *, log_every: int = 10,
+            ckpt_dir: str | None = None, ckpt_every: int = 0,
+            log_fn=print) -> list[dict]:
+        history = []
+        t0 = time.perf_counter()
+        for step in range(n_steps):
+            batch = dataset.batch(step)
+            self.params, self.opt_state, metrics = self._step(
+                self.params, self.opt_state, batch)
+            if step % log_every == 0 or step == n_steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = time.perf_counter() - t0
+                history.append(m)
+                log_fn(f"step {step:5d}  loss {m['loss']:.4f}  "
+                       f"lr {m['lr']:.2e}  gnorm {m['grad_norm']:.3f}")
+            if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+                from repro.checkpoint import save_checkpoint
+
+                save_checkpoint(ckpt_dir, step + 1,
+                                {"params": self.params, "opt": self.opt_state})
+        return history

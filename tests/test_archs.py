@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate the
+REDUCED variant of each assigned family and run one forward/train step and
+one decode step on CPU, asserting output shapes and no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models.lm import LM
+
+
+def _batch(cfg, B=2, T=16, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, T), 0, cfg.vocab),
+        "targets": jax.random.randint(ks[1], (B, T), 0, cfg.vocab),
+    }
+    if cfg.enc_layers:
+        batch["enc_frames"] = jax.random.normal(
+            ks[2], (B, cfg.enc_positions, cfg.d_model), jnp.float32)
+    if cfg.m_rope:
+        n_vis = 4
+        batch["vis_embed"] = jax.random.normal(
+            ks[3], (B, n_vis, cfg.d_model), jnp.float32) * 0.02
+        batch["pos3"] = jnp.broadcast_to(
+            jnp.arange(T + n_vis)[None, None], (3, B, T + n_vis))
+    return batch
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_smoke_train_step(name):
+    cfg = get_config(name).smoke()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), f"{name}: loss not finite"
+    gnorm = jax.tree.reduce(
+        lambda a, x: a + float(jnp.sum(jnp.abs(x))), grads, 0.0)
+    assert np.isfinite(gnorm) and gnorm > 0, f"{name}: bad grads"
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_smoke_decode_step(name):
+    cfg = get_config(name).smoke()
+    if cfg.family == "lcsm":
+        pytest.skip("lcsm decode covered by engine tests")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    # f32 caches: the CPU backend can't execute bf16×bf16→f32 dots
+    # (TPU serving uses bf16; the dry-run compiles that path).
+    caches = model.init_caches(B, S, enc_S=cfg.enc_positions, dtype=jnp.float32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    pos3 = jnp.zeros((3, B, 1), jnp.int32) if cfg.m_rope else None
+    logits, caches = model.decode_step(params, tok, caches, pos3=pos3)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    # second step must also work (cache threading)
+    logits2, _ = model.decode_step(params, tok, caches, pos3=pos3)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_smoke_prefill_matches_decode(name):
+    """Prefill then one decode step == forward over the extended sequence
+    (the KV/state cache must be exact, not approximate)."""
+    cfg = get_config(name).smoke()
+    if cfg.family == "lcsm":
+        pytest.skip("lcsm covered by engine tests")
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T, S = 2, 8, 16
+    batch = _batch(cfg, B=B, T=T)
+    last_logits, caches = model.prefill(params, batch, S, cache_dtype=jnp.float32)
+
+    nxt = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
+    pos3 = (jnp.full((3, B, 1), T + (4 if cfg.m_rope else 0), jnp.int32)
+            if cfg.m_rope else None)
+    step_logits, _ = model.decode_step(params, nxt, caches, pos3=pos3)
+
+    # reference: full forward over tokens + next token
+    batch2 = dict(batch)
+    batch2["tokens"] = jnp.concatenate([batch["tokens"], nxt], axis=1)
+    if cfg.m_rope:
+        n_vis = batch["vis_embed"].shape[1]
+        batch2["pos3"] = jnp.broadcast_to(
+            jnp.arange(T + n_vis + 1)[None, None], (3, B, T + n_vis + 1))
+    hidden, _ = model.forward(params, batch2)
+    ref_logits = model.logits(params, hidden[:, -1])
+    np.testing.assert_allclose(
+        np.asarray(step_logits, np.float32), np.asarray(ref_logits, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+def test_hyena_engine_matches_static_forward():
+    """The paper's exactness claim at the full-model level: FlashEngine
+    decode over the hyena arch reproduces the static FFT forward."""
+    from repro.core.engine import FlashEngine
+    from repro.models.hyena import HyenaLCSM
+
+    cfg = get_config("hyena").smoke()
+    model = HyenaLCSM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, n = 2, 16
+    eng = FlashEngine(model, params, batch=B, gen_max=n, strategy="flash")
+    state = eng.init_state()
+    tok0 = jnp.zeros((B,), jnp.int32)
+    e = params["emb"][tok0]
+    state = eng.set_first(state, model.embed_entry(params, e))
+    state, toks = eng.generate(state, n, rng=jax.random.PRNGKey(1))
+
+    # replay: embed the emitted token stream through the static path and
+    # compare final activations
+    a0 = state.a[0][:, :n]
+    ref = eng.forward_static(a0)
+    for l in range(1, len(ref)):
+        np.testing.assert_allclose(
+            np.asarray(state.a[l][:, :n]), np.asarray(ref[l]),
+            rtol=2e-3, atol=2e-3)
+
+
+def test_all_configs_registered():
+    from repro.configs import list_configs
+    names = list_configs()
+    assert len([n for n in names if not n.endswith("smoke")]) >= 11
+    for n in ASSIGNED:
+        assert n in names

@@ -1,0 +1,157 @@
+"""Tiling schedule + τ implementation correctness (paper §3.1, Lemma 1,
+Propositions 1-2, Appendix C)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import tau as tau_mod
+from repro.core import tiling
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ----------------------------------------------------------------- schedule
+@pytest.mark.parametrize("L", [2, 4, 8, 16, 64, 128])
+def test_tiling_covers_exactly_once(L):
+    tiling.validate_tiling(L)
+
+
+@given(st.integers(min_value=2, max_value=96))
+@settings(max_examples=25, deadline=None)
+def test_tiling_covers_non_pow2(L):
+    tiling.validate_tiling(L)
+
+
+def test_tile_histogram_matches_proposition_1():
+    # Proposition 1: 2^(P-1-q) tiles of side 2^q.
+    L = 256
+    hist = tiling.tile_histogram(L)
+    P = 8
+    for q in range(P):
+        assert hist[1 << q] == 1 << (P - 1 - q)
+
+
+def test_tile_size_percentile_claim():
+    # §5.1: 93.75% of positions use tile side U <= 8.
+    L = 4096
+    hist = tiling.tile_histogram(L)
+    small = sum(n for u, n in hist.items() if u <= 8)
+    frac = small / sum(hist.values())
+    assert abs(frac - 0.9375) < 0.0005
+
+
+def test_flops_model_quasilinear():
+    # FLOPs(2L)/FLOPs(L) -> ~2 * (log(2L)/log L)^2 << 4 (the quadratic ratio).
+    f1 = tiling.theoretical_tau_flops(1 << 12)
+    f2 = tiling.theoretical_tau_flops(1 << 13)
+    n1 = tiling.naive_flops(1 << 12)
+    n2 = tiling.naive_flops(1 << 13)
+    assert f2 / f1 < 2.6
+    assert n2 / n1 > 3.9
+    assert f1 < n1  # already ahead at 4k
+
+
+def test_activation_touch_quasilinear():
+    L = 1 << 14
+    touched = tiling.activation_positions_touched(L)
+    assert touched < 2 * L * np.log2(L)  # O(L log L)
+    assert touched > L  # sanity
+
+
+# ------------------------------------------------------------------------ τ
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+@pytest.mark.parametrize("U", [1, 2, 4, 8, 32, 128])
+@pytest.mark.parametrize("C", [1, 3, 8])
+def test_tau_fft_matches_direct(U, C):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(U * 100 + C))
+    y = _rand(k1, 2, U, C)  # batch 2
+    rho = _rand(k2, 2 * U, C)
+    out_d = tau_mod.tau_direct(y, rho)
+    out_f = tau_mod.tau_fft(y, rho2u=rho)
+    np.testing.assert_allclose(out_d, out_f, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("U", [4, 64])
+def test_tau_precomputed_dft_path(U):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    y = _rand(k1, 3, U, 5)
+    rho = _rand(k2, 4 * U, 5)  # long filter; prefix used
+    dfts = tau_mod.make_rho_dfts(rho, U)
+    out = tau_mod.tau_fft(y, rho_f=dfts[U])
+    ref = tau_mod.tau_direct(y, rho[: 2 * U])
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_tau_equals_definition():
+    """out[t] = sum_s y[s] * rho[U + t - s] — checked against a python loop."""
+    U, C = 8, 2
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    y = np.asarray(_rand(k1, 1, U, C))
+    rho = np.asarray(_rand(k2, 2 * U, C))
+    want = np.zeros((1, U, C), np.float32)
+    for t in range(U):
+        for s in range(U):
+            want[0, t] += y[0, s] * rho[U + t - s]
+    got = tau_mod.tau_direct(jnp.asarray(y), jnp.asarray(rho))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    st.integers(min_value=1, max_value=20),  # l
+    st.integers(min_value=0, max_value=12),  # r - l
+    st.integers(min_value=0, max_value=10),  # l' - r
+    st.integers(min_value=0, max_value=12),  # r' - l'
+)
+@settings(max_examples=40, deadline=None)
+def test_tau_ranges_lemma1(l, dr, dlp, drp):
+    r = l + dr
+    lp = r + dlp
+    rp = lp + drp
+    L = rp + 4
+    key = jax.random.PRNGKey(l * 7 + dr * 5 + dlp * 3 + drp)
+    k1, k2 = jax.random.split(key)
+    y = _rand(k1, 1, L, 2)
+    rho = _rand(k2, L, 2)
+    got = np.asarray(tau_mod.tau_ranges(y, rho, l, r, lp, rp))
+    yn, rn = np.asarray(y), np.asarray(rho)
+    want = np.zeros((1, rp - lp + 1, 2), np.float32)
+    for t in range(lp, rp + 1):
+        for i in range(l, r + 1):
+            want[0, t - lp] += yn[0, i - 1] * rn[t - i]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("T,out_len", [(8, 8), (16, 16), (8, 32), (5, 12)])
+def test_conv_causal_fft_vs_direct(T, out_len):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    y = _rand(k1, 2, T, 4)
+    rho = _rand(k2, out_len, 4)
+    got = tau_mod.conv_causal_fft(y, rho[None], out_len=out_len)
+    yn, rn = np.asarray(y), np.asarray(rho)
+    want = np.zeros((2, out_len, 4), np.float32)
+    for t in range(out_len):
+        for s in range(min(T, t + 1)):
+            want[:, t] += yn[:, s] * rn[t - s]
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_tau_broadcast_group_axis():
+    """Stacked levels (G,1,2U,C) filters vs (G,B,U,C) inputs broadcast."""
+    G, B, U, C = 3, 2, 4, 5
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    y = _rand(k1, G, B, U, C)
+    rho = _rand(k2, G, 1, 2 * U, C)
+    d = tau_mod.tau_direct(y, rho)
+    f = tau_mod.tau_fft(y, rho2u=rho)
+    assert d.shape == (G, B, U, C)
+    np.testing.assert_allclose(d, f, rtol=1e-4, atol=1e-4)
+    for g in range(G):
+        ref = tau_mod.tau_direct(y[g], rho[g, 0])
+        np.testing.assert_allclose(d[g], ref, rtol=1e-5, atol=1e-5)

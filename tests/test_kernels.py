@@ -1,0 +1,160 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU).
+
+Per instructions: sweep shapes/dtypes, assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {
+    jnp.float32: dict(rtol=1e-5, atol=1e-5),
+    jnp.bfloat16: dict(rtol=2e-2, atol=2e-2),
+}
+
+
+# -------------------------------------------------------------- tile_conv
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("U", [1, 2, 4, 8, 16, 64])
+@pytest.mark.parametrize("C", [1, 7, 128, 200])
+def test_tile_conv_shapes_dtypes(U, C, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(U * 1000 + C))
+    y = _rand(k1, (2, U, C), dtype)
+    rho = _rand(k2, (2 * U, C), jnp.float32)
+    got = ops.tile_conv(y, rho)
+    want = ref.tile_conv_ref(y, rho)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_tile_conv_group_batch_broadcast():
+    G, B, U, C = 3, 2, 8, 5
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    y = _rand(k1, (G, B, U, C), jnp.float32)
+    rho = _rand(k2, (G, 1, 2 * U, C), jnp.float32)
+    got = ops.tile_conv(y, rho)
+    want = ref.tile_conv_ref(y, rho)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(
+    st.sampled_from([1, 2, 4, 8, 32]),
+    st.integers(min_value=1, max_value=130),
+    st.integers(min_value=1, max_value=3),
+)
+@settings(max_examples=12, deadline=None)
+def test_tile_conv_property(U, C, B):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(U + C * 31 + B))
+    y = _rand(k1, (B, U, C), jnp.float32)
+    rho = _rand(k2, (2 * U, C), jnp.float32)
+    np.testing.assert_allclose(
+        ops.tile_conv(y, rho), ref.tile_conv_ref(y, rho), rtol=1e-5, atol=1e-5)
+
+
+def test_tile_conv_matches_tau_direct():
+    from repro.core import tau as tau_mod
+    U, C = 16, 64
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    y = _rand(k1, (4, U, C), jnp.float32)
+    rho = _rand(k2, (2 * U, C), jnp.float32)
+    np.testing.assert_allclose(
+        ops.tile_conv(y, rho), tau_mod.tau_direct(y, rho), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- short_conv
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,K,block_t", [(4, 4, 128), (17, 3, 8), (128, 4, 32),
+                                         (300, 4, 128)])
+@pytest.mark.parametrize("C", [3, 128, 150])
+def test_short_conv_shapes_dtypes(T, K, block_t, C, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(T * 7 + K + C), 3)
+    x = _rand(k1, (2, T, C), dtype)
+    w = _rand(k2, (K, C), jnp.float32)
+    b = _rand(k3, (C,), jnp.float32)
+    got = ops.short_conv(x, w, b, block_t=block_t)
+    want = ref.short_conv_ref(x, w, b)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_short_conv_no_bias_causality():
+    # Impulse response: output must not see the future.
+    T, C, K = 32, 128, 4
+    w = jnp.ones((K, C), jnp.float32)
+    x = jnp.zeros((1, T, C)).at[0, 10].set(1.0)
+    y = np.asarray(ops.short_conv(x, w))
+    assert np.all(y[0, :10] == 0)           # nothing before the impulse
+    assert np.all(y[0, 10:14] == 1.0)       # K taps after it
+    assert np.all(y[0, 14:] == 0)
+
+
+@given(st.integers(min_value=1, max_value=64), st.integers(min_value=1, max_value=4))
+@settings(max_examples=10, deadline=None)
+def test_short_conv_property(T, K):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(T * 5 + K))
+    x = _rand(k1, (1, T, 16), jnp.float32)
+    w = _rand(k2, (K, 16), jnp.float32)
+    np.testing.assert_allclose(
+        ops.short_conv(x, w), ref.short_conv_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------- decode_attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,chunk", [(8, 8), (100, 32), (257, 64), (1024, 256)])
+@pytest.mark.parametrize("K,G,hd", [(1, 1, 8), (2, 4, 16), (8, 2, 128)])
+def test_decode_attention_shapes_dtypes(S, chunk, K, G, hd, dtype):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(S + K * 7 + hd), 4)
+    q = _rand(ks[0], (B, K, G, hd), dtype)
+    k = _rand(ks[1], (B, S, K, hd), dtype)
+    v = _rand(ks[2], (B, S, K, hd), dtype)
+    pos = jax.random.randint(ks[3], (B,), 1, S + 1)
+    got = ops.decode_attention(q, k, v, pos, chunk=chunk)
+    want = ref.decode_attention_ref(q, k, v, pos)
+    assert got.shape == want.shape and got.dtype == want.dtype
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **TOL[dtype])
+
+
+def test_decode_attention_respects_validity():
+    """Entries at positions >= pos must not influence the output."""
+    B, K, G, hd, S = 1, 1, 2, 8, 64
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = _rand(ks[0], (B, K, G, hd), jnp.float32)
+    k = _rand(ks[1], (B, S, K, hd), jnp.float32)
+    v = _rand(ks[2], (B, S, K, hd), jnp.float32)
+    pos = jnp.asarray([17])
+    base = ops.decode_attention(q, k, v, pos, chunk=16)
+    # poison the invalid tail
+    k2 = k.at[:, 17:].set(1e3)
+    v2 = v.at[:, 17:].set(-1e3)
+    poisoned = ops.decode_attention(q, k2, v2, pos, chunk=16)
+    np.testing.assert_allclose(base, poisoned, rtol=1e-6, atol=1e-6)
+
+
+@given(st.integers(min_value=1, max_value=96), st.sampled_from([8, 32]))
+@settings(max_examples=8, deadline=None)
+def test_decode_attention_property(pos_v, chunk):
+    B, K, G, hd, S = 1, 2, 2, 8, 96
+    ks = jax.random.split(jax.random.PRNGKey(pos_v), 3)
+    q = _rand(ks[0], (B, K, G, hd), jnp.float32)
+    k = _rand(ks[1], (B, S, K, hd), jnp.float32)
+    v = _rand(ks[2], (B, S, K, hd), jnp.float32)
+    pos = jnp.asarray([pos_v])
+    np.testing.assert_allclose(
+        ops.decode_attention(q, k, v, pos, chunk=chunk),
+        ref.decode_attention_ref(q, k, v, pos), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) on system invariants beyond the core
+tiling sweeps in test_core_tiling.py."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tiling import (activation_positions_touched,
+                               largest_pow2_divisor, tile_schedule)
+
+
+# ------------------------------------------------------------------ tiling
+@given(st.integers(min_value=1, max_value=1 << 20))
+@settings(max_examples=60, deadline=None)
+def test_lowbit_properties(i):
+    U = largest_pow2_divisor(i)
+    assert i % U == 0
+    assert (i // U) % 2 == 1          # cofactor odd (U is the max power)
+    assert U & (U - 1) == 0           # power of two
+
+
+@given(st.integers(min_value=2, max_value=256))
+@settings(max_examples=30, deadline=None)
+def test_schedule_cell_count(L):
+    """Tiles + diagonal must cover exactly the lower triangle's cell count
+    (a pure counting identity — complements the O(L²) exact-cover test)."""
+    cells = sum(t.side * t.out_side for t in tile_schedule(L))
+    assert cells + L == L * (L + 1) // 2
+
+
+@given(st.integers(min_value=4, max_value=14))
+@settings(max_examples=11, deadline=None)
+def test_touch_count_monotone_quasilinear(P):
+    L = 1 << P
+    t = activation_positions_touched(L)
+    # O(L log L) bounds with explicit constants
+    assert L - 1 <= t <= L * P
+
+
+# --------------------------------------------------------------- optimizer
+@given(st.floats(min_value=1e-4, max_value=1e-1),
+       st.integers(min_value=1, max_value=5))
+@settings(max_examples=10, deadline=None)
+def test_adamw_update_is_bounded(lr, steps):
+    """AdamW step size is bounded by ~lr regardless of gradient scale."""
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    cfg = AdamWConfig(lr=lr, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.zeros((4,))}
+    stt = adamw_init(params)
+    for s in range(steps):
+        g = {"w": jnp.full((4,), 10.0 ** s)}  # wildly growing grads
+        params, stt, _ = adamw_update(cfg, params, g, stt)
+        assert float(jnp.max(jnp.abs(params["w"]))) <= 1.05 * lr * (s + 1)
+
+
+# ----------------------------------------------------------------- serving
+@given(st.integers(min_value=1, max_value=3), st.integers(min_value=1, max_value=4))
+@settings(max_examples=4, deadline=None)
+def test_serving_order_invariance(n_slots, n_reqs):
+    """Slot count must not change any request's output tokens."""
+    from repro.configs import get_config
+    from repro.models.lm import LM
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("qwen2.5-3b").smoke()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, cfg.vocab, (3,)).astype(np.int32)
+               for _ in range(n_reqs)]
+
+    def run(slots):
+        eng = ServingEngine(cfg, params, n_slots=slots, max_seq=16,
+                            cache_dtype=jnp.float32)
+        reqs = [Request(uid=i, prompt=p, max_new=4)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        return {r.uid: tuple(r.out) for r in reqs}
+
+    assert run(n_slots) == run(max(1, n_slots - 1) if n_slots > 1 else n_slots + 1)
+
+
+# -------------------------------------------------------------- data plane
+@given(st.integers(min_value=0, max_value=1000), st.integers(min_value=1, max_value=8))
+@settings(max_examples=20, deadline=None)
+def test_data_host_split_partition(step, n_hosts):
+    """Host shards partition the global batch for any host count that
+    divides it."""
+    from repro.configs import get_config
+    from repro.data import SyntheticLMDataset
+
+    cfg = get_config("qwen2.5-3b").smoke()
+    B = 8
+    if B % n_hosts:
+        return
+    full = SyntheticLMDataset(cfg, global_batch=B, seq_len=4).batch(step)["tokens"]
+    parts = [SyntheticLMDataset(cfg, global_batch=B, seq_len=4,
+                                host_id=h, n_hosts=n_hosts).batch(step)["tokens"]
+             for h in range(n_hosts)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)

@@ -1,0 +1,123 @@
+"""Substrate tests: data determinism, optimizer, checkpointing, trainer,
+serving engine (continuous batching exactness)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import SyntheticLMDataset
+from repro.models.lm import LM
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_lr
+
+
+def test_data_deterministic_and_host_sharded():
+    cfg = get_config("qwen2.5-3b").smoke()
+    d1 = SyntheticLMDataset(cfg, global_batch=4, seq_len=8, seed=3)
+    d2 = SyntheticLMDataset(cfg, global_batch=4, seq_len=8, seed=3)
+    np.testing.assert_array_equal(d1.batch(5)["tokens"], d2.batch(5)["tokens"])
+    assert not np.array_equal(d1.batch(5)["tokens"], d1.batch(6)["tokens"])
+    # two-host split reproduces the single-host global batch
+    h0 = SyntheticLMDataset(cfg, global_batch=4, seq_len=8, seed=3, host_id=0, n_hosts=2)
+    h1 = SyntheticLMDataset(cfg, global_batch=4, seq_len=8, seed=3, host_id=1, n_hosts=2)
+    full = d1.batch(2)["tokens"]
+    np.testing.assert_array_equal(
+        np.concatenate([h0.batch(2)["tokens"], h1.batch(2)["tokens"]]), full)
+    # targets are tokens shifted by one
+    b = d1.batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+
+
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100, weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    st = adamw_init(params)
+    for _ in range(60):
+        g = {"w": 2 * params["w"]}
+        params, st, _ = adamw_update(cfg, params, g, st)
+    assert float(jnp.abs(params["w"]).max()) < 0.4
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(cosine_lr(cfg, jnp.asarray(s))) for s in range(101)]
+    assert lrs[0] == 0.0 and abs(lrs[10] - 1.0) < 1e-6
+    assert lrs[100] == pytest.approx(0.1, abs=1e-6)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))  # monotone decay
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nest": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "t": (jnp.zeros((2,), jnp.int32), jnp.full((1,), 7.0))}
+    save_checkpoint(str(tmp_path), 42, tree)
+    assert latest_step(str(tmp_path)) == 42
+    like = jax.tree.map(jnp.zeros_like, tree)
+    out = restore_checkpoint(str(tmp_path), 42, like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_trainer_loss_decreases():
+    from repro.train_loop import Trainer
+
+    cfg = get_config("qwen2.5-3b").smoke()
+    tr = Trainer(cfg, AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=60))
+    # overfit a single repeated batch: loss must fall substantially
+    class OneBatch:
+        def __init__(self, cfg):
+            self._b = SyntheticLMDataset(cfg, global_batch=4, seq_len=16).batch(0)
+        def batch(self, step):
+            return self._b
+    hist = tr.fit(OneBatch(cfg), 40, log_every=39, log_fn=lambda *_: None)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.5
+
+
+def test_serving_continuous_batching_matches_forward():
+    """Requests admitted at different times into different slots must emit
+    exactly the tokens a lone greedy decode would."""
+    from repro.serving import Request, ServingEngine
+
+    cfg = get_config("qwen2.5-3b").smoke()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, n_slots=2, max_seq=32,
+                        cache_dtype=jnp.float32)
+
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab, size=(p,)).astype(np.int32)
+               for p in (3, 5, 4)]
+    reqs = [Request(uid=i, prompt=p, max_new=6) for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 3 and all(len(r.out) == 6 for r in done)
+
+    # reference: sequential greedy decode per prompt
+    for r in reqs:
+        toks = list(r.prompt)
+        for _ in range(6):
+            batch = {"tokens": jnp.asarray(np.asarray(toks, np.int32))[None]}
+            hidden, _ = model.forward(params, batch)
+            lg = model.logits(params, hidden[:, -1])
+            toks.append(int(jnp.argmax(lg[0])))
+        assert toks[len(r.prompt):] == r.out, f"req {r.uid} diverged"
+
+
+def test_lcsm_server_generates():
+    from repro.serving import LCSMServer
+
+    cfg = get_config("hyena").smoke()
+    from repro.models.hyena import HyenaLCSM
+    params = HyenaLCSM(cfg).init(jax.random.PRNGKey(0))
+    srv = LCSMServer(cfg, params, batch=2, gen_max=8)
+    toks = srv.generate(None, 8)
+    assert toks.shape == (2, 8)
+    # prompt path
+    prompts = np.zeros((2, 3), np.int32)
+    toks2 = srv.generate(prompts, 5)
+    assert toks2.shape == (2, 5)
