@@ -1,11 +1,16 @@
 """Serving example: continuous batching over a mixed request stream.
 
-Submits requests with different prompt/output lengths to the fixed-slot
-ServingEngine (2 slots, 8 requests) — slots refill as requests finish,
-exactly the vLLM-style admission loop — then verifies every emitted stream
-against an independent one-at-a-time greedy decode.
+Submits requests with different prompt/output lengths to a fixed-slot
+server (slots refill as requests finish — the vLLM-style admission loop),
+then verifies every emitted stream against an independent one-at-a-time
+greedy decode.  Works for both backend families through ``make_server``:
 
     PYTHONPATH=src python examples/serve_batched.py --arch qwen2.5-3b
+    PYTHONPATH=src python examples/serve_batched.py --arch hyena
+
+The hyena path routes through the Flash-Inference LCSMServer, whose tile
+schedule is per-slot — each request runs its own Algorithm-2 schedule
+while sharing the batched red pass and per-tile-side gray dispatches.
 """
 
 import argparse
@@ -16,8 +21,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.models.lm import LM
-from repro.serving import Request, ServingEngine
+from repro.serving import Request, make_server
+
+PROMPT_MAX, GEN_MAX = 8, 16
+
+
+def _reference_decode(cfg, params, prompt, n):
+    """Isolated batch-1 greedy decode of ``prompt`` for ``n`` tokens."""
+    if cfg.family == "lcsm":
+        from repro.serving.lcsm_backend import isolated_decode
+
+        # same prompt_max/gen_max as the server => same Lbuf => identical
+        # length-normalized implicit filters.
+        return isolated_decode(cfg, params, prompt, n,
+                               prompt_max=PROMPT_MAX, gen_max=GEN_MAX)
+    from repro.models.lm import LM
+
+    model = LM(cfg)
+    toks = list(prompt)
+    for _ in range(n):
+        hidden, _ = model.forward(params, {"tokens": jnp.asarray(
+            np.asarray(toks, np.int32))[None]})
+        toks.append(int(jnp.argmax(model.logits(params, hidden[:, -1])[0])))
+    return toks[len(prompt):]
 
 
 def main():
@@ -28,15 +54,21 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
-    model = LM(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    eng = ServingEngine(cfg, params, n_slots=args.slots, max_seq=64,
-                        cache_dtype=jnp.float32)
+    if cfg.family == "lcsm":
+        from repro.models.hyena import HyenaLCSM
+        params = HyenaLCSM(cfg).init(jax.random.PRNGKey(0))
+    else:
+        from repro.models.lm import LM
+        params = LM(cfg).init(jax.random.PRNGKey(0))
+    eng = make_server(cfg, params, n_slots=args.slots, max_seq=64,
+                      prompt_max=PROMPT_MAX, gen_max=GEN_MAX,
+                      **({} if cfg.family == "lcsm"
+                         else {"cache_dtype": jnp.float32}))
 
     rng = np.random.RandomState(0)
     reqs = []
     for i in range(args.n_requests):
-        p_len = int(rng.randint(2, 8))
+        p_len = int(rng.randint(2, PROMPT_MAX))
         reqs.append(Request(uid=i,
                             prompt=rng.randint(0, cfg.vocab, (p_len,)).astype(np.int32),
                             max_new=int(rng.randint(4, 10))))
@@ -51,12 +83,8 @@ def main():
 
     # verify against isolated greedy decode
     for r in sorted(done, key=lambda r: r.uid):
-        toks = list(r.prompt)
-        for _ in range(len(r.out)):
-            hidden, _ = model.forward(params, {"tokens": jnp.asarray(
-                np.asarray(toks, np.int32))[None]})
-            toks.append(int(jnp.argmax(model.logits(params, hidden[:, -1])[0])))
-        ok = toks[len(r.prompt):] == r.out
+        ref = _reference_decode(cfg, params, r.prompt, len(r.out))
+        ok = ref == r.out
         print(f"req {r.uid}: {len(r.prompt)}-tok prompt -> {r.out}  "
               f"{'✓' if ok else '✗ MISMATCH'}")
         assert ok

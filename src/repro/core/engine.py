@@ -21,10 +21,17 @@ Strategies (for the paper's baselines, §5):
 All three share the identical red-cell/block/advance path, so measured
 differences isolate the mixer algorithm, as in the paper's Figure 2.
 
-Shape-staticness: one jitted red-pass (position is a traced scalar) plus one
-jitted gray-tile function *per tile side* — log2(L) specializations in total,
-the XLA analogue of the paper's per-tile-size precompiled FlashFFT configs
-(§5.4, engineering contribution #2).
+Positions are **per-slot**: every jitted piece takes a traced ``(B,)``
+vector of positions, so each batch row (serving slot) can sit at its own
+point of its own tile schedule.  Lockstep generation (``generate``) passes
+a broadcast vector; the continuous-batching server (serving/lcsm_backend)
+passes genuinely different per-slot positions and drives gray tiles per
+(slot, tile-side) through ``gray_step``'s slot mask.
+
+Shape-staticness: one jitted red-pass (positions are a traced vector) plus
+one jitted gray-tile function *per tile side* — log2(L) specializations in
+total, the XLA analogue of the paper's per-tile-size precompiled FlashFFT
+configs (§5.4, engineering contribution #2).
 """
 
 from __future__ import annotations
@@ -84,16 +91,36 @@ class LCSMModel(Protocol):
 
 
 class EngineState(NamedTuple):
+    """Pure buffer state.  Positions are NOT part of it — every jitted piece
+    takes an explicit per-slot position vector, and the caller (lockstep
+    ``generate`` or the continuous-batching server) owns the schedule."""
+
     a: tuple[jnp.ndarray, ...]  # level l: (B, Lbuf, width_l)
     b: tuple[jnp.ndarray, ...]  # level l (1-based, stored at l-1): (B, Lbuf, conv_size_l)
-    pos: jnp.ndarray            # next position to finalize (int32 scalar)
 
 
-def _window(arr: jnp.ndarray, start, length: int) -> jnp.ndarray:
-    """dynamic_slice along axis 1 with static length."""
-    B = arr.shape[0]
-    return jax.lax.dynamic_slice(
-        arr, (0, start, 0), (B, length, arr.shape[2]))
+def _as_pos_vec(p, batch: int) -> jnp.ndarray:
+    """Normalize a position argument to a (batch,) int32 vector."""
+    p = jnp.asarray(p, jnp.int32)
+    if p.ndim == 0:
+        p = jnp.full((batch,), p, jnp.int32)
+    return p
+
+
+def _slice_rows(arr: jnp.ndarray, p: jnp.ndarray, start_ch: int,
+                length: int, n_ch: int) -> jnp.ndarray:
+    """Per-slot dynamic_slice: row b gets arr[b, p[b] : p[b]+length,
+    start_ch : start_ch+n_ch].  Starts clamp like dynamic_slice."""
+    return jax.vmap(
+        lambda row, q: jax.lax.dynamic_slice(
+            row, (q, start_ch), (length, n_ch)))(arr, p)
+
+
+def _update_rows(arr: jnp.ndarray, p: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot dynamic_update_slice of val[b] at (p[b], 0)."""
+    return jax.vmap(
+        lambda row, q, v: jax.lax.dynamic_update_slice(row, v, (q, 0))
+    )(arr, p, val)
 
 
 class FlashEngine:
@@ -157,6 +184,10 @@ class FlashEngine:
         self._jit_gray: dict[int, Callable] = {}
         self._jit_lazy = jax.jit(self._lazy_fill)
         self._jit_eager = jax.jit(self._eager_push)
+        # prompt length is a shape, so jax.jit retraces per distinct P —
+        # the LCSM analogue of ServingEngine's per-length prefill cache.
+        self._jit_prefill = jax.jit(self._prefill_rows)
+        self._jit_prefill_slot = jax.jit(self._prefill_slot_impl)
 
     # ------------------------------------------------------------------ state
     def init_state(self) -> EngineState:
@@ -169,7 +200,7 @@ class FlashEngine:
             jnp.zeros((self.batch, self.Lbuf, s.conv_size), jnp.float32)
             for s in m.levels
         )
-        return EngineState(a=a, b=b, pos=jnp.int32(0))
+        return EngineState(a=a, b=b)
 
     def set_first(self, state: EngineState, a0_first: jnp.ndarray) -> EngineState:
         a = list(state.a)
@@ -177,55 +208,50 @@ class FlashEngine:
         return state._replace(a=tuple(a))
 
     # ------------------------------------------------------- red cells + block
-    def _acts_windows(self, a: Sequence[jnp.ndarray], p, T: int):
+    def _acts_windows(self, a: Sequence[jnp.ndarray], p: jnp.ndarray, T: int):
+        """Per-slot activation windows [p_b - w, p_b + T - 1] (left-padded
+        with zeros when p_b < w, matching the static path's zero padding).
+
+        p: (B,) int32.  Each returned window is (B, w+T, width)."""
         w = self.model.ctx_window
-        # window [p - w, p + T - 1]; clamp via buffer padding: positions < 0
-        # read garbage-zeros from start (buffers zero-initialized, and blocks
-        # only consume weights * those entries — matches zero left-padding).
         start = jnp.maximum(p - w, 0)
-        shift_ok = p >= w  # when p < w the window is shorter; emulate pad
+        k = jnp.maximum(w - p, 0)  # per-slot left zero-pad
         wins = []
         for arr in a:
-            win = _window(arr, start, w + T)
-            # if p < w, roll so that index w+T-1 still aligns with position
-            # p+T-1: shift right by (w - p) and zero-fill the head.
-            def pad_case(win=win, arr=arr):
-                k = w - p
-                rolled = jnp.roll(win, k, axis=1)
-                mask = jnp.arange(w + T)[None, :, None] >= k
+            def one(row, s, kk):
+                win = jax.lax.dynamic_slice(
+                    row, (s, 0), (w + T, row.shape[1]))
+                # shift right by kk and zero-fill the head so index w+T-1
+                # always aligns with position p+T-1 (no-op when kk == 0).
+                rolled = jnp.roll(win, kk, axis=0)
+                mask = jnp.arange(w + T)[:, None] >= kk
                 return jnp.where(mask, rolled, 0)
-            win = jax.lax.cond(shift_ok, lambda win=win: win, pad_case)
-            wins.append(win)
+            wins.append(jax.vmap(one)(arr, start, k))
         return wins
 
     def _red_pass(self, params, state: EngineState, p, rng):
-        """Finalize position p across all levels, then advance (sample)."""
+        """Finalize per-slot positions p (B,) across all levels, then advance
+        (sample) every slot."""
         m = self.model
         a = list(state.a)
         b = list(state.b)
         for l, spec in enumerate(m.levels):
-            y_p = jax.lax.dynamic_slice(
-                a[l], (0, p, spec.conv_start), (self.batch, 1, spec.conv_size)
-            )  # conv input at p, from a[l-1] == a list index l
-            b_p = jax.lax.dynamic_slice(
-                b[l], (0, p, 0), (self.batch, 1, spec.conv_size))
+            y_p = _slice_rows(a[l], p, spec.conv_start, 1, spec.conv_size)
+            b_p = _slice_rows(b[l], p, 0, 1, spec.conv_size)
             b_p = b_p + y_p.astype(jnp.float32) * self._rho0[l]
             acts = self._acts_windows(a, p, 1)
             out = m.block(params, l, b_p.astype(self.dtype), acts)  # (B,1,width)
-            a[l + 1] = jax.lax.dynamic_update_slice(
-                a[l + 1], out.astype(self.dtype), (0, p, 0))
+            a[l + 1] = _update_rows(a[l + 1], p, out.astype(self.dtype))
         acts = self._acts_windows(a, p, 1)
         a0_next, token = m.advance(params, acts, rng)
         # dynamic_update_slice clamps out-of-range starts, which would silently
-        # overwrite the last slot at the horizon — guard the final write.
-        a[0] = jax.lax.cond(
-            p + 1 < self.Lbuf,
-            lambda a0: jax.lax.dynamic_update_slice(
-                a0, a0_next[:, None, :].astype(self.dtype), (0, p + 1, 0)),
-            lambda a0: a0,
-            a[0],
-        )
-        return EngineState(a=tuple(a), b=tuple(b), pos=p + 1), token
+        # overwrite the last row at the horizon — guard the final write per slot.
+        def write_next(row, q, v, ok):
+            new = jax.lax.dynamic_update_slice(row, v[None], (q + 1, 0))
+            return jnp.where(ok, new, row)
+        a[0] = jax.vmap(write_next)(
+            a[0], p, a0_next.astype(self.dtype), p + 1 < self.Lbuf)
+        return EngineState(a=tuple(a), b=tuple(b)), token
 
     # ------------------------------------------------------------- gray tiles
     def _tau(self, y, rho2u, rho_f):
@@ -242,21 +268,27 @@ class FlashEngine:
             return kops.tile_conv(y, rho2u)
         return tau_mod.tau_fft(y, rho2u=rho2u, rho_f=rho_f)
 
-    def _gray_tile(self, state: EngineState, p, *, U: int):
-        """Contribution of a[., p-U+1 .. p] to b[., p+1 .. p+U] (tile side U,
-        static).  Levels batched per conv-width group (Algorithm 3)."""
+    def _gray_tile(self, state: EngineState, p, mask, *, U: int):
+        """Per-slot contribution of a[b, p_b-U+1 .. p_b] to
+        b[b, p_b+1 .. p_b+U] (tile side U, static).  Levels batched per
+        conv-width group (Algorithm 3); slots with the same unlocked tile
+        side share one τ evaluation.  ``mask`` (B,) bool selects which
+        slots the tile applies to — masked-out rows are left untouched
+        (their τ output is zeroed before the add), which is what lets the
+        continuous-batching server dispatch tiles per (slot, tile-side)
+        while other slots sit at different schedule points."""
         a = state.a
         b = list(state.b)
+        start = p - U + 1  # (B,); >= 0 for any live slot (U | rel step)
         for gi, (csize, level_ids, rho_g) in enumerate(self._groups):
             rho2u = rho_g[:, None, : 2 * U]  # (G, 1, 2U, C)
             rho_f = self._rho_dfts[gi].get(U)
             ins = []
             for l in level_ids:
                 spec = self.model.levels[l]
-                seg = jax.lax.dynamic_slice(
-                    a[l], (0, p - U + 1, spec.conv_start),
-                    (self.batch, U, spec.conv_size))
-                ins.append(seg)
+                seg = _slice_rows(a[l], start, spec.conv_start, U,
+                                  spec.conv_size)
+                ins.append(seg)  # (B, U, C)
             if self.parallel_levels:
                 y = jnp.stack(ins)  # (G, B, U, C)
                 out = self._tau(y, rho2u, rho_f)  # (G, B, U, C)
@@ -268,68 +300,122 @@ class FlashEngine:
                     for i, seg in enumerate(ins)
                 ]
             for l, o in zip(level_ids, outs):
-                cur = jax.lax.dynamic_slice(
-                    b[l], (0, p + 1, 0), (self.batch, U, csize))
-                b[l] = jax.lax.dynamic_update_slice(
-                    b[l], cur + o.astype(jnp.float32), (0, p + 1, 0))
+                o = jnp.where(mask[:, None, None], o.astype(jnp.float32), 0.0)
+                def add_tile(row, q, oo):
+                    # scatter-add so tiles straddling the buffer horizon are
+                    # clipped exactly: out-of-range outputs are zeroed (their
+                    # positions are never generated) instead of dropping the
+                    # whole tile, and the clamped index then adds 0.
+                    idx = q + 1 + jnp.arange(U)
+                    oo = jnp.where((idx < self.Lbuf)[:, None], oo, 0.0)
+                    return row.at[jnp.minimum(idx, self.Lbuf - 1)].add(oo)
+                b[l] = jax.vmap(add_tile)(b[l], p, o)
         return state._replace(b=tuple(b))
 
     # ----------------------------------------------------- baseline strategies
-    def _lazy_fill(self, state: EngineState, p, origin):
-        """Lazy: recompute b[l, p] = sum_{k<p} y_k rho_{p-k} from scratch."""
+    def _lazy_fill(self, state: EngineState, p):
+        """Lazy: recompute b[l, p_b] = sum_{k<p_b} y_k rho_{p_b-k} from the
+        whole per-slot history.  p: (B,).  (The full recompute already
+        includes any prompt prefix sitting in the buffer, so no origin
+        bookkeeping is needed — each slot's value is complete on its own.)"""
         b = list(state.b)
         idx = jnp.arange(self.Lbuf)
         for l, spec in enumerate(self.model.levels):
             y = jax.lax.dynamic_slice(
                 state.a[l], (0, 0, spec.conv_start),
                 (self.batch, self.Lbuf, spec.conv_size)).astype(jnp.float32)
-            lag = p - idx  # rho index for input position k=idx
-            valid = (lag >= 1) & (idx >= 0)
+            lag = p[:, None] - idx[None, :]  # (B, Lbuf) rho index per input k
+            valid = lag >= 1
             rvals = jnp.take(self._rho[l], jnp.where(valid, lag, 0), axis=0)
-            rvals = jnp.where(valid[:, None], rvals, 0.0)
-            contrib = jnp.einsum("blc,lc->bc", y, rvals)
-            b[l] = jax.lax.dynamic_update_slice(
-                b[l], contrib[:, None, :], (0, p, 0))
+            rvals = jnp.where(valid[..., None], rvals, 0.0)  # (B, Lbuf, C)
+            contrib = jnp.einsum("blc,blc->bc", y, rvals)
+            b[l] = _update_rows(b[l], p, contrib[:, None, :])
         return state._replace(b=tuple(b))
 
     def _eager_push(self, state: EngineState, p):
-        """Eager: push a[., p]'s contribution to every future b position."""
+        """Eager: push a[b, p_b]'s contribution to every future b position
+        of its own slot.  p: (B,)."""
         b = list(state.b)
         idx = jnp.arange(self.Lbuf)
         for l, spec in enumerate(self.model.levels):
-            y_p = jax.lax.dynamic_slice(
-                state.a[l], (0, p, spec.conv_start),
-                (self.batch, 1, spec.conv_size)).astype(jnp.float32)
-            lag = idx - p
+            y_p = _slice_rows(state.a[l], p, spec.conv_start, 1,
+                              spec.conv_size).astype(jnp.float32)
+            lag = idx[None, :] - p[:, None]  # (B, Lbuf)
             valid = lag >= 1
             rvals = jnp.take(self._rho[l], jnp.where(valid, lag, 0), axis=0)
-            rvals = jnp.where(valid[:, None], rvals, 0.0)  # (Lbuf, C)
-            b[l] = b[l] + y_p * rvals[None]
+            rvals = jnp.where(valid[..., None], rvals, 0.0)  # (B, Lbuf, C)
+            b[l] = b[l] + y_p * rvals
         return state._replace(b=tuple(b))
 
     # ---------------------------------------------------------------- prefill
-    def prefill(self, state: EngineState, a0_prompt: jnp.ndarray) -> EngineState:
-        """Teacher-forced prompt ingestion (static FFT path) + eager spill of
-        prompt contributions into all future b's (Massaroli Lemma 2.1), after
-        which the tile schedule restarts at origin = P."""
+    def _prefill_rows(self, params, a0_prompt: jnp.ndarray, rng):
+        """Teacher-forced prompt ingestion (static FFT path) on FRESH zero
+        buffers + eager spill of prompt contributions into all future b's
+        (Massaroli Lemma 2.1), then a first ``advance`` from the last prompt
+        position P-1 — so the first emitted token is conditioned on the
+        prompt, exactly like an autoregressive reference decode — whose
+        a0 entry is written at P.  Returns (a rows, b rows, token)."""
         m = self.model
-        B, P, _ = a0_prompt.shape
-        a = list(state.a)
-        b = list(state.b)
-        a[0] = a[0].at[:, :P].set(a0_prompt.astype(self.dtype))
+        Bp, P, _ = a0_prompt.shape
         w = m.ctx_window
+        a = [jnp.zeros((Bp, self.Lbuf, wd), self.dtype)
+             for wd in [m.a0_width] + [s.width for s in m.levels]]
+        b = [jnp.zeros((Bp, self.Lbuf, s.conv_size), jnp.float32)
+             for s in m.levels]
+        a[0] = a[0].at[:, :P].set(a0_prompt.astype(self.dtype))
         for l, spec in enumerate(m.levels):
-            y_full = a[l][:, :, spec.conv_start : spec.conv_start + spec.conv_size]
-            y = y_full[:, :P]
+            y = a[l][:, :P, spec.conv_start : spec.conv_start + spec.conv_size]
             # contributions of y[0..P-1] to *all* Lbuf outputs in one FFT:
             z = tau_mod.conv_causal_fft(
                 y.astype(jnp.float32), self._rho[l][None], out_len=self.Lbuf)
             b[l] = b[l] + z.astype(jnp.float32)
             b_prompt = b[l][:, :P].astype(self.dtype)
             acts = [jnp.pad(arr[:, :P], ((0, 0), (w, 0), (0, 0))) for arr in a]
-            out = m.block(self.params, l, b_prompt, acts)  # (B, P, width)
+            out = m.block(params, l, b_prompt, acts)  # (Bp, P, width)
             a[l + 1] = a[l + 1].at[:, :P].set(out.astype(self.dtype))
-        return EngineState(a=tuple(a), b=tuple(b), pos=jnp.int32(P))
+        acts = self._acts_windows(a, jnp.full((Bp,), P - 1, jnp.int32), 1)
+        a0_next, token = m.advance(params, acts, rng)
+        if P < self.Lbuf:
+            a[0] = a[0].at[:, P].set(a0_next.astype(self.dtype))
+        return a, b, token
+
+    def prefill(
+        self, a0_prompt: jnp.ndarray, rng: jax.Array | None = None
+    ) -> tuple[EngineState, jnp.ndarray]:
+        """Full-batch prompt ingestion on fresh buffers; the tile schedule
+        restarts at origin = P.  Returns (state, first sampled token (B,));
+        subsequent tokens come from ``generate(..., origin=P)``.  (Takes no
+        input state on purpose: a prompt defines the whole prefix, so any
+        previously seeded state would be discarded anyway.)"""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        assert a0_prompt.shape[0] == self.batch
+        a, b, token = self._jit_prefill(self.params, a0_prompt, rng)
+        return EngineState(a=tuple(a), b=tuple(b)), token
+
+    def prefill_slot(
+        self, state: EngineState, slot, a0_prompt: jnp.ndarray,
+        rng: jax.Array | None = None,
+    ) -> tuple[EngineState, jnp.ndarray]:
+        """Single-slot admission prefill for continuous batching: a batch-1
+        prompt prefill on fresh buffers whose full Lbuf rows are then written
+        into row ``slot`` of the batched state (one dynamic_update_slice per
+        buffer — no other slot is disturbed, and slot reuse needs no separate
+        reset because every row is overwritten).  Returns
+        (state, first sampled token, scalar)."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        assert a0_prompt.shape[0] == 1
+        return self._jit_prefill_slot(
+            self.params, state, jnp.asarray(slot, jnp.int32), a0_prompt, rng)
+
+    def _prefill_slot_impl(self, params, state: EngineState, slot,
+                           a0_prompt, rng):
+        a1, b1, token = self._prefill_rows(params, a0_prompt, rng)
+        def write_row(big, one):
+            return jax.lax.dynamic_update_slice(
+                big, one.astype(big.dtype), (slot, 0, 0))
+        a = tuple(write_row(big, one) for big, one in zip(state.a, a1))
+        b = tuple(write_row(big, one) for big, one in zip(state.b, b1))
+        return EngineState(a=a, b=b), token[0]
 
     # ----------------------------------------------------------------- decode
     def generate(
@@ -340,31 +426,55 @@ class FlashEngine:
         origin: int = 0,
         rng: jax.Array | None = None,
     ) -> tuple[EngineState, jnp.ndarray]:
-        """Host-side loop over positions (jitted pieces per tile size)."""
+        """Lockstep host-side loop over positions (jitted pieces per tile
+        side): all slots share the schedule position origin + step."""
         rng = jax.random.PRNGKey(0) if rng is None else rng
         toks = []
         for step in range(n_tokens):
             p = origin + step
+            pv = jnp.full((self.batch,), p, jnp.int32)
             rng, sub = jax.random.split(rng)
             if self.strategy == "lazy":
-                state = self._jit_lazy(state, p, origin)
-            state, tok = self._jit_red(self.params, state, p, sub)
+                state = self._jit_lazy(state, pv)
+            state, tok = self._jit_red(self.params, state, pv, sub)
             toks.append(tok)
             if self.strategy == "eager":
-                state = self._jit_eager(state, p)
+                state = self._jit_eager(state, pv)
             elif self.strategy == "flash" and step + 1 < n_tokens:
-                U = largest_pow2_divisor(step + 1)
-                fn = self._jit_gray.get(U)
-                if fn is None:
-                    fn = jax.jit(functools.partial(self._gray_tile, U=U))
-                    self._jit_gray[U] = fn
-                state = self._gray_tile_guard(fn, state, p, U)
-        return state, jnp.stack(toks, axis=1)
+                state = self._gray_tile_guard(
+                    state, p, largest_pow2_divisor(step + 1))
+        toks = (jnp.stack(toks, axis=1) if toks
+                else jnp.zeros((self.batch, 0), jnp.int32))
+        return state, toks
 
-    def _gray_tile_guard(self, fn, state, p, U):
-        if p + U >= self.Lbuf:  # tile would spill past the buffer: drop it —
-            return state        # its outputs are beyond the generation horizon.
-        return fn(state, p)
+    def _gray_tile_guard(self, state, p: int, U: int):
+        if p + 1 >= self.Lbuf:  # no output position fits in the buffer: skip.
+            return state        # (Tiles that only PARTIALLY spill are clipped
+        return self.gray_step(state, p, None, U)  # inside _gray_tile.)
+
+    # ------------------------------------------- continuous-serving step API
+    def red_step(self, state: EngineState, p, rng) -> tuple[EngineState, jnp.ndarray]:
+        """Finalize per-slot positions p ((B,) or scalar) and sample every
+        slot; returns (state, tokens (B,))."""
+        return self._jit_red(self.params, state, _as_pos_vec(p, self.batch), rng)
+
+    def lazy_step(self, state: EngineState, p) -> EngineState:
+        return self._jit_lazy(state, _as_pos_vec(p, self.batch))
+
+    def eager_step(self, state: EngineState, p) -> EngineState:
+        return self._jit_eager(state, _as_pos_vec(p, self.batch))
+
+    def gray_step(self, state: EngineState, p, mask, U: int) -> EngineState:
+        """Apply the side-U gray tile at per-slot positions p to the slots
+        selected by ``mask`` ((B,) bool; None = all).  Jitted once per tile
+        side — slot index and positions stay traced."""
+        fn = self._jit_gray.get(U)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._gray_tile, U=U))
+            self._jit_gray[U] = fn
+        mask = (jnp.ones((self.batch,), bool) if mask is None
+                else jnp.asarray(mask))
+        return fn(state, _as_pos_vec(p, self.batch), mask)
 
     # ------------------------------------------------- static (training) pass
     def forward_static(self, a0_seq: jnp.ndarray) -> list[jnp.ndarray]:

@@ -28,6 +28,18 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute", "ragged-all-to-all")
 
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: recent jaxlib returns a
+    one-element list of dicts (one per program), older versions a plain
+    dict, and it may be None.  Always returns a (possibly empty) dict."""
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
 # e.g.:  %all-reduce.7 = f32[32,1024]{1,0} all-reduce(%x), replica_groups=...
 _OP_RE = re.compile(
     r"=\s*(?:\([^)]*\)|(?P<dtype>[a-z]\d*|pred|bf16)\[(?P<dims>[\d,]*)\][^ ]*)\s+"
@@ -95,7 +107,7 @@ class Roofline:
 
 def analyze(arch: str, shape: str, mesh_name: str, chips: int, compiled,
             model_flops: float, analytic: float = 0.0, note: str = "") -> Roofline:
-    ca = compiled.cost_analysis() or {}
+    ca = cost_analysis_dict(compiled)
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     hlo = compiled.as_text()

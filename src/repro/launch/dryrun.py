@@ -42,7 +42,6 @@ def run_case(case, mesh, mesh_name: str, cfg, shape_key: str, out_dir: str,
         compiled = lowered.compile()
     t1 = time.perf_counter()
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis()
     chips = mesh.devices.size
     rf = analyze(case.arch, case.shape, mesh_name, chips, compiled,
                  model_flops=model_flops_for(cfg, shape_key),

@@ -1,10 +1,12 @@
-"""Serving launcher: batched autoregressive generation on the host mesh.
+"""Serving launcher: continuously batched autoregressive generation.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --n-requests 6 --slots 2 --max-new 8
 
-LCSM archs route through the Flash Inference engine (LCSMServer); all
-others use the continuous-batching ServingEngine with per-family caches.
+Both backend families go through ``repro.serving.make_server``: LCSM archs
+get the slot-based Flash-Inference LCSMServer (per-slot tile schedules),
+all others the ServingEngine with per-family caches.  Same admission loop
+either way: submit -> run -> slots refill as requests retire.
 """
 
 from __future__ import annotations
@@ -13,10 +15,12 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.models.lm import LM
+from repro.serving import Request, make_server
 
 
 def main():
@@ -28,45 +32,39 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--prompt-len", type=int, default=4)
+    ap.add_argument("--strategy", default="flash",
+                    choices=["flash", "lazy", "eager"],
+                    help="LCSM mixer strategy (ignored for other families)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
 
-    rng = np.random.RandomState(0)
-    t0 = time.perf_counter()
     if cfg.family == "lcsm":
         from repro.models.hyena import HyenaLCSM
-        from repro.serving import LCSMServer
 
         params = HyenaLCSM(cfg).init(jax.random.PRNGKey(0))
-        srv = LCSMServer(cfg, params, batch=args.slots, gen_max=args.max_new,
-                         prompt_max=args.prompt_len)
-        prompts = rng.randint(0, cfg.vocab, (args.slots, args.prompt_len)).astype(np.int32)
-        toks = srv.generate(prompts, args.max_new)
-        for i, row in enumerate(toks):
-            print(f"req {i}: {row.tolist()}")
+        extra = {"strategy": args.strategy}
     else:
-        import jax.numpy as jnp
+        params = LM(cfg).init(jax.random.PRNGKey(0))
+        extra = {"cache_dtype": jnp.float32}
+    srv = make_server(cfg, params, n_slots=args.slots, max_seq=args.max_seq,
+                      prompt_max=args.prompt_len, gen_max=args.max_new,
+                      **extra)
 
-        from repro.serving import Request, ServingEngine
-
-        model = LM(cfg)
-        params = model.init(jax.random.PRNGKey(0))
-        eng = ServingEngine(cfg, params, n_slots=args.slots,
-                            max_seq=args.max_seq, cache_dtype=jnp.float32)
-        for i in range(args.n_requests):
-            eng.submit(Request(
-                uid=i,
-                prompt=rng.randint(0, cfg.vocab, (args.prompt_len,)).astype(np.int32),
-                max_new=args.max_new))
-        done = eng.run()
-        for r in sorted(done, key=lambda r: r.uid):
-            print(f"req {r.uid}: {r.out}")
+    rng = np.random.RandomState(0)
+    t0 = time.perf_counter()
+    for i in range(args.n_requests):
+        srv.submit(Request(
+            uid=i,
+            prompt=rng.randint(0, cfg.vocab, (args.prompt_len,)).astype(np.int32),
+            max_new=args.max_new))
+    done = srv.run()
+    for r in sorted(done, key=lambda r: r.uid):
+        print(f"req {r.uid}: {r.out}")
     dt = time.perf_counter() - t0
-    n_tok = args.n_requests * args.max_new if cfg.family != "lcsm" \
-        else args.slots * args.max_new
+    n_tok = sum(len(r.out) for r in done)
     print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
 
 

@@ -1,2 +1,35 @@
+"""Serving backends, unified behind one factory.
+
+Two slot-based continuous-batching servers share the
+``submit()/step()/run()`` surface:
+
+* ``ServingEngine`` — transformer-family archs (KV / MLA / SSM caches).
+* ``LCSMServer``    — LCSM (Hyena) archs via the Flash Inference engine,
+  with a per-slot tile schedule (see serving/lcsm_backend.py).
+
+``make_server`` picks by ``cfg.family``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.configs.base import ModelConfig
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
 from repro.serving.lcsm_backend import LCSMServer  # noqa: F401
+
+
+def make_server(cfg: ModelConfig, params: Any, *, n_slots: int,
+                max_seq: int = 64, prompt_max: int = 16,
+                gen_max: int = 32, **kw):
+    """Build the serving backend for ``cfg``.
+
+    ``max_seq`` sizes transformer caches; ``prompt_max``/``gen_max`` size
+    the LCSM per-slot buffers (Lbuf = prompt_max + ceil_pow2(gen_max)).
+    Extra keyword args go to the chosen backend (e.g. ``strategy=`` /
+    ``tau_impl=`` for LCSM, ``window=`` / ``cache_dtype=`` for the rest).
+    """
+    if cfg.family == "lcsm":
+        return LCSMServer(cfg, params, n_slots=n_slots,
+                          prompt_max=prompt_max, gen_max=gen_max, **kw)
+    return ServingEngine(cfg, params, n_slots=n_slots, max_seq=max_seq, **kw)

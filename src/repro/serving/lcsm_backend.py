@@ -1,16 +1,28 @@
-"""Serving backend for LCSM (Hyena) architectures: Flash Inference decode.
+"""Serving backend for LCSM (Hyena) architectures: continuously batched
+Flash Inference decode.
 
-Wraps repro.core.engine.FlashEngine (Algorithms 2/3) behind the same
-surface as ServingEngine.  All slots advance in lockstep positions (the
-fractal tile schedule is position-indexed), so admission is batch-at-once:
-a group of prompts is prefilled together (static FFT path, Massaroli
-Lemma 2.1) and then generated together — the natural serving regime for
-the paper's algorithm, and the one its experiments use (§5).
+Slot-based server over repro.core.engine.FlashEngine (Algorithms 2/3) with
+the same ``submit()/step()/run()`` surface as the transformer-family
+ServingEngine.  The engine's tile schedule is **per-slot**: each slot
+carries its own ``origin`` (prompt length) and ``pos``, the red pass
+advances all live slots in one jitted call with per-slot positions, and
+gray tiles are dispatched per (slot, tile-side) through the engine's
+per-size jit cache — slots whose schedules happen to unlock the same tile
+side this step share one τ evaluation.
+
+Admission is vLLM-style slot refill: a finished slot (EOS or max_new) is
+immediately refilled from the queue by a single-slot prefill (static FFT
+path, Massaroli Lemma 2.1) that rewrites the slot's full a/b buffer rows
+(``FlashEngine.prefill_slot``) — no other slot is disturbed, no recompile
+(tile-side and prompt-length specializations are cached).
+
+``generate()`` keeps the historical lockstep batch-at-once path (all rows
+share one schedule position) for benchmarks and exactness tests.
 """
 
 from __future__ import annotations
 
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -18,40 +30,180 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.engine import FlashEngine
+from repro.core.tiling import largest_pow2_divisor
 from repro.models.hyena import HyenaLCSM
+from repro.serving.engine import Request
+
+
+def isolated_decode(cfg: ModelConfig, params: Any, prompt, n_tokens: int, *,
+                    prompt_max: int, gen_max: int,
+                    strategy: str = "flash") -> list[int]:
+    """Isolated batch-1 lockstep greedy decode — the exactness reference for
+    continuous batching (used by tests and examples/serve_batched.py).
+
+    ``prompt_max``/``gen_max`` MUST match the server under comparison: they
+    determine Lbuf, and Hyena's implicit filters are length-normalized, so a
+    different Lbuf is a different model, not a numerics difference."""
+    model = HyenaLCSM(cfg)
+    eng = FlashEngine(model, params, batch=1, gen_max=gen_max,
+                      prompt_max=prompt_max, strategy=strategy)
+    a0 = model.embed_tokens(params, jnp.asarray(prompt, jnp.int32)[None])
+    state, t0 = eng.prefill(a0)
+    out = [int(t0[0])]
+    if n_tokens > 1:
+        _, toks = eng.generate(state, n_tokens - 1, origin=len(prompt))
+        out += np.asarray(toks)[0].tolist()
+    return out[:n_tokens]
 
 
 class LCSMServer:
-    def __init__(self, cfg: ModelConfig, params: Any, *, batch: int,
+    """Continuous-batching server for ``cfg.family == "lcsm"`` archs.
+
+    ``n_slots`` bounds concurrent requests; ``prompt_max`` / ``gen_max``
+    size the per-slot buffers (Lbuf = prompt_max + ceil_pow2(gen_max)).
+    ``batch`` is accepted as a legacy alias for ``n_slots``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Any, *,
+                 n_slots: int | None = None, batch: int | None = None,
                  gen_max: int, prompt_max: int = 0,
                  strategy: str = "flash", tau_impl: str = "hybrid",
-                 direct_max: int = 32, use_pallas: bool = False):
+                 direct_max: int = 32, use_pallas: bool = False,
+                 seed: int = 0):
         assert cfg.family == "lcsm"
+        assert strategy in ("flash", "lazy", "eager")
+        if n_slots is None:
+            n_slots = 1 if batch is None else batch
         self.cfg = cfg
         self.model = HyenaLCSM(cfg)
         self.params = params
         self.engine = FlashEngine(
-            self.model, params, batch=batch, gen_max=gen_max,
+            self.model, params, batch=n_slots, gen_max=gen_max,
             prompt_max=prompt_max, strategy=strategy, tau_impl=tau_impl,
             direct_max=direct_max, use_pallas=use_pallas)
-        self.batch = batch
+        self.batch = self.B = n_slots
+        self.strategy = strategy
+        self.gen_max = gen_max
+        self.prompt_max = prompt_max
 
+        # --- continuous-batching state (host-side bookkeeping is plain ints)
+        self.state = self.engine.init_state()
+        self.slots: list[Request | None] = [None] * n_slots
+        self.queue: list[Request] = []
+        self.pos = [0] * n_slots     # next position to finalize, per slot
+        self.origin = [0] * n_slots  # schedule origin (prompt length)
+        self._rng = jax.random.PRNGKey(seed)
+
+    # ------------------------------------------------------------ admission
+    def submit(self, req: Request) -> None:
+        P = len(req.prompt)
+        assert 1 <= P <= max(self.prompt_max, 1), (
+            f"prompt length {P} exceeds prompt_max={self.prompt_max}")
+        assert 1 <= req.max_new <= self.gen_max, (
+            f"max_new {req.max_new} exceeds gen_max={self.gen_max}")
+        self.queue.append(req)
+
+    def _admit(self, slot: int, req: Request, finished: list[Request]) -> None:
+        P = len(req.prompt)
+        a0 = self.model.embed_tokens(
+            self.params, jnp.asarray(req.prompt, jnp.int32)[None])
+        self._rng, sub = jax.random.split(self._rng)
+        self.state, tok = self.engine.prefill_slot(self.state, slot, a0, sub)
+        tok = int(tok)
+        req.out.append(tok)
+        if tok == req.eos_id or len(req.out) >= req.max_new:
+            req.done = True          # prompt-only request: done at admission,
+            finished.append(req)     # the slot stays free for the next one.
+            return
+        self.slots[slot] = req
+        self.origin[slot] = P
+        self.pos[slot] = P
+
+    def _fill_free_slots(self, finished: list[Request]) -> None:
+        for slot in range(self.B):
+            while self.slots[slot] is None and self.queue:
+                self._admit(slot, self.queue.pop(0), finished)
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> list[Request]:
+        """Admit queued requests into free slots, then advance every live
+        slot one token; returns requests finished this step."""
+        finished: list[Request] = []
+        self._fill_free_slots(finished)
+        live = [s for s in range(self.B) if self.slots[s] is not None]
+        if not live:
+            return finished
+        eng = self.engine
+        # free slots idle at position 0: the red pass still computes their
+        # rows (pure per-row ops — no cross-slot contamination), and their
+        # buffers are fully rewritten by prefill_slot on reuse.
+        p_vec = jnp.asarray([self.pos[s] if self.slots[s] is not None else 0
+                             for s in range(self.B)], jnp.int32)
+        self._rng, sub = jax.random.split(self._rng)
+        if self.strategy == "lazy":
+            self.state = eng.lazy_step(self.state, p_vec)
+        self.state, toks = eng.red_step(self.state, p_vec, sub)
+        if self.strategy == "eager":
+            self.state = eng.eager_step(self.state, p_vec)
+        toks = np.asarray(toks)
+        tiles: dict[int, list[tuple[int, int]]] = {}  # U -> [(slot, p)]
+        for s in live:
+            req = self.slots[s]
+            tok = int(toks[s])
+            req.out.append(tok)
+            p = self.pos[s]
+            self.pos[s] += 1
+            if tok == req.eos_id or len(req.out) >= req.max_new:
+                req.done = True
+                finished.append(req)
+                self.slots[s] = None  # retire; no tile — its outputs would
+                continue              # only feed positions never generated.
+            if self.strategy == "flash":
+                # red steps since origin = this slot's 1-based schedule step
+                U = largest_pow2_divisor(self.pos[s] - self.origin[s])
+                if p + 1 < eng.Lbuf:  # per-slot horizon guard (partial
+                    tiles.setdefault(U, []).append((s, p))  # tiles clip)
+        for U, group in sorted(tiles.items()):
+            mask = np.zeros((self.B,), bool)
+            pv = np.zeros((self.B,), np.int32)
+            for s, p in group:
+                mask[s] = True
+                pv[s] = p
+            self.state = eng.gray_step(
+                self.state, jnp.asarray(pv), jnp.asarray(mask), U)
+        return finished
+
+    def run(self) -> list[Request]:
+        """Drain queue + slots to completion."""
+        done: list[Request] = []
+        while self.queue or any(s is not None for s in self.slots):
+            done.extend(self.step())
+        return done
+
+    # ------------------------------------------------ lockstep (batch) path
     def generate(self, prompts: np.ndarray | None, n_tokens: int,
                  seed: int = 0) -> np.ndarray:
         """prompts: (B, P) int32 or None (generate from BOS=0).
-        Returns (B, n_tokens) int32 greedy samples."""
+        Returns (B, n_tokens) int32 greedy samples.  All rows advance in
+        lockstep — the batch-at-once regime of the paper's experiments."""
         eng, model, params = self.engine, self.model, self.params
-        state = eng.init_state()
+        rng = jax.random.PRNGKey(seed)
         if prompts is not None and prompts.shape[1] > 0:
             a0 = model.embed_tokens(params, jnp.asarray(prompts))
-            state = eng.prefill(state, a0)
-            origin = prompts.shape[1]
+            rng, sub = jax.random.split(rng)
+            state, tok0 = eng.prefill(a0, sub)
+            toks = [np.asarray(tok0)[:, None]]
+            state, rest = eng.generate(
+                state, n_tokens - 1, origin=prompts.shape[1], rng=rng)
+            if n_tokens > 1:
+                toks.append(np.asarray(rest))
+            out = np.concatenate(toks, axis=1)[:, :n_tokens]
         else:
+            state = eng.init_state()
             tok0 = jnp.zeros((self.batch,), jnp.int32)
             e = params["emb"][tok0]
             state = eng.set_first(state, model.embed_entry(params, e))
-            origin = 0
-        state, toks = eng.generate(
-            state, n_tokens, origin=origin, rng=jax.random.PRNGKey(seed))
+            state, out = eng.generate(state, n_tokens, origin=0, rng=rng)
+            out = np.asarray(out)
         self.last_state = state
-        return np.asarray(toks)
+        return out

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core.engine import FlashEngine
+from repro.core.tiling import largest_pow2_divisor
 from repro.models.synthetic_lcsm import SyntheticLCSM
 
 TOL = dict(rtol=2e-4, atol=2e-4)
@@ -24,7 +25,7 @@ def _make(strategy, **kw):
 def _run(eng, model, n, prompt=None, origin=0):
     state = eng.init_state()
     if prompt is not None:
-        state = eng.prefill(state, prompt)
+        state, _tok = eng.prefill(prompt)
         origin = prompt.shape[1]
     else:
         key = jax.random.PRNGKey(42)
@@ -68,6 +69,45 @@ def test_flash_with_prefill_matches_static():
     prompt = jax.random.normal(jax.random.PRNGKey(9), (2, P, model.d))
     state = _run(eng, model, G, prompt=prompt)
     n = P + G
+    ref = eng.forward_static(state.a[0][:, :n])
+    for l in range(1, len(ref)):
+        np.testing.assert_allclose(state.a[l][:, :n], ref[l][:, :n], **TOL)
+
+
+def test_lazy_decode_after_prefill_matches_static():
+    """Regression: lazy-strategy decode after a prompt prefill must agree
+    with the static forward pass (the lazy fill recomputes each b[l, p]
+    from the whole buffered history, prompt included — no origin
+    bookkeeping involved)."""
+    P, G = 5, 11
+    model, _, eng = _make("lazy", gen_max=G, prompt_max=P)
+    prompt = jax.random.normal(jax.random.PRNGKey(3), (2, P, model.d))
+    state = _run(eng, model, G, prompt=prompt)
+    n = P + G
+    ref = eng.forward_static(state.a[0][:, :n])
+    for l in range(1, len(ref)):
+        np.testing.assert_allclose(state.a[l][:, :n], ref[l][:, :n], **TOL)
+
+
+@pytest.mark.parametrize("P,G", [(3, 12), (1, 9)])
+def test_gray_tile_horizon_guard_exact(P, G):
+    """Tiles that straddle the buffer horizon (p + U >= Lbuf) must be
+    CLIPPED, not dropped: with prompt_max=0 the prompt eats into the
+    pow2(gen_max) buffer, so late tiles spill past Lbuf while their
+    in-range outputs are still needed.  (The seed dropped the whole tile,
+    silently corrupting b near the horizon.)"""
+    model = SyntheticLCSM(n_levels=3, d_model=8)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = FlashEngine(model, params, batch=2, strategy="flash", gen_max=G,
+                      prompt_max=0)  # Lbuf = ceil_pow2(G): tight on purpose
+    prompt = jax.random.normal(jax.random.PRNGKey(5), (2, P, model.d))
+    state, _tok = eng.prefill(prompt)
+    n_gen = eng.Lbuf - P - 1   # decode to one position short of the horizon
+    assert any(p + largest_pow2_divisor(i) >= eng.Lbuf > p + 1
+               for i, p in ((i, P + i - 1) for i in range(1, n_gen))), \
+        "test setup must actually hit the partial-tile guard"
+    state, _ = eng.generate(state, n_gen, origin=P, rng=jax.random.PRNGKey(7))
+    n = P + n_gen
     ref = eng.forward_static(state.a[0][:, :n])
     for l in range(1, len(ref)):
         np.testing.assert_allclose(state.a[l][:, :n], ref[l][:, :n], **TOL)

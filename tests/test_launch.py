@@ -9,7 +9,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED, get_config
 from repro.launch import sharding as sh
-from repro.launch.analysis import collective_bytes, count_params, model_flops_for
+from repro.launch.analysis import (collective_bytes, cost_analysis_dict,
+                                   count_params, model_flops_for)
 from repro.launch.mesh import make_host_mesh
 
 
@@ -97,4 +98,4 @@ def test_case_builder_host_mesh_lowers(name):
                      donate_argnums=case.donate)
     with mesh:
         compiled = jitted.lower(*case.args).compile()
-    assert compiled.cost_analysis() is not None
+    assert cost_analysis_dict(compiled).get("flops", 0) > 0

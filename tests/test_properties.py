@@ -6,8 +6,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.tiling import (activation_positions_touched,
                                largest_pow2_divisor, tile_schedule)
