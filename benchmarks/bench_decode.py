@@ -1,0 +1,95 @@
+"""Device-resident chunked decode throughput: tok/s vs chunk size K.
+
+The per-step decode loop pays a host round-trip (dispatch + token readback)
+per token; ``decode_chunk`` fuses K schedule steps into one donated XLA
+computation, so dispatch overhead amortizes K-fold while the arithmetic is
+bit-identical (tests/test_decode_chunk.py).  This benchmark measures the
+batch-1 regime the paper's small-batch latency story (FutureFill, Laughing
+Hyena Distillery comparisons) cares about, for all three mixer strategies:
+
+    PYTHONPATH=src python -m benchmarks.bench_decode [--smoke]
+
+Emits experiments/bench/BENCH_decode.json (one record per (strategy, K))
+plus the usual CSV.  K=1 is the historical per-step path — the speedup
+column in the JSON is tok_s(K) / tok_s(K=1) within each strategy.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.core.engine import FlashEngine
+from repro.models.synthetic_lcsm import SyntheticLCSM
+
+from benchmarks.common import OUT_DIR, write_csv
+
+
+def run_cell(model, params, *, strategy: str, K: int, L: int, batch: int = 1):
+    eng = FlashEngine(model, params, batch=batch, gen_max=L,
+                      strategy=strategy, chunk_size=K)
+
+    def fresh():
+        state = eng.init_state()
+        return eng.set_first(
+            state, jax.random.normal(jax.random.PRNGKey(1), (batch, model.d)))
+
+    def decode():
+        state, toks = eng.generate(fresh(), L, rng=jax.random.PRNGKey(2))
+        jax.block_until_ready(state.a[0])
+
+    decode()  # warm-up: compiles every chunk segment / per-step program
+    t0 = time.perf_counter()
+    decode()
+    dt = time.perf_counter() - t0
+    return {"strategy": strategy, "chunk_K": K, "batch": batch, "tokens": L,
+            "seconds": round(dt, 4), "tok_s": round(L * batch / dt, 2)}
+
+
+def main(smoke: bool = False) -> str:
+    M, D = (2, 32) if smoke else (3, 64)
+    L = 64 if smoke else 256
+    Ks = (1, 4, 8) if smoke else (1, 2, 4, 8, 16, 32)
+    strategies = ("flash", "lazy") if smoke else ("flash", "lazy", "eager")
+    model = SyntheticLCSM(n_levels=M, d_model=D)
+    params = model.init(jax.random.PRNGKey(0))
+
+    records = []
+    for strategy in strategies:
+        base = None
+        for K in Ks:
+            rec = run_cell(model, params, strategy=strategy, K=K, L=L)
+            base = rec["tok_s"] if K == 1 else base
+            rec["speedup_vs_per_step"] = round(rec["tok_s"] / base, 2)
+            records.append(rec)
+            print(f"[bench_decode] {strategy:6s} K={K:3d}: "
+                  f"{rec['tokens']} tok in {rec['seconds']:.3f}s  "
+                  f"{rec['tok_s']:9.1f} tok/s  "
+                  f"(x{rec['speedup_vs_per_step']:.2f} vs per-step)")
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    # Smoke runs go to a separate (gitignored) file: BENCH_decode.json is
+    # the committed full-run record and must not be clobbered by CI smoke.
+    stem = "decode_chunk_smoke" if smoke else "BENCH_decode"
+    path = os.path.join(OUT_DIR, f"{stem}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": "decode_chunk", "model": f"synthetic M={M} D={D}",
+                   "tokens": L, "records": records}, f, indent=1)
+    write_csv("decode_chunk_smoke" if smoke else "decode_chunk",
+              ["strategy", "chunk_K", "tokens", "seconds", "tok_s",
+               "speedup_vs_per_step"],
+              [[r["strategy"], r["chunk_K"], r["tokens"], r["seconds"],
+                r["tok_s"], r["speedup_vs_per_step"]] for r in records])
+    print(f"[bench_decode] wrote {os.path.abspath(path)}")
+    return path
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -81,10 +81,12 @@ def main(smoke: bool = False, n_ops: int = 2, d_model: int = 64,
                   f"{rec['tok_s']:8.1f} tok/s")
 
     os.makedirs(OUT_DIR, exist_ok=True)
-    path = os.path.join(OUT_DIR, "BENCH_serving.json")
+    # Smoke runs must not clobber the committed full-run BENCH record.
+    stem = "serving_smoke" if smoke else "BENCH_serving"
+    path = os.path.join(OUT_DIR, f"{stem}.json")
     with open(path, "w") as f:
         json.dump({"bench": "serving", "records": records}, f, indent=1)
-    write_csv("serving",
+    write_csv("serving_smoke" if smoke else "serving",
               ["strategy", "n_slots", "tokens", "seconds", "tok_per_s"],
               [[r["strategy"], r["n_slots"], r["tokens"], r["seconds"],
                 r["tok_s"]] for r in records])

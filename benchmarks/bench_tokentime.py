@@ -7,6 +7,7 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.engine import FlashEngine
 from repro.core.tiling import largest_pow2_divisor
@@ -19,16 +20,33 @@ def per_token_times(strategy: str, L: int, M: int = 3, D: int = 32):
     model = SyntheticLCSM(n_levels=M, d_model=D)
     params = model.init(jax.random.PRNGKey(0))
     eng = FlashEngine(model, params, batch=1, gen_max=L, strategy=strategy)
-    state = eng.init_state()
-    state = eng.set_first(state, jax.random.normal(jax.random.PRNGKey(1), (1, D)))
+
+    def fresh():
+        state = eng.init_state()
+        return eng.set_first(
+            state, jax.random.normal(jax.random.PRNGKey(1), (1, D)))
+
     # warm-up: run the whole schedule once so every per-U jit is compiled.
-    warm, _ = eng.generate(state, L, rng=jax.random.PRNGKey(2))
+    # (The step functions DONATE their state, so the warmed-up state is dead
+    # afterwards — rebuild for the timed loop.)
+    warm, _ = eng.generate(fresh(), L, rng=jax.random.PRNGKey(2))
     jax.block_until_ready(warm.a[0])
+    state = fresh()
     times = []
     rng = jax.random.PRNGKey(3)
+    # Drive the engine's own per-step schedule skeleton (red pass + this
+    # step's gray tile) so each sample times the token's REAL work — a
+    # generate(1) call would never dispatch a tile (its 1-step schedule has
+    # no next token).
     for step in range(L):
         t0 = time.perf_counter()
-        state, _ = eng.generate(state, 1, origin=step, rng=rng)
+        pv = jnp.full((1,), step, jnp.int32)
+        tile = None
+        if strategy == "flash" and step + 1 < L:
+            tile = lambda st, p=step: eng._gray_tile_guard(
+                st, p, largest_pow2_divisor(p + 1))
+        state, _, rng = eng._schedule_step(
+            eng.params, state, pv, rng, tile, jitted=True)
         jax.block_until_ready(state.a[0])
         times.append(time.perf_counter() - t0)
     return times

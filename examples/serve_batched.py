@@ -11,6 +11,9 @@ greedy decode.  Works for both backend families through ``make_server``:
 The hyena path routes through the Flash-Inference LCSMServer, whose tile
 schedule is per-slot — each request runs its own Algorithm-2 schedule
 while sharing the batched red pass and per-tile-side gray dispatches.
+``--chunk K`` (LCSM only) advances slots in fused device-resident K-token
+chunks — one dispatch and one token readback per chunk — and the exactness
+check below still holds stream-for-stream.
 """
 
 import argparse
@@ -51,6 +54,9 @@ def main():
     ap.add_argument("--arch", default="qwen2.5-3b")
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="fused decode chunk size K (LCSM backend only); "
+                         "default: per-step")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke()
@@ -75,11 +81,15 @@ def main():
         eng.submit(reqs[-1])
 
     t0 = time.perf_counter()
-    done = eng.run()
+    done = eng.run(chunk=args.chunk)
     dt = time.perf_counter() - t0
     total = sum(len(r.out) for r in done)
+    # ServingEngine.run ignores chunk (no fused multi-token transformer
+    # step) — only report it where it actually changed the decode.
+    chunk_note = (f", chunk={args.chunk}"
+                  if args.chunk and cfg.family == "lcsm" else "")
     print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
-          f"on {args.slots} slots ({total / dt:.1f} tok/s)")
+          f"on {args.slots} slots{chunk_note} ({total / dt:.1f} tok/s)")
 
     # verify against isolated greedy decode
     for r in sorted(done, key=lambda r: r.uid):

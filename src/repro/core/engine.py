@@ -32,6 +32,23 @@ Shape-staticness: one jitted red-pass (positions are a traced vector) plus
 one jitted gray-tile function *per tile side* — log2(L) specializations in
 total, the XLA analogue of the paper's per-tile-size precompiled FlashFFT
 configs (§5.4, engineering contribution #2).
+
+Dispatch granularity: the per-step functions above are kept (and are the
+K=1 path), but the hot loop is **device-resident chunked decode** —
+``decode_chunk`` fuses K consecutive schedule steps (red pass + the gray
+tiles their relative steps unlock, tile sides known at trace time from the
+schedule segment) into ONE donated XLA computation, cached per segment
+(O(log L) distinct segments for aligned power-of-two chunks, see
+tiling.schedule_segment).  ``generate`` is a thin host loop over chunks;
+host syncs drop from one per token to one per K tokens, and ``donate_argnums``
+on every a/b buffer removes the full-state copy each dispatch used to pay.
+K defaults to 1 (the per-step loop): fusing trades compile time for
+dispatch overhead, which wins on real workloads (benchmarks/bench_decode.py
+measures ~8x batch-1 tok/s at K=16 even on CPU) but loses in compile-bound
+unit tests — pass ``chunk_size=K`` to turn it on.
+All jitted step/chunk functions DONATE their state argument: after calling
+them the passed-in ``EngineState`` is dead — callers must use the returned
+state (every in-repo caller threads state linearly).
 """
 
 from __future__ import annotations
@@ -44,7 +61,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tau as tau_mod
-from repro.core.tiling import largest_pow2_divisor
+from repro.core.tiling import largest_pow2_divisor, schedule_segment
 
 
 def ceil_pow2(n: int) -> int:
@@ -143,9 +160,11 @@ class FlashEngine:
         direct_max: int = 32,
         parallel_levels: bool = True,
         use_pallas: bool = False,
+        chunk_size: int = 1,
     ):
         assert strategy in ("flash", "lazy", "eager")
         assert tau_impl in ("hybrid", "direct", "fft", "pallas")
+        assert chunk_size >= 1
         self.model = model
         self.params = params
         self.batch = batch
@@ -155,6 +174,7 @@ class FlashEngine:
         self.direct_max = direct_max
         self.parallel_levels = parallel_levels
         self.use_pallas = use_pallas
+        self.chunk_size = chunk_size
         self.Lbuf = prompt_max + ceil_pow2(max(gen_max, 1))
         self.M = len(model.levels)
 
@@ -180,14 +200,21 @@ class FlashEngine:
             for (_, _, rho_g) in self._groups
         ]
 
-        self._jit_red = jax.jit(self._red_pass)
+        # Every step function donates its EngineState: the a/b buffers alias
+        # input to output in XLA instead of being copied per dispatch.
+        self._jit_red = jax.jit(self._red_pass, donate_argnums=(1,))
         self._jit_gray: dict[int, Callable] = {}
-        self._jit_lazy = jax.jit(self._lazy_fill)
-        self._jit_eager = jax.jit(self._eager_push)
+        self._jit_lazy = jax.jit(self._lazy_fill, donate_argnums=(0,))
+        self._jit_eager = jax.jit(self._eager_push, donate_argnums=(0,))
         # prompt length is a shape, so jax.jit retraces per distinct P —
         # the LCSM analogue of ServingEngine's per-length prefill cache.
         self._jit_prefill = jax.jit(self._prefill_rows)
-        self._jit_prefill_slot = jax.jit(self._prefill_slot_impl)
+        self._jit_prefill_slot = jax.jit(self._prefill_slot_impl,
+                                         donate_argnums=(1,))
+        # Fused-chunk caches: decode_chunk per schedule segment (lockstep),
+        # server_chunk per K (per-slot traced schedules).
+        self._jit_chunk: dict[tuple[int, ...], Callable] = {}
+        self._jit_server_chunk: dict[int, Callable] = {}
 
     # ------------------------------------------------------------------ state
     def init_state(self) -> EngineState:
@@ -256,7 +283,6 @@ class FlashEngine:
     # ------------------------------------------------------------- gray tiles
     def _tau(self, y, rho2u, rho_f):
         impl = self.tau_impl
-        U = y.shape[-2]
         if impl == "hybrid":
             return tau_mod.tau_hybrid(
                 y, rho2u, rho_f, direct_max=self.direct_max,
@@ -264,8 +290,13 @@ class FlashEngine:
         if impl == "direct":
             return tau_mod.tau_direct(y, rho2u)
         if impl == "pallas":
-            from repro.kernels import ops as kops
-            return kops.tile_conv(y, rho2u)
+            # The Pallas kernel is the *direct* form: its inner reduction is
+            # unrolled U times (O(U^2) work, O(U) trace size), so routing
+            # every tile side through it blows up both compile time and FLOPs
+            # for large tiles.  tau_hybrid owns the direct/FFT crossover —
+            # delegate so the rule lives in one place (§5.3 Pareto dispatch).
+            return tau_mod.tau_hybrid(
+                y, rho2u, rho_f, direct_max=self.direct_max, use_pallas=True)
         return tau_mod.tau_fft(y, rho2u=rho2u, rho_f=rho_f)
 
     def _gray_tile(self, state: EngineState, p, mask, *, U: int):
@@ -400,8 +431,8 @@ class FlashEngine:
         prompt prefill on fresh buffers whose full Lbuf rows are then written
         into row ``slot`` of the batched state (one dynamic_update_slice per
         buffer — no other slot is disturbed, and slot reuse needs no separate
-        reset because every row is overwritten).  Returns
-        (state, first sampled token, scalar)."""
+        reset because every row is overwritten).  The input state is donated.
+        Returns (state, first sampled token, scalar)."""
         rng = jax.random.PRNGKey(0) if rng is None else rng
         assert a0_prompt.shape[0] == 1
         return self._jit_prefill_slot(
@@ -425,27 +456,185 @@ class FlashEngine:
         *,
         origin: int = 0,
         rng: jax.Array | None = None,
+        chunk_size: int | None = None,
     ) -> tuple[EngineState, jnp.ndarray]:
-        """Lockstep host-side loop over positions (jitted pieces per tile
-        side): all slots share the schedule position origin + step."""
+        """Lockstep decode of ``n_tokens`` from schedule origin ``origin``.
+
+        Thin host loop over device-resident chunks: each ``decode_chunk``
+        fuses up to K schedule steps into one donated XLA computation, so the
+        host dispatches (and may sync) once per K tokens instead of several
+        times per token.  ``chunk_size=1`` is the historical per-step path
+        (one jitted red pass / gray tile per dispatch) — kept as the
+        exactness reference: flash and lazy are BITWISE identical chunked
+        vs per-step; eager is identical up to rounding (XLA FMA-contracts
+        its per-step b += y*rho accumulation when steps fuse).  The input
+        ``state`` is donated."""
         rng = jax.random.PRNGKey(0) if rng is None else rng
+        origin = int(origin)
+        K = self.chunk_size if chunk_size is None else chunk_size
+        if K <= 1:
+            return self._generate_stepwise(state, n_tokens, origin, rng)
+        toks = []
+        step = 0
+        while step < n_tokens:
+            k = min(K, n_tokens - step)
+            if self.strategy == "flash":
+                sides = schedule_segment(step + 1, k, origin=origin,
+                                         horizon=self.Lbuf,
+                                         last_step=n_tokens)
+            else:
+                sides = (0,) * k
+            state, tk, rng = self.decode_chunk(
+                state, origin + step, rng, sides)
+            toks.append(tk)
+            step += k
+        toks = (jnp.concatenate(toks, axis=1) if toks
+                else jnp.zeros((self.batch, 0), jnp.int32))
+        return state, toks
+
+    def _schedule_step(self, params, state: EngineState, pv, rng,
+                       tile=None, *, jitted: bool):
+        """THE schedule step, defined once: rng split -> (lazy fill) -> red
+        pass -> (eager push | this step's gray tile).  Every decode path —
+        per-step loop, fused lockstep chunk, fused server chunk — drives
+        this skeleton; the bit-identity contract between them rests on the
+        ordering living in exactly one place.  ``tile`` is a callable
+        (state) -> state applying whatever gray tile(s) the step unlocks,
+        or None; ``jitted`` picks the per-piece jitted wrappers (per-step
+        dispatch) vs the raw methods (tracing inside a fused chunk)."""
+        lazy_fn = self._jit_lazy if jitted else self._lazy_fill
+        eager_fn = self._jit_eager if jitted else self._eager_push
+        red_fn = self._jit_red if jitted else self._red_pass
+        rng, sub = jax.random.split(rng)
+        if self.strategy == "lazy":
+            state = lazy_fn(state, pv)
+        state, tok = red_fn(params, state, pv, sub)
+        if self.strategy == "eager":
+            state = eager_fn(state, pv)
+        elif tile is not None:
+            state = tile(state)
+        return state, tok, rng
+
+    def _generate_stepwise(self, state: EngineState, n_tokens: int,
+                           origin: int, rng) -> tuple[EngineState, jnp.ndarray]:
+        """Per-step dispatch (the pre-chunking hot loop): one host round-trip
+        per red pass and per gray tile."""
         toks = []
         for step in range(n_tokens):
             p = origin + step
             pv = jnp.full((self.batch,), p, jnp.int32)
-            rng, sub = jax.random.split(rng)
-            if self.strategy == "lazy":
-                state = self._jit_lazy(state, pv)
-            state, tok = self._jit_red(self.params, state, pv, sub)
+            tile = None
+            if self.strategy == "flash" and step + 1 < n_tokens:
+                U = largest_pow2_divisor(step + 1)
+                tile = lambda st, p=p, U=U: self._gray_tile_guard(st, p, U)
+            state, tok, rng = self._schedule_step(
+                self.params, state, pv, rng, tile, jitted=True)
             toks.append(tok)
-            if self.strategy == "eager":
-                state = self._jit_eager(state, pv)
-            elif self.strategy == "flash" and step + 1 < n_tokens:
-                state = self._gray_tile_guard(
-                    state, p, largest_pow2_divisor(step + 1))
         toks = (jnp.stack(toks, axis=1) if toks
                 else jnp.zeros((self.batch, 0), jnp.int32))
         return state, toks
+
+    # ------------------------------------------------- fused chunked decode
+    def _decode_chunk_impl(self, params, state: EngineState, p0, rng, *,
+                           sides: tuple[int, ...]):
+        """len(sides) fused schedule steps starting at per-slot positions
+        ``p0``.  ``sides[i]`` is the gray-tile side unlocked after red step i
+        (0 = no tile: past the last step, or fully past the horizon) — all
+        trace-time constants, so the whole chunk is one XLA program with no
+        host involvement.  The rng is split exactly as the per-step loop
+        splits it, so sampling models see identical keys."""
+        toks = []
+        for i, U in enumerate(sides):
+            pv = p0 + i
+            tile = None
+            if U:
+                tile = lambda st, pv=pv, U=U: self._gray_tile(
+                    st, pv, jnp.ones((self.batch,), bool), U=U)
+            state, tok, rng = self._schedule_step(
+                params, state, pv, rng, tile, jitted=False)
+            toks.append(tok)
+        return state, jnp.stack(toks, axis=1), rng
+
+    def decode_chunk(self, state: EngineState, p0, rng,
+                     sides: Sequence[int]) -> tuple[EngineState, jnp.ndarray, jax.Array]:
+        """Run one fused chunk: red pass + block + advance for each step,
+        plus the gray tiles ``sides`` prescribes (see tiling.schedule_segment
+        for how a segment is derived and why segments make good cache keys).
+        ``p0``: position of the first step, scalar or (B,).  Returns
+        (state, tokens (B, K), advanced rng); the input state is donated."""
+        sides = tuple(int(u) for u in sides)
+        fn = self._jit_chunk.get(sides)
+        if fn is None:
+            fn = jax.jit(
+                functools.partial(self._decode_chunk_impl, sides=sides),
+                donate_argnums=(1,))
+            self._jit_chunk[sides] = fn
+        return fn(self.params, state, _as_pos_vec(p0, self.batch), rng)
+
+    def _server_chunk_impl(self, params, state: EngineState, p0, origin,
+                           live, rng, *, K: int):
+        """K fused continuous-batching steps with PER-SLOT schedules.
+
+        Unlike ``_decode_chunk_impl`` the tile side is data-dependent here —
+        each slot sits at its own point of its own schedule — so every step
+        branches over the log2(L) possible sides: for each side U a masked
+        ``lax.cond`` applies the side-U tile to exactly the slots whose
+        relative step unlocks U this step (and skips the computation
+        entirely when no slot does, preserving the Algorithm-2 work bound).
+        Slots are stepped blindly for K tokens; the host truncates at
+        EOS/max_new after readback — overshoot steps only touch the
+        overshooting slot's own rows, which the next admission prefill
+        rewrites wholesale.  p0/origin: (B,) int32; live: (B,) bool.
+
+        Branch list: sides with 2U <= Lbuf — every tile a *live* slot can
+        unlock (its relative step stays < gen_max, so U <= ceil_pow2(gen_max)/2
+        and the buffer holds rho[0..2U-1]).  A blind overshoot step past
+        retirement may compute a larger lowbit; no branch matches and the
+        junk tile is simply skipped."""
+        sides = []
+        u = 1
+        while 2 * u <= self.Lbuf:
+            sides.append(u)
+            u *= 2
+
+        def masked_tiles(state, pv):
+            rel = pv + 1 - origin          # 1-based schedule step done
+            low = rel & (-rel)             # per-slot unlocked tile side
+            writable = pv + 1 < self.Lbuf  # full-spill guard (clip
+            for U in sides:                # handles partial spill)
+                m = live & writable & (low == U)
+                state = jax.lax.cond(
+                    jnp.any(m),
+                    functools.partial(self._gray_tile, p=pv, mask=m, U=U),
+                    lambda st: st,
+                    state)
+            return state
+
+        toks = []
+        for i in range(K):
+            pv = p0 + i
+            tile = None
+            if self.strategy == "flash":
+                tile = lambda st, pv=pv: masked_tiles(st, pv)
+            state, tok, rng = self._schedule_step(
+                params, state, pv, rng, tile, jitted=False)
+            toks.append(tok)
+        return state, jnp.stack(toks, axis=1), rng
+
+    def server_chunk(self, state: EngineState, p0, origin, live, rng,
+                     K: int) -> tuple[EngineState, jnp.ndarray, jax.Array]:
+        """Fused K-step advance for the continuous-batching server: per-slot
+        positions/origins, one dispatch, one deferred token readback.
+        Returns (state, tokens (B, K), advanced rng); state is donated."""
+        fn = self._jit_server_chunk.get(K)
+        if fn is None:
+            fn = jax.jit(
+                functools.partial(self._server_chunk_impl, K=K),
+                donate_argnums=(1,))
+            self._jit_server_chunk[K] = fn
+        return fn(self.params, state, _as_pos_vec(p0, self.batch),
+                  _as_pos_vec(origin, self.batch),
+                  jnp.asarray(live, bool), rng)
 
     def _gray_tile_guard(self, state, p: int, U: int):
         if p + 1 >= self.Lbuf:  # no output position fits in the buffer: skip.
@@ -453,6 +642,8 @@ class FlashEngine:
         return self.gray_step(state, p, None, U)  # inside _gray_tile.)
 
     # ------------------------------------------- continuous-serving step API
+    # All step functions DONATE the input state (buffers alias in place);
+    # callers must thread the returned state and never reuse the argument.
     def red_step(self, state: EngineState, p, rng) -> tuple[EngineState, jnp.ndarray]:
         """Finalize per-slot positions p ((B,) or scalar) and sample every
         slot; returns (state, tokens (B,))."""
@@ -470,7 +661,8 @@ class FlashEngine:
         side — slot index and positions stay traced."""
         fn = self._jit_gray.get(U)
         if fn is None:
-            fn = jax.jit(functools.partial(self._gray_tile, U=U))
+            fn = jax.jit(functools.partial(self._gray_tile, U=U),
+                         donate_argnums=(0,))
             self._jit_gray[U] = fn
         mask = (jnp.ones((self.batch,), bool) if mask is None
                 else jnp.asarray(mask))

@@ -110,6 +110,14 @@ def tau_hybrid(
     """
     U = y_tile.shape[-2]
     if U <= direct_max:
+        if rho2u is None:
+            # Only the precomputed DFT was passed (the Alg.-2 hot loop caches
+            # exactly that).  The direct kernels need the time-domain filter;
+            # recover it from the order-2U DFT — rfft is information-preserving
+            # for real input, so irfft is an exact inverse up to rounding.
+            if rho_f is None:
+                raise ValueError("tau_hybrid needs rho2u or its DFT rho_f")
+            rho2u = jnp.fft.irfft(rho_f, n=2 * U, axis=-2)
         if use_pallas:
             from repro.kernels import ops as kops
 

@@ -73,6 +73,48 @@ def tile_schedule(L: int) -> Iterator[Tile]:
         yield Tile(step=i, side=side, out_side=min(side, L - i))
 
 
+def schedule_segment(
+    start_step: int,
+    K: int,
+    *,
+    origin: int = 0,
+    horizon: int | None = None,
+    last_step: int | None = None,
+) -> tuple[int, ...]:
+    """Tile sides unlocked at relative steps ``start_step .. start_step+K-1``.
+
+    The segment is the trace-time metadata a fused ``decode_chunk`` needs: one
+    entry per red step, ``2^nu(step)`` where a gray tile runs and ``0`` where
+    the per-step schedule would skip it —
+
+      * ``horizon`` (= Lbuf): the tile at step ``r`` writes outputs starting at
+        absolute position ``origin + r``; if even the first one falls outside
+        the buffer the whole tile is a no-op and the per-step driver skips it
+        (partially spilling tiles still run and are clipped inside the tile).
+      * ``last_step``: the overall schedule length — no tile runs after the
+        final red step (its outputs would never be read).
+
+    Segments double as jit-cache keys: for K a power of two and chunks aligned
+    to the schedule (``start_step = j*K + 1``), ``nu(j*K + i) = nu(i)`` for
+    ``0 < i < K``, so every interior entry is chunk-invariant and only the last
+    entry (and horizon/tail clipping) varies — the number of distinct segments
+    over a whole generation is O(log L), not O(L/K).
+    """
+    if start_step < 1:
+        raise ValueError(f"start_step must be positive, got {start_step}")
+    if K < 1:
+        raise ValueError(f"segment length must be positive, got {K}")
+    seg = []
+    for r in range(start_step, start_step + K):
+        side = largest_pow2_divisor(r)
+        if last_step is not None and r >= last_step:
+            side = 0  # no tile after the final red step
+        if horizon is not None and origin + r >= horizon:
+            side = 0  # first output position already past the buffer
+        seg.append(side)
+    return tuple(seg)
+
+
 def tile_histogram(L: int) -> dict[int, int]:
     """Map tile side -> number of tiles (Proposition 1: 2^(P-1-q) tiles of side 2^q)."""
     hist: dict[int, int] = {}

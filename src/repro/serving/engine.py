@@ -56,8 +56,12 @@ class ServingEngine:
         self.slots: list[Request | None] = [None] * n_slots
         self.queue: list[Request] = []
 
+        # caches are donated: decode_step aliases every cache leaf in place
+        # instead of copying the whole KV/state footprint per token.  After a
+        # _decode call the old self.caches buffers are dead — step() is the
+        # only caller and always reassigns.
         self._decode = jax.jit(functools.partial(
-            self.model.decode_step, window=window))
+            self.model.decode_step, window=window), donate_argnums=(2,))
         self._prefill1 = jax.jit(functools.partial(
             self.model.prefill, window=window, cache_dtype=cache_dtype),
             static_argnames=("S_cap",))
@@ -120,8 +124,13 @@ class ServingEngine:
         self.tokens = jnp.asarray(new_tok)
         return finished
 
-    def run(self) -> list[Request]:
-        """Drain queue + slots to completion."""
+    def run(self, chunk: int | None = None) -> list[Request]:
+        """Drain queue + slots to completion.  ``chunk`` is accepted only
+        for surface parity with LCSMServer.run (callers can pass it
+        regardless of backend family) and is IGNORED: transformer decode
+        has no fused multi-token step, every token needs its own
+        decode_step dispatch."""
+        del chunk  # single-token decode_step either way
         done: list[Request] = []
         while self.queue or any(s is not None for s in self.slots):
             done.extend(self.step())

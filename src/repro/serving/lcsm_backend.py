@@ -16,6 +16,20 @@ path, Massaroli Lemma 2.1) that rewrites the slot's full a/b buffer rows
 (``FlashEngine.prefill_slot``) — no other slot is disturbed, no recompile
 (tile-side and prompt-length specializations are cached).
 
+Two decode granularities share the bookkeeping:
+
+* ``step()``       — one token per host round-trip (red pass, then gray
+  tiles grouped per side), reading tokens back every step.
+* ``step_chunk(K)``— DEVICE-RESIDENT: one fused, donated XLA computation
+  advances every slot K tokens (``FlashEngine.server_chunk`` drives each
+  slot's own schedule with masked per-tile-side branches), and the token
+  readback is deferred to the chunk end — host syncs drop from O(n_tokens)
+  to O(n_tokens/K).  Slots are stepped blindly through the chunk; the host
+  truncates each stream at EOS/max_new afterwards, so greedy streams are
+  exactly the per-step ones (overshoot work only touches rows the refill
+  prefill rewrites; see step_chunk's rng caveat for sampling models).
+  Retirement/admission happen at chunk boundaries.
+
 ``generate()`` keeps the historical lockstep batch-at-once path (all rows
 share one schedule position) for benchmarks and exactness tests.
 """
@@ -69,6 +83,7 @@ class LCSMServer:
                  gen_max: int, prompt_max: int = 0,
                  strategy: str = "flash", tau_impl: str = "hybrid",
                  direct_max: int = 32, use_pallas: bool = False,
+                 chunk: int | None = None, chunk_size: int = 1,
                  seed: int = 0):
         assert cfg.family == "lcsm"
         assert strategy in ("flash", "lazy", "eager")
@@ -80,11 +95,18 @@ class LCSMServer:
         self.engine = FlashEngine(
             self.model, params, batch=n_slots, gen_max=gen_max,
             prompt_max=prompt_max, strategy=strategy, tau_impl=tau_impl,
-            direct_max=direct_max, use_pallas=use_pallas)
+            direct_max=direct_max, use_pallas=use_pallas,
+            chunk_size=chunk_size)
         self.batch = self.B = n_slots
         self.strategy = strategy
         self.gen_max = gen_max
         self.prompt_max = prompt_max
+        # decode granularity for run(): None/1 = per-step host loop,
+        # K > 1 = fused device-resident chunks of K tokens (step_chunk).
+        # One knob is enough: an engine built for chunked decode
+        # (chunk_size > 1) serves chunked too unless ``chunk`` overrides.
+        self.chunk = chunk if chunk is not None else (
+            chunk_size if chunk_size > 1 else None)
 
         # --- continuous-batching state (host-side bookkeeping is plain ints)
         self.state = self.engine.init_state()
@@ -173,11 +195,66 @@ class LCSMServer:
                 self.state, jnp.asarray(pv), jnp.asarray(mask), U)
         return finished
 
-    def run(self) -> list[Request]:
-        """Drain queue + slots to completion."""
+    def step_chunk(self, K: int) -> list[Request]:
+        """Admit queued requests into free slots, then advance every live
+        slot up to K tokens with ONE fused dispatch and ONE deferred token
+        readback (``FlashEngine.server_chunk``).  Streams are truncated at
+        EOS/max_new on the host afterwards, so every emitted stream is
+        exactly what K calls to ``step()`` would have produced; slots that
+        finish mid-chunk are retired here and refilled on the next call
+        (admission is chunk-granular).  Returns requests finished this call.
+
+        Exactness caveat: the stream identity holds for greedy models
+        (HyenaLCSM.advance is argmax and ignores its rng).  A model whose
+        ``advance`` actually samples would see a different rng-key schedule
+        here than under step() — blind overshoot steps consume splits and
+        admission splits move to chunk boundaries — so chunked serving of a
+        sampling model is a different (equally valid) random stream, not a
+        bit-replay of the per-step one."""
+        if K <= 1:
+            return self.step()
+        finished: list[Request] = []
+        self._fill_free_slots(finished)
+        live_slots = [s for s in range(self.B) if self.slots[s] is not None]
+        if not live_slots:
+            return finished
+        # free slots idle at position 0 with live=False: the red pass still
+        # computes their rows (pure per-row ops), no tiles run for them, and
+        # their buffers are fully rewritten by prefill_slot on reuse.
+        # Deliberately NO dynamic cap at the remaining token budget: each
+        # distinct K compiles its own fused program (seconds), while the
+        # blind-overshoot steps a fixed K wastes on short tails are a few
+        # already-compiled red passes — truncation below keeps streams exact
+        # either way.
+        p0 = np.asarray([self.pos[s] if self.slots[s] is not None else 0
+                         for s in range(self.B)], np.int32)
+        origin = np.asarray(self.origin, np.int32)
+        live = np.asarray([r is not None for r in self.slots], bool)
+        self.state, toks, self._rng = self.engine.server_chunk(
+            self.state, p0, origin, live, self._rng, K)
+        toks = np.asarray(toks)  # the chunk's single host sync
+        for s in live_slots:
+            req = self.slots[s]
+            for i in range(K):
+                tok = int(toks[s, i])
+                req.out.append(tok)
+                self.pos[s] += 1
+                if tok == req.eos_id or len(req.out) >= req.max_new:
+                    req.done = True
+                    finished.append(req)
+                    self.slots[s] = None  # tokens past this one are the
+                    break                 # blind chunk's overshoot: dropped.
+        return finished
+
+    def run(self, chunk: int | None = None) -> list[Request]:
+        """Drain queue + slots to completion.  ``chunk`` (default: the
+        constructor's ``chunk``) > 1 advances slots in fused K-token chunks
+        (one host sync per chunk) instead of token-by-token."""
+        K = self.chunk if chunk is None else chunk
         done: list[Request] = []
         while self.queue or any(s is not None for s in self.slots):
-            done.extend(self.step())
+            done.extend(self.step() if K is None or K <= 1
+                        else self.step_chunk(K))
         return done
 
     # ------------------------------------------------ lockstep (batch) path

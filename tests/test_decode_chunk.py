@@ -1,0 +1,239 @@
+"""Device-resident chunked decode: the fused ``decode_chunk`` path must be
+BIT-IDENTICAL to the per-step dispatch loop (chunking changes dispatch
+granularity, not arithmetic), its jit cache must stay O(log L) over a whole
+generation, and the τ dispatch bugfixes it rides with must hold:
+``tau_hybrid(use_pallas=True)`` with only a precomputed DFT, and the
+``tau_impl="pallas"`` route respecting ``direct_max``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tau as tau_mod
+from repro.core.engine import FlashEngine
+from repro.core.tiling import largest_pow2_divisor, schedule_segment
+from repro.models.synthetic_lcsm import SyntheticLCSM
+
+
+def _engine(strategy="flash", chunk_size=1, **kw):
+    model = SyntheticLCSM(n_levels=2, d_model=4)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = FlashEngine(model, params, batch=2, strategy=strategy,
+                      chunk_size=chunk_size, **kw)
+    return model, eng
+
+
+def _decode(eng, model, n, *, P=0):
+    """Prefill-with-P-then-decode-n (P=0: seeded first entry, origin 0)."""
+    rng = jax.random.PRNGKey(7)
+    if P:
+        prompt = jax.random.normal(jax.random.PRNGKey(9), (2, P, model.d))
+        state, _ = eng.prefill(prompt)
+        origin = P
+    else:
+        state = eng.init_state()
+        state = eng.set_first(
+            state, jax.random.normal(jax.random.PRNGKey(42), (2, model.d)))
+        origin = 0
+    state, toks = eng.generate(state, n, origin=origin, rng=rng)
+    return state, np.asarray(toks)
+
+
+# ------------------------------------------------------------- bit-identity
+@pytest.mark.parametrize("P,gen_max,n,Ks", [
+    (0, 16, 16, (2, 8)),   # origin 0, full pow2 schedule
+    (3, 16, 11, (3, 8)),   # prompt origin, n < gen_max, unaligned chunks
+    (5, 12, 12, (4,)),     # non-pow2 gen_max
+])
+def test_decode_chunk_bit_identical_to_stepwise(P, gen_max, n, Ks):
+    """Across origins and chunk sizes (power-of-two aligned and not), the
+    chunked state AND token stream must equal the per-step path bitwise.
+    One stepwise reference per case, compared against every K."""
+    model, e1 = _engine(chunk_size=1, gen_max=gen_max, prompt_max=P)
+    s1, t1 = _decode(e1, model, n, P=P)
+    for K in Ks:
+        _, eK = _engine(chunk_size=K, gen_max=gen_max, prompt_max=P)
+        sK, tK = _decode(eK, model, n, P=P)
+        np.testing.assert_array_equal(t1, tK)
+        for l in range(len(s1.a)):
+            np.testing.assert_array_equal(
+                np.asarray(s1.a[l]), np.asarray(sK.a[l]))
+        for l in range(len(s1.b)):
+            np.testing.assert_array_equal(
+                np.asarray(s1.b[l]), np.asarray(sK.b[l]))
+
+
+def test_decode_chunk_bit_identical_across_horizon_straddle():
+    """prompt_max=0 with a real prompt eats into the pow2 buffer, so late
+    tiles straddle (and some fully clear) the horizon Lbuf — the segment's
+    0-entries and the in-tile clipping must reproduce the per-step guard
+    exactly."""
+    P, G = 3, 16
+    model, e1 = _engine(chunk_size=1, gen_max=G, prompt_max=0)
+    _, eK = _engine(chunk_size=4, gen_max=G, prompt_max=0)
+    n = e1.Lbuf - P - 1
+    assert any(p + largest_pow2_divisor(i) >= e1.Lbuf > p + 1
+               for i, p in ((i, P + i - 1) for i in range(1, n))), \
+        "setup must straddle the horizon"
+    s1, t1 = _decode(e1, model, n, P=P)
+    sK, tK = _decode(eK, model, n, P=P)
+    np.testing.assert_array_equal(t1, tK)
+    for l in range(len(s1.a)):
+        np.testing.assert_array_equal(np.asarray(s1.a[l]), np.asarray(sK.a[l]))
+
+
+@pytest.mark.parametrize("strategy", ["lazy", "eager"])
+def test_decode_chunk_baseline_strategies_match_stepwise(strategy):
+    """The O(L^2) baselines chunk too.  Lazy is bitwise identical; eager's
+    per-step accumulation (b += y*rho) gets FMA-contracted when K steps fuse
+    into one XLA program, so it is exact only to rounding."""
+    n = 12
+    model, e1 = _engine(strategy, chunk_size=1, gen_max=n)
+    _, eK = _engine(strategy, chunk_size=4, gen_max=n)
+    s1, t1 = _decode(e1, model, n)
+    sK, tK = _decode(eK, model, n)
+    np.testing.assert_array_equal(t1, tK)
+    for l in range(len(s1.a)):
+        if strategy == "lazy":
+            np.testing.assert_array_equal(
+                np.asarray(s1.a[l]), np.asarray(sK.a[l]))
+        else:
+            np.testing.assert_allclose(
+                np.asarray(s1.a[l]), np.asarray(sK.a[l]),
+                rtol=1e-5, atol=1e-5)
+
+
+def test_chunk_jit_cache_stays_logarithmic():
+    """Aligned power-of-two chunks share interior tile sides, so a whole
+    generation compiles O(log L) distinct segments — not O(L/K)."""
+    n, K = 32, 4
+    model, eng = _engine(chunk_size=K, gen_max=n)
+    _decode(eng, model, n)
+    # segments: interior pattern fixed; only the last entry varies over
+    # lowbit(jK+K) for j = 0..n/K-1, i.e. log2(n/K)+1 values.
+    assert len(eng._jit_chunk) <= int(np.log2(n // K)) + 2, \
+        f"chunk cache blew up: {list(eng._jit_chunk)}"
+
+
+# --------------------------------------------------------- schedule_segment
+def test_schedule_segment_matches_per_step_rules():
+    """The segment must encode exactly the per-step driver's decisions:
+    lowbit side, no tile at/after the last step, no tile once even the first
+    output falls past the horizon."""
+    origin, horizon, last = 5, 16, 9
+    for start in (1, 3, 8):
+        seg = schedule_segment(start, 4, origin=origin, horizon=horizon,
+                               last_step=last)
+        for i, side in enumerate(seg):
+            r = start + i
+            want = largest_pow2_divisor(r)
+            if r >= last or origin + r >= horizon:
+                want = 0
+            assert side == want, (start, i, seg)
+
+
+def test_schedule_segment_aligned_interiors_are_invariant():
+    K = 8
+    segs = {schedule_segment(j * K + 1, K)[:-1] for j in range(16)}
+    assert len(segs) == 1  # interior entries identical for every chunk
+
+
+def test_schedule_segment_rejects_bad_args():
+    with pytest.raises(ValueError):
+        schedule_segment(0, 4)
+    with pytest.raises(ValueError):
+        schedule_segment(1, 0)
+
+
+# --------------------------------------------------------------- τ bugfixes
+def test_tau_hybrid_pallas_with_only_rho_f():
+    """Regression: use_pallas=True with a precomputed DFT and no rho2u used
+    to crash with AttributeError inside kops.tile_conv (rho2u=None).  The
+    filter is now reconstructed from its order-2U DFT."""
+    U, C = 8, 4
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    y = jax.random.normal(k1, (2, U, C), jnp.float32)
+    rho2u = jax.random.normal(k2, (2 * U, C), jnp.float32)
+    rho_f = tau_mod.rho_dft(rho2u)
+    want = tau_mod.tau_direct(y, rho2u)
+    got = tau_mod.tau_hybrid(y, rho_f=rho_f, use_pallas=True)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # same guard on the non-pallas direct branch
+    got2 = tau_mod.tau_hybrid(y, rho_f=rho_f, use_pallas=False)
+    np.testing.assert_allclose(got2, want, rtol=1e-5, atol=1e-5)
+
+
+def test_tau_hybrid_without_filter_raises_clearly():
+    y = jnp.zeros((1, 4, 2))
+    with pytest.raises(ValueError, match="rho2u or its DFT"):
+        tau_mod.tau_hybrid(y)
+
+
+@pytest.mark.parametrize("U", [1, 2, 4, 8, 16, 32, 64, 128, 256])
+def test_tau_pallas_matches_direct(U):
+    """τ pallas-vs-direct equivalence across the full tile-side range the
+    schedule can unlock (satellite: U in 1..256)."""
+    from repro.kernels import ops as kops
+    C = 3
+    k1, k2 = jax.random.split(jax.random.PRNGKey(U))
+    y = jax.random.normal(k1, (1, U, C), jnp.float32)
+    rho2u = jax.random.normal(k2, (2 * U, C), jnp.float32)
+    np.testing.assert_allclose(
+        kops.tile_conv(y, rho2u), tau_mod.tau_direct(y, rho2u),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_engine_tau_pallas_respects_direct_max():
+    """tau_impl='pallas' must route tiles above direct_max to the FFT path
+    (the unrolled Pallas kernel is O(U^2) work and O(U) trace size), and the
+    result must match the FFT evaluation it falls back to."""
+    model, eng = _engine(tau_impl="pallas", direct_max=4, gen_max=8)
+    U, C = 16, 4  # U > direct_max
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    y = jax.random.normal(k1, (1, 2, U, C), jnp.float32)
+    rho2u = jax.random.normal(k2, (1, 1, 2 * U, C), jnp.float32)
+    got = eng._tau(y, rho2u, None)
+    want = tau_mod.tau_fft(y, rho2u=rho2u)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # below the crossover it is the direct Pallas kernel
+    U = 4
+    y2 = jax.random.normal(k1, (1, 2, U, C), jnp.float32)
+    r2 = jax.random.normal(k2, (1, 1, 2 * U, C), jnp.float32)
+    np.testing.assert_allclose(
+        eng._tau(y2, r2, None), tau_mod.tau_direct(y2, r2),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_flash_pallas_engine_decode_matches_hybrid():
+    """End-to-end: a pallas-dispatch engine decode equals the hybrid engine
+    decode (τ implementations are numerically interchangeable here: both
+    dispatch direct below direct_max and FFT above)."""
+    n = 8
+    model, ep = _engine(tau_impl="pallas", direct_max=2, gen_max=n)
+    _, eh = _engine(tau_impl="hybrid", direct_max=2, gen_max=n)
+    sp, tp = _decode(ep, model, n)
+    sh, th = _decode(eh, model, n)
+    np.testing.assert_array_equal(tp, th)
+    for l in range(len(sp.a)):
+        np.testing.assert_allclose(
+            np.asarray(sp.a[l]), np.asarray(sh.a[l]), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- donation
+def test_step_functions_donate_state():
+    """The jitted step/chunk functions donate their buffers: when the
+    backend honors donation (CPU/TPU do), the passed-in state is dead after
+    the call — the full-state copy per token is gone."""
+    model, eng = _engine(gen_max=8)
+    state = eng.init_state()
+    state = eng.set_first(
+        state, jax.random.normal(jax.random.PRNGKey(0), (2, model.d)))
+    new_state, _ = eng.red_step(state, 0, jax.random.PRNGKey(1))
+    if not state.a[1].is_deleted():
+        pytest.skip("backend does not honor buffer donation")
+    with pytest.raises(RuntimeError):
+        np.asarray(state.a[1])  # the donated input is dead
+    # the returned state stays fully usable
+    assert np.asarray(new_state.a[0]).shape == (2, eng.Lbuf, model.d)

@@ -127,6 +127,48 @@ def test_prompt_only_request_completes_at_admission(setup):
     assert reqs[1].out == ref
 
 
+def test_chunked_run_matches_per_step(setup):
+    """Device-resident chunked stepping (step_chunk: one fused dispatch +
+    one deferred token readback per K tokens) must emit exactly the per-step
+    streams — including chunk sizes that misalign with request lengths and
+    therefore overshoot past max_new (the blind tail is truncated on the
+    host)."""
+    cfg, params = setup
+
+    def run(chunk):
+        srv = make_server(cfg, params, n_slots=3, prompt_max=PROMPT_MAX,
+                          gen_max=GEN_MAX, chunk=chunk)
+        reqs = _mixed_requests(cfg, 6, seed=5)
+        for r in reqs:
+            srv.submit(r)
+        done = srv.run()
+        assert len(done) == len(reqs) and all(r.done for r in reqs)
+        return {r.uid: tuple(r.out) for r in reqs}
+
+    ref = run(None)       # per-step host loop
+    # K=4 with mixed per-slot origins/max_new exercises both aligned and
+    # overshooting retirements (max_new is odd for several requests).
+    assert run(4) == ref
+
+
+def test_chunked_eos_truncates_mid_chunk(setup):
+    """An EOS landing inside a fused chunk must cut the stream at that
+    token even though the device blindly generated the rest of the chunk."""
+    cfg, params = setup
+    rng = np.random.RandomState(11)
+    prompt = rng.randint(0, cfg.vocab, (4,)).astype(np.int32)
+    ref = _isolated_decode(cfg, params, prompt, GEN_MAX)
+    eos_pos = 5  # mid-chunk for K=4 (second chunk, step 1)
+    req = Request(uid=0, prompt=prompt, max_new=GEN_MAX,
+                  eos_id=ref[eos_pos])
+    srv = make_server(cfg, params, n_slots=2, prompt_max=PROMPT_MAX,
+                      gen_max=GEN_MAX)
+    srv.submit(req)
+    srv.run(chunk=4)
+    cut = ref.index(ref[eos_pos]) + 1  # EOS may first occur earlier
+    assert req.out == ref[:cut]
+
+
 def test_make_server_routes_by_family(setup):
     cfg, params = setup
     assert isinstance(make_server(cfg, params, n_slots=2, gen_max=8),
