@@ -9,16 +9,15 @@ Hyena Distillery comparisons) cares about, for all three mixer strategies:
 
     PYTHONPATH=src python -m benchmarks.bench_decode [--smoke]
 
-Emits experiments/bench/BENCH_decode.json (one record per (strategy, K))
-plus the usual CSV.  K=1 is the historical per-step path — the speedup
-column in the JSON is tok_s(K) / tok_s(K=1) within each strategy.
+Emits experiments/bench/BENCH_decode.json (normalized
+{bench, machine, config, series} schema; one series entry per
+(strategy, K)) plus the usual CSV.  K=1 is the historical per-step path —
+the speedup column is tok_s(K) / tok_s(K=1) within each strategy.
 """
 
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import jax
@@ -26,7 +25,7 @@ import jax
 from repro.core.engine import FlashEngine
 from repro.models.synthetic_lcsm import SyntheticLCSM
 
-from benchmarks.common import OUT_DIR, write_csv
+from benchmarks.common import write_bench_json, write_csv
 
 
 def run_cell(model, params, *, strategy: str, K: int, L: int, batch: int = 1):
@@ -71,20 +70,17 @@ def main(smoke: bool = False) -> str:
                   f"{rec['tok_s']:9.1f} tok/s  "
                   f"(x{rec['speedup_vs_per_step']:.2f} vs per-step)")
 
-    os.makedirs(OUT_DIR, exist_ok=True)
-    # Smoke runs go to a separate (gitignored) file: BENCH_decode.json is
-    # the committed full-run record and must not be clobbered by CI smoke.
-    stem = "decode_chunk_smoke" if smoke else "BENCH_decode"
-    path = os.path.join(OUT_DIR, f"{stem}.json")
-    with open(path, "w") as f:
-        json.dump({"bench": "decode_chunk", "model": f"synthetic M={M} D={D}",
-                   "tokens": L, "records": records}, f, indent=1)
+    path = write_bench_json(
+        "decode",
+        {"model": f"synthetic M={M} D={D}", "tokens": L, "batch": 1,
+         "chunk_sizes": list(Ks), "strategies": list(strategies)},
+        records, smoke=smoke)
     write_csv("decode_chunk_smoke" if smoke else "decode_chunk",
               ["strategy", "chunk_K", "tokens", "seconds", "tok_s",
                "speedup_vs_per_step"],
               [[r["strategy"], r["chunk_K"], r["tokens"], r["seconds"],
                 r["tok_s"], r["speedup_vs_per_step"]] for r in records])
-    print(f"[bench_decode] wrote {os.path.abspath(path)}")
+    print(f"[bench_decode] wrote {path}")
     return path
 
 

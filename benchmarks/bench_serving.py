@@ -4,7 +4,8 @@ prompt/output-length request stream.
 
     PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
 
-Emits experiments/bench/BENCH_serving.json (one record per
+Emits experiments/bench/BENCH_serving.json (normalized
+{bench, machine, config, series} schema; one series entry per
 (strategy, n_slots) cell) plus the usual CSV.
 """
 
@@ -12,50 +13,33 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
-import os
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.models.hyena import HyenaLCSM
-from repro.serving import Request, make_server
+from repro.serving import make_server
 
-from benchmarks.common import OUT_DIR, write_csv
-
-
-def _requests(cfg, n_reqs, prompt_max, gen_max, seed=0):
-    rng = np.random.RandomState(seed)
-    return [
-        Request(uid=i,
-                prompt=rng.randint(0, cfg.vocab,
-                                   (int(rng.randint(1, prompt_max + 1)),)
-                                   ).astype(np.int32),
-                max_new=int(rng.randint(gen_max // 2, gen_max + 1)))
-        for i in range(n_reqs)
-    ]
+from benchmarks.common import serving_requests, write_bench_json, write_csv
 
 
 def run_cell(cfg, params, *, strategy, n_slots, n_reqs, prompt_max, gen_max):
     srv = make_server(cfg, params, n_slots=n_slots, prompt_max=prompt_max,
                       gen_max=gen_max, strategy=strategy)
-    for r in _requests(cfg, n_reqs, prompt_max, gen_max):
+    for r in serving_requests(cfg, n_reqs, prompt_max, gen_max):
         srv.submit(r)
     # warm-up pass compiles the red step + per-(tile-side, prompt-length)
     # specializations; a second identical stream is then timed.
     srv.run()
-    for r in _requests(cfg, n_reqs, prompt_max, gen_max):
+    for r in serving_requests(cfg, n_reqs, prompt_max, gen_max):
         srv.submit(r)
     t0 = time.perf_counter()
     done = srv.run()
     dt = time.perf_counter() - t0
     toks = sum(len(r.out) for r in done)
-    return {"arch": cfg.name, "family": cfg.family, "strategy": strategy,
-            "n_slots": n_slots, "n_requests": n_reqs, "tokens": toks,
-            "seconds": round(dt, 4), "tok_s": round(toks / dt, 2),
-            "prompt_max": prompt_max, "gen_max": gen_max}
+    return {"strategy": strategy, "n_slots": n_slots, "tokens": toks,
+            "seconds": round(dt, 4), "tok_s": round(toks / dt, 2)}
 
 
 def main(smoke: bool = False, n_ops: int = 2, d_model: int = 64,
@@ -70,7 +54,8 @@ def main(smoke: bool = False, n_ops: int = 2, d_model: int = 64,
         slot_counts = tuple(slot_counts)[:2]
 
     records = []
-    for strategy in ("flash", "lazy"):
+    strategies = ("flash", "lazy")
+    for strategy in strategies:
         for n_slots in slot_counts:
             rec = run_cell(cfg, params, strategy=strategy, n_slots=n_slots,
                            n_reqs=n_reqs, prompt_max=prompt_max,
@@ -80,17 +65,17 @@ def main(smoke: bool = False, n_ops: int = 2, d_model: int = 64,
                   f"{rec['tokens']} tok in {rec['seconds']:.2f}s  "
                   f"{rec['tok_s']:8.1f} tok/s")
 
-    os.makedirs(OUT_DIR, exist_ok=True)
-    # Smoke runs must not clobber the committed full-run BENCH record.
-    stem = "serving_smoke" if smoke else "BENCH_serving"
-    path = os.path.join(OUT_DIR, f"{stem}.json")
-    with open(path, "w") as f:
-        json.dump({"bench": "serving", "records": records}, f, indent=1)
+    path = write_bench_json(
+        "serving",
+        {"arch": cfg.name, "family": cfg.family, "n_requests": n_reqs,
+         "prompt_max": prompt_max, "gen_max": gen_max,
+         "slot_counts": list(slot_counts), "strategies": list(strategies)},
+        records, smoke=smoke)
     write_csv("serving_smoke" if smoke else "serving",
               ["strategy", "n_slots", "tokens", "seconds", "tok_per_s"],
               [[r["strategy"], r["n_slots"], r["tokens"], r["seconds"],
                 r["tok_s"]] for r in records])
-    print(f"[bench_serving] wrote {os.path.abspath(path)}")
+    print(f"[bench_serving] wrote {path}")
     return path
 
 

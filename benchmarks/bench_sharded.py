@@ -1,0 +1,121 @@
+"""Sharded multi-device Flash-Inference serving: tok/s vs device count.
+
+The serving mesh shards slots over a 'data' axis (``LCSMServer(mesh=...)``,
+see launch/mesh.make_serving_mesh); every device advances its slot shard's
+tile schedules concurrently — the paper's cross-layer gray-tile parallelism
+at mesh scale.  This benchmark sweeps the data-axis size over one fixed
+request trace and ALSO asserts the correctness bar along the way: every
+per-request greedy stream must be identical on every mesh size.
+
+Runs anywhere: if fewer real devices exist than the sweep needs, the host
+platform is forced to 8 virtual devices (``XLA_FLAGS=
+--xla_force_host_platform_device_count=8``) — that makes CPU CI exercise
+the real sharded program, though CPU "devices" are threads sharing one
+socket, so tok/s there measures dispatch overhead, not hardware scaling.
+
+    PYTHONPATH=src python -m benchmarks.bench_sharded [--smoke]
+
+Emits experiments/bench/BENCH_sharded.json (normalized
+{bench, machine, config, series} schema) plus the usual CSV.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def _force_host_devices(n: int = 8) -> None:
+    """Must run BEFORE jax is imported anywhere in this process."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+if __name__ == "__main__":  # only force when run as the entry point
+    _force_host_devices()
+
+import dataclasses  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.mesh import make_serving_mesh  # noqa: E402
+from repro.models.hyena import HyenaLCSM  # noqa: E402
+from repro.serving import make_server  # noqa: E402
+
+from benchmarks.common import (  # noqa: E402
+    serving_requests, write_bench_json, write_csv)
+
+
+def run_cell(cfg, params, *, n_devices, n_slots, n_reqs, prompt_max,
+             gen_max, chunk):
+    mesh = make_serving_mesh(data=n_devices) if n_devices else None
+    srv = make_server(cfg, params, n_slots=n_slots, prompt_max=prompt_max,
+                      gen_max=gen_max, chunk=chunk, mesh=mesh)
+    for r in serving_requests(cfg, n_reqs, prompt_max, gen_max):
+        srv.submit(r)
+    srv.run()  # warm-up: compiles every per-mesh program specialization
+    reqs = serving_requests(cfg, n_reqs, prompt_max, gen_max)
+    for r in reqs:
+        srv.submit(r)
+    t0 = time.perf_counter()
+    done = srv.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in done)
+    streams = {r.uid: tuple(r.out) for r in reqs}
+    return {"devices": n_devices or 1, "n_slots": n_slots, "tokens": toks,
+            "seconds": round(dt, 4), "tok_s": round(toks / dt, 2)}, streams
+
+
+def main(smoke: bool = False) -> str:
+    cfg = dataclasses.replace(
+        get_config("hyena").smoke(), name="hyena-sharded-bench",
+        n_layers=4, d_model=32 if smoke else 64,
+        d_ff=64 if smoke else 128, vocab=256)
+    params = HyenaLCSM(cfg).init(jax.random.PRNGKey(0))
+    prompt_max, gen_max = (4, 8) if smoke else (8, 32)
+    n_reqs = 6 if smoke else 16
+    chunk = 4
+    avail = jax.device_count()
+    counts = [n for n in (1, 2, 4, 8) if n <= avail]
+    if smoke:
+        counts = counts[:2]
+    n_slots = max(counts) * 2  # >= 2 slot rows per device on every mesh
+
+    records, ref_streams = [], None
+    for n in counts:
+        rec, streams = run_cell(cfg, params, n_devices=n, n_slots=n_slots,
+                                n_reqs=n_reqs, prompt_max=prompt_max,
+                                gen_max=gen_max, chunk=chunk)
+        # correctness gate: sharding must not change a single token.
+        if ref_streams is None:
+            ref_streams = streams
+        assert streams == ref_streams, (
+            f"greedy streams diverged on the {n}-device mesh")
+        records.append(rec)
+        print(f"[bench_sharded] devices={n}: {rec['tokens']} tok in "
+              f"{rec['seconds']:.2f}s  {rec['tok_s']:8.1f} tok/s")
+
+    path = write_bench_json(
+        "sharded",
+        {"arch": cfg.name, "family": cfg.family, "n_requests": n_reqs,
+         "prompt_max": prompt_max, "gen_max": gen_max, "n_slots": n_slots,
+         "chunk": chunk, "device_counts": counts,
+         "streams_identical_across_meshes": True},
+        records, smoke=smoke)
+    write_csv("sharded_smoke" if smoke else "sharded",
+              ["devices", "n_slots", "tokens", "seconds", "tok_s"],
+              [[r["devices"], r["n_slots"], r["tokens"], r["seconds"],
+                r["tok_s"]] for r in records])
+    print(f"[bench_sharded] wrote {path}")
+    return path
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

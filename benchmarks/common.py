@@ -1,16 +1,72 @@
 """Shared benchmark utilities: timed jit calls (warm-up per the paper §5:
-2 warm-up runs, then average over 4), CSV emission."""
+2 warm-up runs, then average over 4), CSV emission, and the one JSON schema
+every BENCH_*.json record follows:
+
+    {"bench": <name>, "machine": {...}, "config": {...}, "series": [...]}
+
+``machine`` captures the backend/devices the numbers were measured on,
+``config`` the swept workload, ``series`` one dict per measured cell.
+tests/test_bench_schema.py loads every committed BENCH_*.json against it.
+"""
 
 from __future__ import annotations
 
 import csv
+import json
 import os
+import platform
 import time
 from typing import Callable
 
 import jax
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def machine_info() -> dict:
+    """Where the numbers came from (goes into every BENCH json)."""
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+    }
+
+
+def write_bench_json(bench: str, config: dict, series: list[dict], *,
+                     smoke: bool = False) -> str:
+    """Write the normalized record.  Full runs go to the committed
+    ``BENCH_<bench>.json``; smoke runs to ``<bench>_smoke.json`` (gitignored)
+    so CI never clobbers the committed numbers."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    stem = f"{bench}_smoke" if smoke else f"BENCH_{bench}"
+    path = os.path.join(OUT_DIR, f"{stem}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": bench, "machine": machine_info(),
+                   "config": config, "series": series}, f, indent=1)
+    return os.path.abspath(path)
+
+
+def serving_requests(cfg, n_reqs: int, prompt_max: int, gen_max: int,
+                     seed: int = 0) -> list:
+    """The shared mixed-length request trace the serving-style benchmarks
+    sweep (bench_serving, bench_sharded): random prompts in [1, prompt_max],
+    outputs in [gen_max/2, gen_max], deterministic per seed."""
+    import numpy as np
+
+    from repro.serving import Request
+
+    rng = np.random.RandomState(seed)
+    return [
+        Request(uid=i,
+                prompt=rng.randint(0, cfg.vocab,
+                                   (int(rng.randint(1, prompt_max + 1)),)
+                                   ).astype(np.int32),
+                max_new=int(rng.randint(gen_max // 2, gen_max + 1)))
+        for i in range(n_reqs)
+    ]
 
 
 def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 4) -> float:

@@ -49,6 +49,21 @@ unit tests — pass ``chunk_size=K`` to turn it on.
 All jitted step/chunk functions DONATE their state argument: after calling
 them the passed-in ``EngineState`` is dead — callers must use the returned
 state (every in-repo caller threads state linearly).
+
+Multi-device: pass ``mesh=jax.sharding.Mesh(...)`` and the whole decode runs
+sharded — serving slots (the batch axis of every a/b buffer) split over the
+``data`` mesh axis, channels optionally over ``model`` (divisibility-guarded,
+see launch/sharding.engine_state_specs).  Because every engine computation is
+per-slot (vmapped rows) and τ is channel-separable, a data-sharded decode is
+collective-free and BITWISE identical to the single-device one: each device
+runs exactly the per-row programs it would run alone, and gray tiles of
+different conv widths from different layers/slots still dispatch concurrently
+per device shard (the paper's cross-layer parallelism at mesh scale).  Every
+state-returning function is traced with an explicit sharding constraint on
+the returned EngineState, so all cached programs — keyed by tile segment —
+lower with output shardings equal to the input's and the donated buffers
+alias IN PLACE on their home devices across chunks (no cross-device resharding
+per dispatch).
 """
 
 from __future__ import annotations
@@ -124,19 +139,26 @@ def _as_pos_vec(p, batch: int) -> jnp.ndarray:
     return p
 
 
+def _starts(q: jnp.ndarray, *rest) -> tuple:
+    """dynamic_slice start tuple mixing a traced index with literals: the
+    literals are cast to the traced dtype — x64 mode would otherwise
+    promote them to int64 and lax rejects the int32/int64 mix."""
+    return (q,) + tuple(jnp.asarray(r, q.dtype) for r in rest)
+
+
 def _slice_rows(arr: jnp.ndarray, p: jnp.ndarray, start_ch: int,
                 length: int, n_ch: int) -> jnp.ndarray:
     """Per-slot dynamic_slice: row b gets arr[b, p[b] : p[b]+length,
     start_ch : start_ch+n_ch].  Starts clamp like dynamic_slice."""
     return jax.vmap(
         lambda row, q: jax.lax.dynamic_slice(
-            row, (q, start_ch), (length, n_ch)))(arr, p)
+            row, _starts(q, start_ch), (length, n_ch)))(arr, p)
 
 
 def _update_rows(arr: jnp.ndarray, p: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
     """Per-slot dynamic_update_slice of val[b] at (p[b], 0)."""
     return jax.vmap(
-        lambda row, q, v: jax.lax.dynamic_update_slice(row, v, (q, 0))
+        lambda row, q, v: jax.lax.dynamic_update_slice(row, v, _starts(q, 0))
     )(arr, p, val)
 
 
@@ -161,12 +183,18 @@ class FlashEngine:
         parallel_levels: bool = True,
         use_pallas: bool = False,
         chunk_size: int = 1,
+        mesh=None,
+        data_axis: str = "data",
+        model_axis: str = "model",
     ):
         assert strategy in ("flash", "lazy", "eager")
         assert tau_impl in ("hybrid", "direct", "fft", "pallas")
         assert chunk_size >= 1
         self.model = model
         self.params = params
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.model_axis = model_axis
         self.batch = batch
         self.dtype = dtype
         self.strategy = strategy
@@ -200,6 +228,28 @@ class FlashEngine:
             for (_, _, rho_g) in self._groups
         ]
 
+        # --- mesh sharding: slots→data, channels→model (guarded).  Specs are
+        # computed once from the buffer shapes; _shard_state pins them on the
+        # traced output of every state-returning function so each cached
+        # program keeps the donated buffers sharded in place, and params are
+        # committed replicated so host pytrees aren't re-transferred per call.
+        if mesh is not None:
+            from repro.launch.sharding import engine_state_specs, replicated
+
+            shapes = EngineState(
+                a=tuple(jax.ShapeDtypeStruct((batch, self.Lbuf, w), dtype)
+                        for w in [model.a0_width]
+                        + [s.width for s in model.levels]),
+                b=tuple(jax.ShapeDtypeStruct(
+                    (batch, self.Lbuf, s.conv_size), jnp.float32)
+                    for s in model.levels))
+            self._state_specs = engine_state_specs(
+                shapes, mesh, data_axis=data_axis, model_axis=model_axis)
+            self.params = jax.device_put(
+                params, jax.tree.map(lambda _: replicated(mesh), params))
+        else:
+            self._state_specs = None
+
         # Every step function donates its EngineState: the a/b buffers alias
         # input to output in XLA instead of being copied per dispatch.
         self._jit_red = jax.jit(self._red_pass, donate_argnums=(1,))
@@ -217,6 +267,21 @@ class FlashEngine:
         self._jit_server_chunk: dict[int, Callable] = {}
 
     # ------------------------------------------------------------------ state
+    def _shard_state(self, state: EngineState) -> EngineState:
+        """Pin the engine's slot/channel sharding on a TRACED state (no-op
+        without a mesh).  Called at every state-returning trace's exit so
+        output shardings always equal input shardings — the condition for
+        XLA to honor donation across devices."""
+        if self._state_specs is None:
+            return state
+        return jax.lax.with_sharding_constraint(state, self._state_specs)
+
+    def place_state(self, state: EngineState) -> EngineState:
+        """Commit a CONCRETE state onto the mesh (no-op without one)."""
+        if self._state_specs is None:
+            return state
+        return jax.device_put(state, self._state_specs)
+
     def init_state(self) -> EngineState:
         m = self.model
         a = tuple(
@@ -227,7 +292,7 @@ class FlashEngine:
             jnp.zeros((self.batch, self.Lbuf, s.conv_size), jnp.float32)
             for s in m.levels
         )
-        return EngineState(a=a, b=b)
+        return self.place_state(EngineState(a=a, b=b))
 
     def set_first(self, state: EngineState, a0_first: jnp.ndarray) -> EngineState:
         a = list(state.a)
@@ -247,7 +312,7 @@ class FlashEngine:
         for arr in a:
             def one(row, s, kk):
                 win = jax.lax.dynamic_slice(
-                    row, (s, 0), (w + T, row.shape[1]))
+                    row, _starts(s, 0), (w + T, row.shape[1]))
                 # shift right by kk and zero-fill the head so index w+T-1
                 # always aligns with position p+T-1 (no-op when kk == 0).
                 rolled = jnp.roll(win, kk, axis=0)
@@ -271,14 +336,25 @@ class FlashEngine:
             a[l + 1] = _update_rows(a[l + 1], p, out.astype(self.dtype))
         acts = self._acts_windows(a, p, 1)
         a0_next, token = m.advance(params, acts, rng)
+        if self.mesh is not None:
+            # Pin the advance output replicated: otherwise GSPMD propagates
+            # the sharded a[0]-write backward into the model's jax.random ops,
+            # and legacy (non-partitionable) threefry generates DIFFERENT
+            # values when its output is sharded — sampling models would lose
+            # sharded-vs-unsharded bit-identity.  The advance is the tiny
+            # per-token tail (B×D), so replicating it costs nothing.
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            a0_next = jax.lax.with_sharding_constraint(a0_next, rep)
+            token = jax.lax.with_sharding_constraint(token, rep)
         # dynamic_update_slice clamps out-of-range starts, which would silently
         # overwrite the last row at the horizon — guard the final write per slot.
         def write_next(row, q, v, ok):
-            new = jax.lax.dynamic_update_slice(row, v[None], (q + 1, 0))
+            new = jax.lax.dynamic_update_slice(row, v[None], _starts(q + 1, 0))
             return jnp.where(ok, new, row)
         a[0] = jax.vmap(write_next)(
             a[0], p, a0_next.astype(self.dtype), p + 1 < self.Lbuf)
-        return EngineState(a=tuple(a), b=tuple(b)), token
+        return self._shard_state(EngineState(a=tuple(a), b=tuple(b))), token
 
     # ------------------------------------------------------------- gray tiles
     def _tau(self, y, rho2u, rho_f):
@@ -341,7 +417,7 @@ class FlashEngine:
                     oo = jnp.where((idx < self.Lbuf)[:, None], oo, 0.0)
                     return row.at[jnp.minimum(idx, self.Lbuf - 1)].add(oo)
                 b[l] = jax.vmap(add_tile)(b[l], p, o)
-        return state._replace(b=tuple(b))
+        return self._shard_state(state._replace(b=tuple(b)))
 
     # ----------------------------------------------------- baseline strategies
     def _lazy_fill(self, state: EngineState, p):
@@ -361,7 +437,7 @@ class FlashEngine:
             rvals = jnp.where(valid[..., None], rvals, 0.0)  # (B, Lbuf, C)
             contrib = jnp.einsum("blc,blc->bc", y, rvals)
             b[l] = _update_rows(b[l], p, contrib[:, None, :])
-        return state._replace(b=tuple(b))
+        return self._shard_state(state._replace(b=tuple(b)))
 
     def _eager_push(self, state: EngineState, p):
         """Eager: push a[b, p_b]'s contribution to every future b position
@@ -376,7 +452,7 @@ class FlashEngine:
             rvals = jnp.take(self._rho[l], jnp.where(valid, lag, 0), axis=0)
             rvals = jnp.where(valid[..., None], rvals, 0.0)  # (B, Lbuf, C)
             b[l] = b[l] + y_p * rvals
-        return state._replace(b=tuple(b))
+        return self._shard_state(state._replace(b=tuple(b)))
 
     # ---------------------------------------------------------------- prefill
     def _prefill_rows(self, params, a0_prompt: jnp.ndarray, rng):
@@ -421,7 +497,10 @@ class FlashEngine:
         rng = jax.random.PRNGKey(0) if rng is None else rng
         assert a0_prompt.shape[0] == self.batch
         a, b, token = self._jit_prefill(self.params, a0_prompt, rng)
-        return EngineState(a=tuple(a), b=tuple(b)), token
+        # full prefill builds fresh buffers from a replicated prompt, so the
+        # one-time commit onto the mesh happens here (decode then donates the
+        # sharded buffers in place).
+        return self.place_state(EngineState(a=tuple(a), b=tuple(b))), token
 
     def prefill_slot(
         self, state: EngineState, slot, a0_prompt: jnp.ndarray,
@@ -443,10 +522,10 @@ class FlashEngine:
         a1, b1, token = self._prefill_rows(params, a0_prompt, rng)
         def write_row(big, one):
             return jax.lax.dynamic_update_slice(
-                big, one.astype(big.dtype), (slot, 0, 0))
+                big, one.astype(big.dtype), _starts(slot, 0, 0))
         a = tuple(write_row(big, one) for big, one in zip(state.a, a1))
         b = tuple(write_row(big, one) for big, one in zip(state.b, b1))
-        return EngineState(a=a, b=b), token[0]
+        return self._shard_state(EngineState(a=a, b=b)), token[0]
 
     # ----------------------------------------------------------------- decode
     def generate(

@@ -79,18 +79,26 @@ def materialize_buffers(cfg: ModelConfig, params, batch: int, Lbuf: int,
     }
 
 
+def _starts(pos, *parts):
+    """dynamic_slice start tuple: every entry cast to the traced position's
+    dtype — x64 mode would otherwise promote the Python-int plane indices
+    to int64 and lax rejects the int32/int64 mix."""
+    dt = jnp.asarray(pos).dtype
+    return tuple(jnp.asarray(p, dt) for p in parts)
+
+
 def _plane(streams, idx: int, pos, T: int):
     """(B, T, D) window of plane ``idx`` ending at pos+T-1 (static idx,
     traced pos)."""
     _, B, _, D = streams.shape
     return jax.lax.dynamic_slice(
-        streams, (idx, 0, pos, 0), (1, B, T, D))[0]
+        streams, _starts(pos, idx, 0, pos, 0), (1, B, T, D))[0]
 
 
 def _write(streams, idx: int, pos, val):
     """Write (B, T, D) into plane idx at time pos."""
     return jax.lax.dynamic_update_slice(
-        streams, val[None].astype(streams.dtype), (idx, 0, pos, 0))
+        streams, val[None].astype(streams.dtype), _starts(pos, idx, 0, pos, 0))
 
 
 def seed_first_token(cfg: ModelConfig, params, bufs, tok0: jnp.ndarray,
@@ -133,13 +141,15 @@ def make_red_step(cfg: ModelConfig):
             op = params["ops"][k]
             # level 2k: b1 red cell + gate with shortconv(x1)
             vp = _plane(streams, 5 * k + 0, pos, 1)
-            b1 = jax.lax.dynamic_slice(b, (2 * k, 0, pos, 0), (1, B, 1, D))[0]
+            b1 = jax.lax.dynamic_slice(
+                b, _starts(pos, 2 * k, 0, pos, 0), (1, B, 1, D))[0]
             b1 = b1 + vp.astype(_F32) * rho0[2 * k]
             x1 = shortconv_at(streams, 5 * k + 1, pos, op["short_w"][:, D:2 * D])
             v1 = (x1 * b1.astype(x1.dtype))
             streams = _write(streams, 5 * k + 4, pos, v1)
             # level 2k+1: b2 red cell + gate with shortconv(x2), finish op
-            b2 = jax.lax.dynamic_slice(b, (2 * k + 1, 0, pos, 0), (1, B, 1, D))[0]
+            b2 = jax.lax.dynamic_slice(
+                b, _starts(pos, 2 * k + 1, 0, pos, 0), (1, B, 1, D))[0]
             b2 = b2 + v1.astype(_F32) * rho0[2 * k + 1]
             x2 = shortconv_at(streams, 5 * k + 2, pos, op["short_w"][:, 2 * D:3 * D])
             u = _plane(streams, 5 * k + 3, pos, 1)
@@ -206,7 +216,7 @@ def make_gray_step(cfg: ModelConfig, U: int, *, dp=None, mesh=None,
     def gray_step(streams, b, pos, rho):
         B = streams.shape[1]
         seg = jax.lax.dynamic_slice(
-            streams, (0, 0, pos - U + 1, 0),
+            streams, _starts(pos, 0, 0, pos - U + 1, 0),
             (streams.shape[0], B, U, D))
         ins = jnp.take(seg, plane_idx, axis=0).astype(_F32)  # (2n_ops,B,U,D)
         rho2u = rho[:, None, : 2 * U]  # (2n_ops, 1, 2U, D)
@@ -227,10 +237,10 @@ def make_gray_step(cfg: ModelConfig, U: int, *, dp=None, mesh=None,
         else:
             out = tau_all_levels(ins, rho2u)
 
-        cur = jax.lax.dynamic_slice(b, (0, 0, pos + 1, 0),
+        cur = jax.lax.dynamic_slice(b, _starts(pos, 0, 0, pos + 1, 0),
                                     (b.shape[0], B, U, D))
         return jax.lax.dynamic_update_slice(
-            b, cur + out.astype(_F32), (0, 0, pos + 1, 0))
+            b, cur + out.astype(_F32), _starts(pos, 0, 0, pos + 1, 0))
 
     return gray_step
 

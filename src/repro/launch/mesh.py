@@ -29,3 +29,23 @@ def make_host_mesh(n_devices: int | None = None):
     """Tiny mesh over the actually-present devices (CPU tests)."""
     n = n_devices or len(jax.devices())
     return jax.make_mesh((1, n), ("data", "model"))
+
+
+def make_serving_mesh(data: int = 1, model: int = 1, *, devices=None):
+    """(data, model) mesh over the FIRST data*model present devices — unlike
+    ``jax.make_mesh`` it does not insist on using every device, so device-count
+    scaling sweeps (benchmarks/bench_sharded.py) and sharded-vs-unsharded
+    differential tests can build (1,), (2,), (4,) meshes on one forced-host
+    process (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+    Serving shards slots over ``data`` and channels over ``model``."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = list(jax.devices() if devices is None else devices)
+    need = data * model
+    if len(devs) < need:
+        raise ValueError(
+            f"mesh ({data}, {model}) needs {need} devices, have {len(devs)} "
+            "(force more with XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return Mesh(np.asarray(devs[:need]).reshape(data, model),
+                ("data", "model"))

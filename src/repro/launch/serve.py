@@ -7,6 +7,14 @@ Both backend families go through ``repro.serving.make_server``: LCSM archs
 get the slot-based Flash-Inference LCSMServer (per-slot tile schedules),
 all others the ServingEngine with per-family caches.  Same admission loop
 either way: submit -> run -> slots refill as requests retire.
+
+Multi-device: ``--mesh-data N [--mesh-model M]`` builds an (N, M) serving
+mesh (launch/mesh.make_serving_mesh) and shards slots over 'data' /
+channels over 'model'.  On a CPU host, force devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve --arch hyena --smoke \
+        --slots 4 --mesh-data 4
 """
 
 from __future__ import annotations
@@ -35,11 +43,23 @@ def main():
     ap.add_argument("--strategy", default="flash",
                     choices=["flash", "lazy", "eager"],
                     help="LCSM mixer strategy (ignored for other families)")
+    ap.add_argument("--mesh-data", type=int, default=0,
+                    help="shard slots over a 'data' mesh axis of this size")
+    ap.add_argument("--mesh-model", type=int, default=1,
+                    help="shard channels over a 'model' mesh axis")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+
+    mesh = None
+    if args.mesh_data or args.mesh_model > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(data=max(args.mesh_data, 1),
+                                 model=args.mesh_model)
+        print(f"serving mesh: {dict(mesh.shape)} over "
+              f"{mesh.devices.size} {jax.devices()[0].platform} device(s)")
 
     if cfg.family == "lcsm":
         from repro.models.hyena import HyenaLCSM
@@ -51,7 +71,7 @@ def main():
         extra = {"cache_dtype": jnp.float32}
     srv = make_server(cfg, params, n_slots=args.slots, max_seq=args.max_seq,
                       prompt_max=args.prompt_len, gen_max=args.max_new,
-                      **extra)
+                      mesh=mesh, **extra)
 
     rng = np.random.RandomState(0)
     t0 = time.perf_counter()

@@ -155,6 +155,25 @@ def cache_specs(caches: Any, mesh: Mesh, *, shard_seq: bool = False) -> Any:
     return jax.tree_util.tree_map_with_path(spec, caches)
 
 
+# ---------------------------------------------------- FlashEngine state
+def engine_state_specs(state: Any, mesh: Mesh, *, data_axis: Any = "data",
+                       model_axis: Any = "model") -> Any:
+    """Shardings for FlashEngine's EngineState (and any pytree whose leaves
+    are (B, Lbuf, C) buffers): serving slots (batch) → ``data_axis``,
+    channels → ``model_axis``, the time axis replicated (every tile slices a
+    traced position window; an L-sharded buffer would all-gather per step —
+    same rationale as ``lcsm_buffer_specs``).  Divisibility-guarded like the
+    param rules, so the same call serves any mesh including the 1-device
+    test mesh.  Works on concrete arrays and ShapeDtypeStructs alike."""
+    def spec(leaf):
+        if leaf.ndim != 3:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, _guard(mesh, (data_axis, None, model_axis), leaf.shape))
+
+    return jax.tree.map(spec, state)
+
+
 # ------------------------------------------------------------- LCSM buffers
 def lcsm_buffer_specs(bufs: Any, mesh: Mesh, *, shard_seq: bool) -> Any:
     """Flash-Inference plane-stacked buffers (see launch/lcsm_steps.py):

@@ -28,6 +28,9 @@ def make_server(cfg: ModelConfig, params: Any, *, n_slots: int,
     the LCSM per-slot buffers (Lbuf = prompt_max + ceil_pow2(gen_max)).
     Extra keyword args go to the chosen backend (e.g. ``strategy=`` /
     ``tau_impl=`` for LCSM, ``window=`` / ``cache_dtype=`` for the rest).
+    ``mesh=`` (both backends) shards serving slots over the mesh's 'data'
+    axis and channels/decode state over 'model' — see
+    launch/mesh.make_serving_mesh and README "Multi-device serving".
     """
     if cfg.family == "lcsm":
         return LCSMServer(cfg, params, n_slots=n_slots,

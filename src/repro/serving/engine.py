@@ -41,7 +41,7 @@ class Request:
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Any, *, n_slots: int,
                  max_seq: int, window: int | None = None,
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, mesh=None):
         assert cfg.family != "lcsm", "use LCSMServer for LCSM archs"
         self.cfg = cfg
         self.model = LM(cfg)
@@ -50,8 +50,18 @@ class ServingEngine:
         self.S = max_seq
         self.window = window
         self.cache_dtype = cache_dtype
+        self.mesh = mesh
         self.caches = self.model.init_caches(
             n_slots, max_seq, dtype=cache_dtype, window=window)
+        if mesh is not None:
+            # Same mesh contract as the LCSM backend: slots→data (cache batch
+            # axis), decode state→model where divisible; params replicated.
+            # The spec helpers live in launch/sharding (reused, not forked).
+            from repro.launch.sharding import cache_specs, replicated
+            self.caches = jax.device_put(
+                self.caches, cache_specs(self.caches, mesh))
+            self.params = jax.device_put(
+                params, jax.tree.map(lambda _: replicated(mesh), params))
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
         self.slots: list[Request | None] = [None] * n_slots
         self.queue: list[Request] = []

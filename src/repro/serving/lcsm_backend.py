@@ -84,7 +84,7 @@ class LCSMServer:
                  strategy: str = "flash", tau_impl: str = "hybrid",
                  direct_max: int = 32, use_pallas: bool = False,
                  chunk: int | None = None, chunk_size: int = 1,
-                 seed: int = 0):
+                 mesh=None, seed: int = 0):
         assert cfg.family == "lcsm"
         assert strategy in ("flash", "lazy", "eager")
         if n_slots is None:
@@ -92,11 +92,16 @@ class LCSMServer:
         self.cfg = cfg
         self.model = HyenaLCSM(cfg)
         self.params = params
+        # mesh: slots shard over the 'data' axis, channels over 'model'
+        # (launch/sharding.engine_state_specs); greedy streams stay bitwise
+        # identical to the single-device server for the same request trace
+        # (tests/test_differential.py).
+        self.mesh = mesh
         self.engine = FlashEngine(
             self.model, params, batch=n_slots, gen_max=gen_max,
             prompt_max=prompt_max, strategy=strategy, tau_impl=tau_impl,
             direct_max=direct_max, use_pallas=use_pallas,
-            chunk_size=chunk_size)
+            chunk_size=chunk_size, mesh=mesh)
         self.batch = self.B = n_slots
         self.strategy = strategy
         self.gen_max = gen_max

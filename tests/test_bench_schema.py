@@ -1,0 +1,61 @@
+"""Every committed experiments/bench/BENCH_*.json follows ONE schema:
+
+    {"bench": str, "machine": {...}, "config": {...}, "series": [cell, ...]}
+
+(benchmarks/common.write_bench_json).  bench_serving and bench_decode used
+to emit differently-shaped records; this pins the normalization so the
+committed numbers stay machine-readable by one loader.
+"""
+
+import glob
+import json
+import os
+
+import pytest
+
+BENCH_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "..", "experiments", "bench")
+
+
+def _bench_files():
+    return sorted(glob.glob(os.path.join(BENCH_DIR, "BENCH_*.json")))
+
+
+def test_committed_bench_records_exist():
+    names = {os.path.basename(p) for p in _bench_files()}
+    assert {"BENCH_decode.json", "BENCH_serving.json",
+            "BENCH_sharded.json"} <= names, names
+
+
+@pytest.mark.parametrize("path", _bench_files(), ids=os.path.basename)
+def test_bench_record_schema(path):
+    with open(path) as f:
+        rec = json.load(f)
+    assert set(rec) == {"bench", "machine", "config", "series"}, set(rec)
+    assert isinstance(rec["bench"], str) and rec["bench"]
+
+    machine = rec["machine"]
+    for key in ("backend", "device_count", "device_kind", "python", "jax"):
+        assert key in machine, f"machine missing {key!r}"
+    assert machine["device_count"] >= 1
+
+    assert isinstance(rec["config"], dict) and rec["config"]
+
+    series = rec["series"]
+    assert isinstance(series, list) and series
+    for cell in series:
+        assert isinstance(cell, dict)
+        assert isinstance(cell.get("tokens"), int) and cell["tokens"] > 0
+        assert isinstance(cell.get("seconds"), (int, float))
+        assert isinstance(cell.get("tok_s"), (int, float)) and cell["tok_s"] > 0
+
+
+def test_sharded_bench_covers_multiple_device_counts():
+    """Acceptance: BENCH_sharded.json shows tok/s for >= 2 device counts,
+    measured with streams verified identical across meshes."""
+    path = os.path.join(BENCH_DIR, "BENCH_sharded.json")
+    with open(path) as f:
+        rec = json.load(f)
+    counts = {cell["devices"] for cell in rec["series"]}
+    assert len(counts) >= 2, counts
+    assert rec["config"]["streams_identical_across_meshes"] is True

@@ -10,7 +10,9 @@ from _hypothesis_compat import given, settings, st
 from repro.core import tau as tau_mod
 from repro.core import tiling
 
-jax.config.update("jax_enable_x64", False)
+# NOTE: do NOT disable x64 here — pytest imports every module at collection
+# time, so a global jax.config.update would silently turn the CI x64 matrix
+# leg back into the default-dtype suite.  Tests pin dtypes explicitly.
 
 
 # ----------------------------------------------------------------- schedule
@@ -23,6 +25,70 @@ def test_tiling_covers_exactly_once(L):
 @settings(max_examples=25, deadline=None)
 def test_tiling_covers_non_pow2(L):
     tiling.validate_tiling(L)
+
+
+# ------------------------------------------------- schedule properties
+# (randomized invariants, not hand-picked cases: the hypothesis shim in
+# _hypothesis_compat draws deterministic seeded examples when hypothesis
+# itself is absent, so these run everywhere.)
+@given(st.integers(min_value=1, max_value=8))
+@settings(max_examples=8, deadline=None)
+def test_red_steps_finalize_each_position_exactly_once(P):
+    """Every output position is finalized by exactly the red pass: no gray
+    tile ever touches a diagonal cell (tiles are strictly causal,
+    in_hi < out_lo, so every cell they cover has i < z), and the full
+    cell-coverage audit (validate_tiling: each off-diagonal contribution
+    covered exactly once, causally) holds for random pow2 L — not just the
+    hand-picked parametrize list above."""
+    L = 1 << P
+    for t in tiling.tile_schedule(L):
+        assert t.in_hi < t.out_lo
+    tiling.validate_tiling(L)  # exact single coverage, O(L^2) audit
+
+
+@given(st.integers(min_value=1, max_value=9))
+@settings(max_examples=9, deadline=None)
+def test_each_gray_tile_unlocked_exactly_once(P):
+    """For L = 2^P the schedule unlocks exactly one gray tile per step
+    i in [1, L) — side 2^nu(i), input block ending at i, output block
+    starting at i+1, unclipped (out_side == side) — and distinct tiles
+    never share an output block."""
+    L = 1 << P
+    tiles = list(tiling.tile_schedule(L))
+    assert [t.step for t in tiles] == list(range(1, L))
+    out_blocks = set()
+    for t in tiles:
+        assert t.side == tiling.largest_pow2_divisor(t.step)
+        assert t.out_side == t.side  # pow2 L: tiles fit exactly
+        assert (t.in_hi, t.out_lo) == (t.step, t.step + 1)
+        block = (t.out_lo, t.out_hi)
+        assert block not in out_blocks, f"output block {block} written twice"
+        out_blocks.add(block)
+
+
+@given(st.integers(min_value=2, max_value=9),   # L = 2^P
+       st.integers(min_value=0, max_value=5))   # K = 2^k
+@settings(max_examples=30, deadline=None)
+def test_schedule_segment_partitions_schedule(P, k):
+    """Concatenating aligned K-chunks of schedule_segment over a whole
+    generation partitions the step range [1, L): every step appears in
+    exactly one segment slot, with its lowbit side, and slots at/after the
+    last step carry 0 (no tile runs there)."""
+    L = 1 << P
+    K = min(1 << k, L)
+    covered = {}
+    j = 0
+    while j * K + 1 <= L:
+        seg = tiling.schedule_segment(j * K + 1, K, last_step=L)
+        for i, side in enumerate(seg):
+            r = j * K + 1 + i
+            assert r not in covered, f"step {r} covered twice"
+            covered[r] = side
+        j += 1
+    assert sorted(covered) == list(range(1, j * K + 1))
+    for r, side in covered.items():
+        want = tiling.largest_pow2_divisor(r) if r < L else 0
+        assert side == want, (L, K, r, side, want)
 
 
 def test_tile_histogram_matches_proposition_1():

@@ -221,6 +221,75 @@ def test_flash_pallas_engine_decode_matches_hybrid():
             np.asarray(sp.a[l]), np.asarray(sh.a[l]), rtol=2e-5, atol=2e-5)
 
 
+# --------------------------------------------------------- rng-key schedule
+# step_chunk's docstring (PR 2) promises: (1) the fused lockstep chunk
+# splits the rng EXACTLY as the per-step loop does, so sampling models see
+# identical keys; (2) the server chunk consumes one split per blind step —
+# a different (but deterministic and reproducible) schedule than per-step
+# serving.  These tests pin both halves so the contract can't silently rot.
+class _SamplingLCSM(SyntheticLCSM):
+    """advance() actually consumes its rng and leaks a key fingerprint as
+    the token — the emitted stream IS the rng-key schedule."""
+
+    def advance(self, params, acts, rng):
+        nxt, _ = super().advance(params, acts, rng)
+        token = jax.random.randint(rng, (nxt.shape[0],), 0, 1 << 30)
+        return nxt, token.astype(jnp.int32)
+
+
+def _sampling_engine(chunk_size):
+    model = _SamplingLCSM(n_levels=2, d_model=4)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, FlashEngine(model, params, batch=2, gen_max=16,
+                              chunk_size=chunk_size)
+
+
+def test_chunked_rng_schedule_matches_stepwise_and_reproduces():
+    """Lockstep decode_chunk must consume the SAME per-step rng splits as
+    the stepwise loop (the tokens are key fingerprints, so equality of
+    streams is equality of key schedules), and a re-run from the same seed
+    must reproduce the stream bitwise."""
+    n = 16
+    model, e1 = _sampling_engine(chunk_size=1)
+    _, t1 = _decode(e1, model, n)
+    for K in (4, 8):
+        _, eK = _sampling_engine(chunk_size=K)
+        _, tK = _decode(eK, model, n)
+        np.testing.assert_array_equal(t1, tK)
+    _, e1b = _sampling_engine(chunk_size=1)
+    _, t1b = _decode(e1b, model, n)
+    np.testing.assert_array_equal(t1, t1b)
+
+
+def test_chunk_rng_advances_one_split_per_step():
+    """decode_chunk and server_chunk return the rng advanced by EXACTLY one
+    split per schedule step (len(sides) resp. K of them), matching the
+    stepwise loop's split chain — the documented deterministic schedule."""
+    model, eng = _sampling_engine(chunk_size=1)
+    rng = jax.random.PRNGKey(3)
+
+    state = eng.init_state()
+    state = eng.set_first(
+        state, jax.random.normal(jax.random.PRNGKey(1), (2, model.d)))
+    sides = schedule_segment(1, 4, origin=0, horizon=eng.Lbuf, last_step=8)
+    _, _, rng_out = eng.decode_chunk(state, 0, rng, sides)
+
+    want = rng
+    for _ in range(len(sides)):
+        want, _ = jax.random.split(want)
+    np.testing.assert_array_equal(np.asarray(rng_out), np.asarray(want))
+
+    K = 5
+    state2 = eng.init_state()
+    _, _, rng_out2 = eng.server_chunk(
+        state2, np.zeros(2, np.int32), np.zeros(2, np.int32),
+        np.ones(2, bool), rng, K)
+    want2 = rng
+    for _ in range(K):
+        want2, _ = jax.random.split(want2)
+    np.testing.assert_array_equal(np.asarray(rng_out2), np.asarray(want2))
+
+
 # ---------------------------------------------------------------- donation
 def test_step_functions_donate_state():
     """The jitted step/chunk functions donate their buffers: when the
