@@ -1,0 +1,154 @@
+"""Generic-engine ("and Beyond") decode throughput: GLA flash vs the
+recurrent RNN-mode oracle, across decode length L and chunk size K.
+
+    PYTHONPATH=src python -m benchmarks.bench_generic [--smoke]
+
+What the numbers mean: GLA is the honesty check for the generic framework
+— unlike long convolutions it ADMITS a compact O(1)-state recurrence, so
+the scan-based RNN mode is the hardware speed-of-light for this mixer and
+the flash schedule's generality has a measurable price (tile dispatches +
+O(log L) state rows touched instead of one).  The interesting curves are
+(a) how much of that price the fused chunk path (K) buys back — the same
+dispatch-amortization story bench_decode.py tells for Hyena — and (b) how
+the gap scales with L.  For mixers with no compact recurrence (the
+paper's main subjects) the recurrent column does not exist and flash is
+the only sub-quadratic autoregressive option.
+
+Emits experiments/bench/BENCH_generic.json in the pinned
+{bench, machine, config, series} schema (tests/test_bench_schema.py) plus
+the usual CSV.  Streams are verified identical across modes before
+timing — a benchmark over diverging decodes would be meaningless.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.generic import GenericFlashEngine
+from repro.models.gla import GLALM
+
+from benchmarks.common import write_bench_json, write_csv
+
+
+def _recurrent_decode_fn(model: GLALM, params, L: int, batch: int):
+    """One jitted lax.scan over L greedy RNN-mode steps (device-resident:
+    the strongest recurrent baseline, one dispatch for the whole decode)."""
+    def step(carry, _):
+        u, S = carry
+        mixers = model.mixers(params)
+        S2 = []
+        h = u
+        for l, mix in enumerate(mixers):
+            s_l = mix.step_state(S[l], h)
+            S2.append(s_l)
+            z = mix.read(s_l, h)
+            h = model.block(params, l, z[:, None], h[:, None])[:, 0]
+        logits = model.logits(params, h)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return (params["emb"][tok], tuple(S2)), tok
+
+    @jax.jit
+    def decode(u0):
+        S0 = tuple(jnp.zeros((batch, m.dk, m.dv), jnp.float32)
+                   for m in model.mixers(params))
+        (_, _), toks = jax.lax.scan(step, (u0, S0), None, length=L)
+        return toks.T  # (B, L)
+
+    return decode
+
+
+def run_flash(model, params, *, L: int, K: int, batch: int = 1):
+    eng = GenericFlashEngine(model, params, batch=batch, gen_max=L,
+                             chunk_size=K)
+    u0 = model.embed_tokens(params, jnp.zeros((batch, 1), jnp.int32))[:, 0]
+
+    def decode():
+        state = eng.set_first(eng.init_state(), u0)
+        state, toks = eng.generate(state, L, rng=jax.random.PRNGKey(2))
+        jax.block_until_ready(state.a[0])
+        return np.asarray(toks)
+
+    toks = decode()  # warm-up: compiles every chunk segment
+    t0 = time.perf_counter()
+    decode()
+    dt = time.perf_counter() - t0
+    return toks, {"mode": "flash", "chunk_K": K, "L": L, "batch": batch,
+                  "tokens": L, "seconds": round(dt, 4),
+                  "tok_s": round(L * batch / dt, 2)}
+
+
+def run_recurrent(model, params, *, L: int, batch: int = 1):
+    decode = _recurrent_decode_fn(model, params, L, batch)
+    u0 = model.embed_tokens(params, jnp.zeros((batch, 1), jnp.int32))[:, 0]
+    toks = np.asarray(jax.block_until_ready(decode(u0)))  # warm-up/compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(decode(u0))
+    dt = time.perf_counter() - t0
+    return toks, {"mode": "recurrent", "chunk_K": 0, "L": L, "batch": batch,
+                  "tokens": L, "seconds": round(dt, 4),
+                  "tok_s": round(L * batch / dt, 2)}
+
+
+def main(smoke: bool = False) -> str:
+    import dataclasses
+
+    from repro.configs import get_config
+
+    if smoke:
+        cfg = dataclasses.replace(get_config("gla").smoke(), name="gla-bench",
+                                  n_layers=2, d_model=32, d_ff=64, vocab=256,
+                                  gla_dk=8, gla_dv=32)
+        Ls, Ks = (32,), (1, 4)
+    else:
+        cfg = dataclasses.replace(get_config("gla").smoke(), name="gla-bench",
+                                  n_layers=2, d_model=64, d_ff=128, vocab=512,
+                                  gla_dk=16, gla_dv=64)
+        Ls, Ks = (64, 256), (1, 4, 16)
+    model = GLALM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    records = []
+    for L in Ls:
+        ref_toks, rec = run_recurrent(model, params, L=L)
+        records.append(rec)
+        print(f"[bench_generic] recurrent    L={L:4d}: "
+              f"{rec['seconds']:.3f}s  {rec['tok_s']:9.1f} tok/s")
+        base = None
+        for K in Ks:
+            toks, cell = run_flash(model, params, L=L, K=K)
+            # greedy streams must agree before the timing means anything
+            assert np.array_equal(toks, ref_toks), \
+                f"flash(K={K}) diverged from recurrent oracle at L={L}"
+            base = cell["tok_s"] if K == 1 else base
+            cell["speedup_vs_per_step"] = round(cell["tok_s"] / base, 2)
+            records.append(cell)
+            print(f"[bench_generic] flash K={K:3d} L={L:4d}: "
+                  f"{cell['seconds']:.3f}s  {cell['tok_s']:9.1f} tok/s  "
+                  f"(x{cell['speedup_vs_per_step']:.2f} vs per-step)")
+
+    path = write_bench_json(
+        "generic",
+        {"model": f"gla M={cfg.n_layers} D={cfg.d_model} "
+                  f"dk={cfg.gla_dk} dv={cfg.gla_dv}",
+         "lengths": list(Ls), "chunk_sizes": list(Ks), "batch": 1,
+         "modes": ["flash", "recurrent"],
+         "streams_identical_across_modes": True},
+        records, smoke=smoke)
+    write_csv("generic_smoke" if smoke else "generic",
+              ["mode", "chunk_K", "L", "tokens", "seconds", "tok_s"],
+              [[r["mode"], r["chunk_K"], r["L"], r["tokens"], r["seconds"],
+                r["tok_s"]] for r in records])
+    print(f"[bench_generic] wrote {path}")
+    return path
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -18,13 +18,15 @@ def main() -> None:
                     help="smaller sweeps (CI-sized)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_e2e, bench_flops, bench_mixer,
-                            bench_serving, bench_tau, bench_tokentime,
-                            roofline_report)
+    from benchmarks import (bench_e2e, bench_flops, bench_generic,
+                            bench_mixer, bench_serving, bench_tau,
+                            bench_tokentime, roofline_report)
 
     jobs = [
         ("serving throughput (continuous batching)",
          lambda: bench_serving.main(smoke=args.fast)),
+        ("generic engine, GLA flash vs recurrent (§4 'and Beyond')",
+         lambda: bench_generic.main(smoke=args.fast)),
         ("flops (Prop 1/2, Thm 2)", lambda: bench_flops.main()),
         ("tau Pareto (Fig 3a/3b)", lambda: bench_tau.main(
             D=64 if args.fast else 128)),

@@ -7,13 +7,16 @@ greedy decode.  Works for both backend families through ``make_server``:
 
     PYTHONPATH=src python examples/serve_batched.py --arch qwen2.5-3b
     PYTHONPATH=src python examples/serve_batched.py --arch hyena
+    PYTHONPATH=src python examples/serve_batched.py --arch gla --chunk 4
 
 The hyena path routes through the Flash-Inference LCSMServer, whose tile
 schedule is per-slot — each request runs its own Algorithm-2 schedule
 while sharing the batched red pass and per-tile-side gray dispatches.
-``--chunk K`` (LCSM only) advances slots in fused device-resident K-token
-chunks — one dispatch and one token readback per chunk — and the exactness
-check below still holds stream-for-stream.
+The gla path ("and Beyond", §4) runs the SAME per-slot schedules through
+the generic-mixer engine (GenericServer).  ``--chunk K`` (LCSM/GLA)
+advances slots in fused device-resident K-token chunks — one dispatch and
+one token readback per chunk — and the exactness check below still holds
+stream-for-stream.
 """
 
 import argparse
@@ -38,6 +41,11 @@ def _reference_decode(cfg, params, prompt, n):
         # length-normalized implicit filters.
         return isolated_decode(cfg, params, prompt, n,
                                prompt_max=PROMPT_MAX, gen_max=GEN_MAX)
+    if cfg.family == "gla":
+        from repro.serving.generic_backend import isolated_decode
+
+        return isolated_decode(cfg, params, prompt, n,
+                               prompt_max=PROMPT_MAX, gen_max=GEN_MAX)
     from repro.models.lm import LM
 
     model = LM(cfg)
@@ -55,7 +63,7 @@ def main():
     ap.add_argument("--n-requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--chunk", type=int, default=None,
-                    help="fused decode chunk size K (LCSM backend only); "
+                    help="fused decode chunk size K (LCSM/GLA backends); "
                          "default: per-step")
     args = ap.parse_args()
 
@@ -63,12 +71,15 @@ def main():
     if cfg.family == "lcsm":
         from repro.models.hyena import HyenaLCSM
         params = HyenaLCSM(cfg).init(jax.random.PRNGKey(0))
+    elif cfg.family == "gla":
+        from repro.models.gla import GLALM
+        params = GLALM(cfg).init(jax.random.PRNGKey(0))
     else:
         from repro.models.lm import LM
         params = LM(cfg).init(jax.random.PRNGKey(0))
     eng = make_server(cfg, params, n_slots=args.slots, max_seq=64,
                       prompt_max=PROMPT_MAX, gen_max=GEN_MAX,
-                      **({} if cfg.family == "lcsm"
+                      **({} if cfg.family in ("lcsm", "gla")
                          else {"cache_dtype": jnp.float32}))
 
     rng = np.random.RandomState(0)
@@ -87,7 +98,7 @@ def main():
     # ServingEngine.run ignores chunk (no fused multi-token transformer
     # step) — only report it where it actually changed the decode.
     chunk_note = (f", chunk={args.chunk}"
-                  if args.chunk and cfg.family == "lcsm" else "")
+                  if args.chunk and cfg.family in ("lcsm", "gla") else "")
     print(f"served {len(done)} requests / {total} tokens in {dt:.2f}s "
           f"on {args.slots} slots{chunk_note} ({total / dt:.1f} tok/s)")
 

@@ -4,7 +4,7 @@ from repro.configs.base import ModelConfig, LayerDef, Stack, get_config, list_co
 from repro.configs import (  # noqa: F401
     phi3_5_moe_42b, mistral_nemo_12b, internlm2_20b, deepseek_coder_33b,
     whisper_tiny, deepseek_v3_671b, qwen2_5_3b, falcon_mamba_7b,
-    qwen2_vl_72b, jamba_1_5_large, hyena,
+    qwen2_vl_72b, jamba_1_5_large, hyena, gla,
 )
 
 ASSIGNED = (

@@ -13,7 +13,7 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Literal, Sequence
 
-MixerKind = Literal["attn", "mla", "mamba", "hyena", "attn_cross"]
+MixerKind = Literal["attn", "mla", "mamba", "hyena", "gla", "attn_cross"]
 FFNKind = Literal["dense", "moe", "none"]
 
 
@@ -39,7 +39,8 @@ class Stack:
 @dataclass(frozen=True)
 class ModelConfig:
     name: str
-    family: Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm", "lcsm"]
+    family: Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm", "lcsm",
+                    "gla"]
     n_layers: int
     d_model: int
     n_heads: int
@@ -104,6 +105,12 @@ class ModelConfig:
     filter_decay_fast: float = 0.3       # per-channel decay window range
     filter_decay_slow: float = 1e-3
 
+    # GLA ("and Beyond" generic-mixer family): per-layer gated linear
+    # attention with key/value dims dk/dv (0 = d_model) and decay λ.
+    gla_dk: int = 0
+    gla_dv: int = 0
+    gla_lam: float = 0.98
+
     # gradient-accumulation microbatches for train_4k (memory/throughput trade)
     train_microbatch: int = 1
 
@@ -121,6 +128,8 @@ class ModelConfig:
         if self.family == "lcsm":
             n_ops = self.n_layers // (self.hyena_order - 1)
             return (Stack((LayerDef("hyena", "dense"),), n_ops),)
+        if self.family == "gla":
+            return (Stack((LayerDef("gla", "dense"),), self.n_layers),)
         if self.family == "ssm":
             return (Stack((LayerDef("mamba", "none"),), self.n_layers),)
         if self.family == "hybrid":
@@ -178,6 +187,9 @@ class ModelConfig:
             changes.update(ssm_state=8, conv_k=4, d_inner=2 * d)
         if self.family == "lcsm":
             changes.update(filter_pos_dim=8, filter_mlp_width=16)
+        if self.family == "gla":
+            changes.update(gla_dk=min(self.gla_dk or 16, 16),
+                           gla_dv=min(self.gla_dv or d, d))
         return dataclasses.replace(self, **changes)
 
     def to_hyena(self) -> "ModelConfig":

@@ -1,0 +1,17 @@
+"""gla — the paper's "and Beyond" instance served for real: a gated
+linear-attention LM in the style of "Transformers are RNNs"
+[Katharopoulos et al. 2020, arXiv:2006.16236] with a learned-free decay
+gate (Laughing Hyena / RetNet-style λ), sized like a small GPT-2.  Decode
+runs through the GENERIC Flash-Inference engine (core/generic.py,
+Algorithm 4) rather than the LCSM engine — the point of the config is
+that make_server drives a second mixer family behind the same surface."""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gla", family="gla",
+    n_layers=12,
+    d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab=50257,
+    gla_dk=64, gla_dv=512, gla_lam=0.98,
+    long_ctx_mode="native",
+))

@@ -68,22 +68,16 @@ per dispatch).
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Protocol, Sequence
+from typing import Any, NamedTuple, Protocol, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import tau as tau_mod
-from repro.core.tiling import largest_pow2_divisor, schedule_segment
-
-
-def ceil_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
+from repro.core.schedule import (  # noqa: F401 — ceil_pow2 re-exported
+    ScheduleWalker, ceil_pow2, slice_rows, starts, update_rows,
+    write_next_rows, write_slot_rows)
 
 
 @dataclass(frozen=True)
@@ -131,38 +125,14 @@ class EngineState(NamedTuple):
     b: tuple[jnp.ndarray, ...]  # level l (1-based, stored at l-1): (B, Lbuf, conv_size_l)
 
 
-def _as_pos_vec(p, batch: int) -> jnp.ndarray:
-    """Normalize a position argument to a (batch,) int32 vector."""
-    p = jnp.asarray(p, jnp.int32)
-    if p.ndim == 0:
-        p = jnp.full((batch,), p, jnp.int32)
-    return p
+# Backwards-compatible aliases — the canonical definitions moved to
+# repro.core.schedule (shared with the generic §4 engine).
+_starts = starts
+_slice_rows = slice_rows
+_update_rows = update_rows
 
 
-def _starts(q: jnp.ndarray, *rest) -> tuple:
-    """dynamic_slice start tuple mixing a traced index with literals: the
-    literals are cast to the traced dtype — x64 mode would otherwise
-    promote them to int64 and lax rejects the int32/int64 mix."""
-    return (q,) + tuple(jnp.asarray(r, q.dtype) for r in rest)
-
-
-def _slice_rows(arr: jnp.ndarray, p: jnp.ndarray, start_ch: int,
-                length: int, n_ch: int) -> jnp.ndarray:
-    """Per-slot dynamic_slice: row b gets arr[b, p[b] : p[b]+length,
-    start_ch : start_ch+n_ch].  Starts clamp like dynamic_slice."""
-    return jax.vmap(
-        lambda row, q: jax.lax.dynamic_slice(
-            row, _starts(q, start_ch), (length, n_ch)))(arr, p)
-
-
-def _update_rows(arr: jnp.ndarray, p: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
-    """Per-slot dynamic_update_slice of val[b] at (p[b], 0)."""
-    return jax.vmap(
-        lambda row, q, v: jax.lax.dynamic_update_slice(row, v, _starts(q, 0))
-    )(arr, p, val)
-
-
-class FlashEngine:
+class FlashEngine(ScheduleWalker):
     """Orchestrates decode for one LCSM model instance.
 
     Buffers are sized ``Lbuf = prompt_max + ceil_pow2(gen_max)`` so every gray
@@ -251,20 +221,15 @@ class FlashEngine:
             self._state_specs = None
 
         # Every step function donates its EngineState: the a/b buffers alias
-        # input to output in XLA instead of being copied per dispatch.
-        self._jit_red = jax.jit(self._red_pass, donate_argnums=(1,))
-        self._jit_gray: dict[int, Callable] = {}
-        self._jit_lazy = jax.jit(self._lazy_fill, donate_argnums=(0,))
-        self._jit_eager = jax.jit(self._eager_push, donate_argnums=(0,))
+        # input to output in XLA instead of being copied per dispatch.  The
+        # schedule-walking dispatch (per-step jits, segment-keyed chunk
+        # caches, server chunks) lives in core/schedule.ScheduleWalker.
+        self._init_schedule_dispatch()
         # prompt length is a shape, so jax.jit retraces per distinct P —
         # the LCSM analogue of ServingEngine's per-length prefill cache.
         self._jit_prefill = jax.jit(self._prefill_rows)
         self._jit_prefill_slot = jax.jit(self._prefill_slot_impl,
                                          donate_argnums=(1,))
-        # Fused-chunk caches: decode_chunk per schedule segment (lockstep),
-        # server_chunk per K (per-slot traced schedules).
-        self._jit_chunk: dict[tuple[int, ...], Callable] = {}
-        self._jit_server_chunk: dict[int, Callable] = {}
 
     # ------------------------------------------------------------------ state
     def _shard_state(self, state: EngineState) -> EngineState:
@@ -347,13 +312,7 @@ class FlashEngine:
             rep = NamedSharding(self.mesh, PartitionSpec())
             a0_next = jax.lax.with_sharding_constraint(a0_next, rep)
             token = jax.lax.with_sharding_constraint(token, rep)
-        # dynamic_update_slice clamps out-of-range starts, which would silently
-        # overwrite the last row at the horizon — guard the final write per slot.
-        def write_next(row, q, v, ok):
-            new = jax.lax.dynamic_update_slice(row, v[None], _starts(q + 1, 0))
-            return jnp.where(ok, new, row)
-        a[0] = jax.vmap(write_next)(
-            a[0], p, a0_next.astype(self.dtype), p + 1 < self.Lbuf)
+        a[0] = write_next_rows(a[0], p, a0_next.astype(self.dtype), self.Lbuf)
         return self._shard_state(EngineState(a=tuple(a), b=tuple(b))), token
 
     # ------------------------------------------------------------- gray tiles
@@ -375,7 +334,7 @@ class FlashEngine:
                 y, rho2u, rho_f, direct_max=self.direct_max, use_pallas=True)
         return tau_mod.tau_fft(y, rho2u=rho2u, rho_f=rho_f)
 
-    def _gray_tile(self, state: EngineState, p, mask, *, U: int):
+    def _gray_tile(self, params, state: EngineState, p, mask, *, U: int):
         """Per-slot contribution of a[b, p_b-U+1 .. p_b] to
         b[b, p_b+1 .. p_b+U] (tile side U, static).  Levels batched per
         conv-width group (Algorithm 3); slots with the same unlocked tile
@@ -383,7 +342,10 @@ class FlashEngine:
         slots the tile applies to — masked-out rows are left untouched
         (their τ output is zeroed before the add), which is what lets the
         continuous-batching server dispatch tiles per (slot, tile-side)
-        while other slots sit at different schedule points."""
+        while other slots sit at different schedule points.  ``params`` is
+        the walker-threaded model pytree — unused here (LCSM tiles read
+        only the precomputed filters/DFTs, host constants by design)."""
+        del params
         a = state.a
         b = list(state.b)
         start = p - U + 1  # (B,); >= 0 for any live slot (U | rel step)
@@ -520,232 +482,17 @@ class FlashEngine:
     def _prefill_slot_impl(self, params, state: EngineState, slot,
                            a0_prompt, rng):
         a1, b1, token = self._prefill_rows(params, a0_prompt, rng)
-        def write_row(big, one):
-            return jax.lax.dynamic_update_slice(
-                big, one.astype(big.dtype), _starts(slot, 0, 0))
-        a = tuple(write_row(big, one) for big, one in zip(state.a, a1))
-        b = tuple(write_row(big, one) for big, one in zip(state.b, b1))
+        a = tuple(write_slot_rows(big, one, slot)
+                  for big, one in zip(state.a, a1))
+        b = tuple(write_slot_rows(big, one, slot)
+                  for big, one in zip(state.b, b1))
         return self._shard_state(EngineState(a=a, b=b)), token[0]
 
-    # ----------------------------------------------------------------- decode
-    def generate(
-        self,
-        state: EngineState,
-        n_tokens: int,
-        *,
-        origin: int = 0,
-        rng: jax.Array | None = None,
-        chunk_size: int | None = None,
-    ) -> tuple[EngineState, jnp.ndarray]:
-        """Lockstep decode of ``n_tokens`` from schedule origin ``origin``.
-
-        Thin host loop over device-resident chunks: each ``decode_chunk``
-        fuses up to K schedule steps into one donated XLA computation, so the
-        host dispatches (and may sync) once per K tokens instead of several
-        times per token.  ``chunk_size=1`` is the historical per-step path
-        (one jitted red pass / gray tile per dispatch) — kept as the
-        exactness reference: flash and lazy are BITWISE identical chunked
-        vs per-step; eager is identical up to rounding (XLA FMA-contracts
-        its per-step b += y*rho accumulation when steps fuse).  The input
-        ``state`` is donated."""
-        rng = jax.random.PRNGKey(0) if rng is None else rng
-        origin = int(origin)
-        K = self.chunk_size if chunk_size is None else chunk_size
-        if K <= 1:
-            return self._generate_stepwise(state, n_tokens, origin, rng)
-        toks = []
-        step = 0
-        while step < n_tokens:
-            k = min(K, n_tokens - step)
-            if self.strategy == "flash":
-                sides = schedule_segment(step + 1, k, origin=origin,
-                                         horizon=self.Lbuf,
-                                         last_step=n_tokens)
-            else:
-                sides = (0,) * k
-            state, tk, rng = self.decode_chunk(
-                state, origin + step, rng, sides)
-            toks.append(tk)
-            step += k
-        toks = (jnp.concatenate(toks, axis=1) if toks
-                else jnp.zeros((self.batch, 0), jnp.int32))
-        return state, toks
-
-    def _schedule_step(self, params, state: EngineState, pv, rng,
-                       tile=None, *, jitted: bool):
-        """THE schedule step, defined once: rng split -> (lazy fill) -> red
-        pass -> (eager push | this step's gray tile).  Every decode path —
-        per-step loop, fused lockstep chunk, fused server chunk — drives
-        this skeleton; the bit-identity contract between them rests on the
-        ordering living in exactly one place.  ``tile`` is a callable
-        (state) -> state applying whatever gray tile(s) the step unlocks,
-        or None; ``jitted`` picks the per-piece jitted wrappers (per-step
-        dispatch) vs the raw methods (tracing inside a fused chunk)."""
-        lazy_fn = self._jit_lazy if jitted else self._lazy_fill
-        eager_fn = self._jit_eager if jitted else self._eager_push
-        red_fn = self._jit_red if jitted else self._red_pass
-        rng, sub = jax.random.split(rng)
-        if self.strategy == "lazy":
-            state = lazy_fn(state, pv)
-        state, tok = red_fn(params, state, pv, sub)
-        if self.strategy == "eager":
-            state = eager_fn(state, pv)
-        elif tile is not None:
-            state = tile(state)
-        return state, tok, rng
-
-    def _generate_stepwise(self, state: EngineState, n_tokens: int,
-                           origin: int, rng) -> tuple[EngineState, jnp.ndarray]:
-        """Per-step dispatch (the pre-chunking hot loop): one host round-trip
-        per red pass and per gray tile."""
-        toks = []
-        for step in range(n_tokens):
-            p = origin + step
-            pv = jnp.full((self.batch,), p, jnp.int32)
-            tile = None
-            if self.strategy == "flash" and step + 1 < n_tokens:
-                U = largest_pow2_divisor(step + 1)
-                tile = lambda st, p=p, U=U: self._gray_tile_guard(st, p, U)
-            state, tok, rng = self._schedule_step(
-                self.params, state, pv, rng, tile, jitted=True)
-            toks.append(tok)
-        toks = (jnp.stack(toks, axis=1) if toks
-                else jnp.zeros((self.batch, 0), jnp.int32))
-        return state, toks
-
-    # ------------------------------------------------- fused chunked decode
-    def _decode_chunk_impl(self, params, state: EngineState, p0, rng, *,
-                           sides: tuple[int, ...]):
-        """len(sides) fused schedule steps starting at per-slot positions
-        ``p0``.  ``sides[i]`` is the gray-tile side unlocked after red step i
-        (0 = no tile: past the last step, or fully past the horizon) — all
-        trace-time constants, so the whole chunk is one XLA program with no
-        host involvement.  The rng is split exactly as the per-step loop
-        splits it, so sampling models see identical keys."""
-        toks = []
-        for i, U in enumerate(sides):
-            pv = p0 + i
-            tile = None
-            if U:
-                tile = lambda st, pv=pv, U=U: self._gray_tile(
-                    st, pv, jnp.ones((self.batch,), bool), U=U)
-            state, tok, rng = self._schedule_step(
-                params, state, pv, rng, tile, jitted=False)
-            toks.append(tok)
-        return state, jnp.stack(toks, axis=1), rng
-
-    def decode_chunk(self, state: EngineState, p0, rng,
-                     sides: Sequence[int]) -> tuple[EngineState, jnp.ndarray, jax.Array]:
-        """Run one fused chunk: red pass + block + advance for each step,
-        plus the gray tiles ``sides`` prescribes (see tiling.schedule_segment
-        for how a segment is derived and why segments make good cache keys).
-        ``p0``: position of the first step, scalar or (B,).  Returns
-        (state, tokens (B, K), advanced rng); the input state is donated."""
-        sides = tuple(int(u) for u in sides)
-        fn = self._jit_chunk.get(sides)
-        if fn is None:
-            fn = jax.jit(
-                functools.partial(self._decode_chunk_impl, sides=sides),
-                donate_argnums=(1,))
-            self._jit_chunk[sides] = fn
-        return fn(self.params, state, _as_pos_vec(p0, self.batch), rng)
-
-    def _server_chunk_impl(self, params, state: EngineState, p0, origin,
-                           live, rng, *, K: int):
-        """K fused continuous-batching steps with PER-SLOT schedules.
-
-        Unlike ``_decode_chunk_impl`` the tile side is data-dependent here —
-        each slot sits at its own point of its own schedule — so every step
-        branches over the log2(L) possible sides: for each side U a masked
-        ``lax.cond`` applies the side-U tile to exactly the slots whose
-        relative step unlocks U this step (and skips the computation
-        entirely when no slot does, preserving the Algorithm-2 work bound).
-        Slots are stepped blindly for K tokens; the host truncates at
-        EOS/max_new after readback — overshoot steps only touch the
-        overshooting slot's own rows, which the next admission prefill
-        rewrites wholesale.  p0/origin: (B,) int32; live: (B,) bool.
-
-        Branch list: sides with 2U <= Lbuf — every tile a *live* slot can
-        unlock (its relative step stays < gen_max, so U <= ceil_pow2(gen_max)/2
-        and the buffer holds rho[0..2U-1]).  A blind overshoot step past
-        retirement may compute a larger lowbit; no branch matches and the
-        junk tile is simply skipped."""
-        sides = []
-        u = 1
-        while 2 * u <= self.Lbuf:
-            sides.append(u)
-            u *= 2
-
-        def masked_tiles(state, pv):
-            rel = pv + 1 - origin          # 1-based schedule step done
-            low = rel & (-rel)             # per-slot unlocked tile side
-            writable = pv + 1 < self.Lbuf  # full-spill guard (clip
-            for U in sides:                # handles partial spill)
-                m = live & writable & (low == U)
-                state = jax.lax.cond(
-                    jnp.any(m),
-                    functools.partial(self._gray_tile, p=pv, mask=m, U=U),
-                    lambda st: st,
-                    state)
-            return state
-
-        toks = []
-        for i in range(K):
-            pv = p0 + i
-            tile = None
-            if self.strategy == "flash":
-                tile = lambda st, pv=pv: masked_tiles(st, pv)
-            state, tok, rng = self._schedule_step(
-                params, state, pv, rng, tile, jitted=False)
-            toks.append(tok)
-        return state, jnp.stack(toks, axis=1), rng
-
-    def server_chunk(self, state: EngineState, p0, origin, live, rng,
-                     K: int) -> tuple[EngineState, jnp.ndarray, jax.Array]:
-        """Fused K-step advance for the continuous-batching server: per-slot
-        positions/origins, one dispatch, one deferred token readback.
-        Returns (state, tokens (B, K), advanced rng); state is donated."""
-        fn = self._jit_server_chunk.get(K)
-        if fn is None:
-            fn = jax.jit(
-                functools.partial(self._server_chunk_impl, K=K),
-                donate_argnums=(1,))
-            self._jit_server_chunk[K] = fn
-        return fn(self.params, state, _as_pos_vec(p0, self.batch),
-                  _as_pos_vec(origin, self.batch),
-                  jnp.asarray(live, bool), rng)
-
-    def _gray_tile_guard(self, state, p: int, U: int):
-        if p + 1 >= self.Lbuf:  # no output position fits in the buffer: skip.
-            return state        # (Tiles that only PARTIALLY spill are clipped
-        return self.gray_step(state, p, None, U)  # inside _gray_tile.)
-
-    # ------------------------------------------- continuous-serving step API
-    # All step functions DONATE the input state (buffers alias in place);
-    # callers must thread the returned state and never reuse the argument.
-    def red_step(self, state: EngineState, p, rng) -> tuple[EngineState, jnp.ndarray]:
-        """Finalize per-slot positions p ((B,) or scalar) and sample every
-        slot; returns (state, tokens (B,))."""
-        return self._jit_red(self.params, state, _as_pos_vec(p, self.batch), rng)
-
-    def lazy_step(self, state: EngineState, p) -> EngineState:
-        return self._jit_lazy(state, _as_pos_vec(p, self.batch))
-
-    def eager_step(self, state: EngineState, p) -> EngineState:
-        return self._jit_eager(state, _as_pos_vec(p, self.batch))
-
-    def gray_step(self, state: EngineState, p, mask, U: int) -> EngineState:
-        """Apply the side-U gray tile at per-slot positions p to the slots
-        selected by ``mask`` ((B,) bool; None = all).  Jitted once per tile
-        side — slot index and positions stay traced."""
-        fn = self._jit_gray.get(U)
-        if fn is None:
-            fn = jax.jit(functools.partial(self._gray_tile, U=U),
-                         donate_argnums=(0,))
-            self._jit_gray[U] = fn
-        mask = (jnp.ones((self.batch,), bool) if mask is None
-                else jnp.asarray(mask))
-        return fn(state, _as_pos_vec(p, self.batch), mask)
+    # ---------------------------------------------------------------- decode
+    # generate / decode_chunk / server_chunk / red_step / gray_step / … are
+    # inherited from core/schedule.ScheduleWalker — the schedule-walking
+    # half is shared with the generic §4 engine; only the red-pass and
+    # gray-tile bodies above are LCSM-specific.
 
     # ------------------------------------------------- static (training) pass
     def forward_static(self, a0_seq: jnp.ndarray) -> list[jnp.ndarray]:

@@ -10,30 +10,60 @@ admits the fractal tile schedule with a black-box range algorithm
 
   A(y, [l,r], [l',r'])_p = agg(cont(y,l,p), …, cont(y,r,p))   (r < l').
 
-``GenericFlashEngine`` drives Algorithm 4 for any ``GenericMixer``;
-``GatedLinearAttention`` instantiates it for a non-convolution member of
-the class (the paper's "and Beyond"): cont(y,i,j) = λ^{j-i}·(k_i ⊗ v_i),
+Two drivers live here:
+
+* :class:`GenericFlashEngine` — the PRODUCTION engine: a jitted,
+  device-resident schedule walker (core/schedule.ScheduleWalker — the
+  same machinery FlashEngine runs Hyena on) over a stack of
+  ``GenericMixer`` levels interleaved with per-position blocks.  Donated
+  pytree states, per-slot positions, ``schedule_segment``-keyed fused
+  chunks (O(log L) cached programs), ``prefill`` / ``prefill_slot`` /
+  ``decode_chunk`` / ``server_chunk`` — the full serving surface, so
+  ``serving.GenericServer`` batches it continuously like the LCSM
+  backend.
+
+* :class:`ReferenceGenericEngine` — the original unjitted Python loop
+  over Algorithm 4, kept as the documented SLOW REFERENCE the production
+  engine is differentially tested against (tests/test_generic_schedule,
+  tests/test_generic_framework).
+
+``GatedLinearAttention`` instantiates the class for a non-convolution
+member (the paper's "and Beyond"): cont(y,i,j) = λ^{j-i}·(k_i ⊗ v_i),
 agg = +, read_j(S) = q_j·S — with an O((L1+L2)·d_k·d_v) range algorithm
 exploiting the geometric decay (vs the naive L1·L2·d_k·d_v).
+``models/gla.py`` builds a full language model out of it.
 """
 
 from __future__ import annotations
 
-from typing import Any, Protocol
+from typing import Any, NamedTuple, Protocol, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.schedule import (ScheduleWalker, ceil_pow2, slice_rows,
+                                 tree_slice_rows, tree_update_rows,
+                                 update_rows, write_next_rows,
+                                 write_slot_rows)
 from repro.core.tiling import largest_pow2_divisor
 
 _F32 = jnp.float32
 
 
 class GenericMixer(Protocol):
-    """P.1 ∧ P.2 mixer over inputs y (B, L, D_in)."""
+    """P.1 ∧ P.2 mixer over inputs y (B, L, D_in).
+
+    The intermediate state space X is an arbitrary pytree whose leaves
+    carry leading dims (B, ...) per position; ``agg`` must be associative
+    and elementwise over the leading dims, and ``init_state`` must return
+    the agg-neutral element at every position.  Position arguments
+    (``i`` / ``in_lo``) are 0-based buffer indices — Python ints under the
+    reference engine, traced (B,) int32 vectors under the production
+    engine; mixers that don't need absolute positions ignore them.
+    """
 
     def init_state(self, batch: int, length: int) -> Any:
-        """Zero (agg-neutral) state buffer b: pytree with leading (B, L)."""
+        """Zero (agg-neutral) state buffer: pytree with leading (B, L)."""
 
     def cont_diag(self, y_i: jnp.ndarray, i) -> Any:
         """cont(y, i, i): contribution of position i to itself (X-valued,
@@ -42,7 +72,9 @@ class GenericMixer(Protocol):
     def range_alg(self, y_seg: jnp.ndarray, in_lo, out_offsets: jnp.ndarray) -> Any:
         """A(y, [in_lo, in_lo+U), outputs at in_lo+U-1+out_offsets):
         y_seg (B, U, D_in); out_offsets (U2,) 1-based distances past the
-        last input.  Returns X-valued (B, U2, ...)."""
+        last input.  Returns X-valued (B, U2, ...).  The framework's
+        efficiency requirement (§4): T(U, U2) must be quasilinear in
+        U + U2, not U·U2."""
 
     def agg(self, b: Any, x: Any) -> Any:
         """Associative aggregation (elementwise over leading dims)."""
@@ -52,10 +84,255 @@ class GenericMixer(Protocol):
         y_i is the position's own input (available at read time — P.2 only
         constrains *contributions*, not the read)."""
 
+    def prefill_states(self, ys: jnp.ndarray) -> Any:
+        """FINALIZED states at every prompt position: leaves (B, P, ...)
+        with entry t = agg(cont(y,0,t) … cont(y,t,t)).  The static
+        (teacher-forced) path — the generic analogue of the LCSM engine's
+        FFT prefill; only used by ``prefill``/``prefill_slot``, so a
+        sequential scan is fine."""
 
-class GenericFlashEngine:
-    """Algorithm 4: autoregressive evaluation of a GenericMixer with
-    L-1 calls to A (2^(P-1-q) of length 2^q each) + L diagonal conts."""
+
+class GenericModel(Protocol):
+    """What GenericFlashEngine needs from a model (see models/gla.py).
+
+    The engine drives M mixer levels interleaved with per-position
+    blocks:  a[0] = token embeddings;  z[l] = mixer_l(a[l]);
+    a[l+1] = block_l(z[l], a[l]);  advance samples from a[M].
+    """
+
+    a0_width: int
+    n_levels: int
+    widths: Sequence[int]  # widths of a[1..M]
+
+    def mixers(self, params: Any) -> Sequence[GenericMixer]:
+        """One parameter-bound mixer per level (rebuilt inside traces)."""
+
+    def block(self, params: Any, level: int, z: jnp.ndarray,
+              y: jnp.ndarray) -> jnp.ndarray:
+        """Per-position block: z (B, T, D_out) mixer output, y (B, T, D_in)
+        the level's own input rows.  Returns (B, T, width_{level+1})."""
+
+    def advance(self, params: Any, a_top: jnp.ndarray,
+                rng: jax.Array) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """a_top (B, width_M) at the just-finalized position.  Returns
+        (next a[0] entry (B, a0_width), emitted token (B,) int32)."""
+
+
+class GenericState(NamedTuple):
+    """Pure buffer state for the generic engine.  ``a`` mirrors
+    EngineState.a; ``s`` holds one mixer-state pytree per level (leaves
+    (B, Lbuf, ...)).  Positions are NOT part of it — every jitted piece
+    takes an explicit per-slot position vector (see core/schedule)."""
+
+    a: tuple[jnp.ndarray, ...]  # level l: (B, Lbuf, width_l)
+    s: tuple[Any, ...]          # level l (1-based, stored at l-1)
+
+
+def _apply_tile(mix: GenericMixer, s_l, p: jnp.ndarray, contrib, mask,
+                U: int, Lbuf: int):
+    """Aggregate ``contrib`` (leaves (B, U, ...)) into rows p+1 .. p+U of
+    the level state ``s_l``, per slot, clipped at the horizon and masked.
+
+    The LCSM engine clips spilling tiles by scatter-ADDING zeros; a
+    generic ``agg`` has no such absorbing element, so instead the window
+    is clamped to stay in-bounds (start = min(p+1, Lbuf-U)), ``agg`` is
+    applied on the whole slice, and out-of-tile rows keep their old value
+    via a select — O(U) work either way, exact clipping."""
+    wstart = jnp.minimum(p + 1, Lbuf - U)                      # (B,)
+    rel = wstart[:, None] + jnp.arange(U)[None, :] - (p + 1)[:, None]
+    valid = (rel >= 0) & mask[:, None]                          # (B, U)
+    idx = jnp.clip(rel, 0, U - 1)
+    seg = tree_slice_rows(s_l, wstart, U)
+    take = jax.tree.map(
+        lambda c: jax.vmap(lambda row, i: row[i])(c, idx), contrib)
+    new = mix.agg(seg, take)
+    merged = jax.tree.map(
+        lambda n, o: jnp.where(
+            valid.reshape(valid.shape + (1,) * (n.ndim - 2)), n, o),
+        new, seg)
+    return tree_update_rows(s_l, wstart, merged)
+
+
+class GenericFlashEngine(ScheduleWalker):
+    """Production Algorithm-4 engine: the generic mixer framework on the
+    shared fractal-schedule machinery (core/schedule).
+
+    Same surface as FlashEngine — ``init_state`` / ``set_first`` /
+    ``prefill`` / ``prefill_slot`` / ``generate(chunk_size=K)`` /
+    ``decode_chunk`` / ``server_chunk`` / per-step ``red_step`` /
+    ``gray_step`` — over :class:`GenericState` pytrees.  All step/chunk
+    functions are jitted with ``donate_argnums`` on the state (buffers
+    alias in place; callers must thread the returned state), and fused
+    chunk programs are cached per schedule segment: O(log L) distinct
+    programs over a whole generation.  Buffers are sized
+    ``Lbuf = prompt_max + ceil_pow2(gen_max)`` so every gray tile fits.
+    """
+
+    def __init__(self, model: GenericModel, params: Any, *, batch: int,
+                 gen_max: int, prompt_max: int = 0, dtype=jnp.float32,
+                 chunk_size: int = 1):
+        assert chunk_size >= 1
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.dtype = dtype
+        self.strategy = "flash"  # the generic engine has no Ω(L²) baselines
+        self.chunk_size = chunk_size
+        self.Lbuf = prompt_max + ceil_pow2(max(gen_max, 1))
+        self.M = model.n_levels
+        assert len(model.widths) == self.M
+        self._init_schedule_dispatch()
+        self._jit_prefill = jax.jit(self._prefill_rows)
+        self._jit_prefill_slot = jax.jit(self._prefill_slot_impl,
+                                         donate_argnums=(1,))
+
+    # ------------------------------------------------------------------ state
+    def init_state(self) -> GenericState:
+        m = self.model
+        a = tuple(jnp.zeros((self.batch, self.Lbuf, w), self.dtype)
+                  for w in (m.a0_width,) + tuple(m.widths))
+        s = tuple(mix.init_state(self.batch, self.Lbuf)
+                  for mix in m.mixers(self.params))
+        return GenericState(a=a, s=s)
+
+    def set_first(self, state: GenericState, a0_first: jnp.ndarray) -> GenericState:
+        a = list(state.a)
+        a[0] = a[0].at[:, 0].set(a0_first.astype(self.dtype))
+        return state._replace(a=tuple(a))
+
+    # ------------------------------------------------------- red cells + block
+    def _red_pass(self, params, state: GenericState, p, rng):
+        """Finalize per-slot positions p (B,) across all levels, then advance
+        (sample) every slot — the generic Algorithm-4 red cell: agg the
+        diagonal contribution into the position's state, read, block."""
+        m = self.model
+        a = list(state.a)
+        s = list(state.s)
+        top = None
+        for l, mix in enumerate(m.mixers(params)):
+            y_p = slice_rows(a[l], p, 0, 1, a[l].shape[-1])[:, 0]  # (B, D)
+            s_p = jax.tree.map(lambda leaf: leaf[:, 0],
+                               tree_slice_rows(s[l], p, 1))
+            s_p = mix.agg(s_p, mix.cont_diag(y_p, p))
+            s[l] = tree_update_rows(
+                s[l], p, jax.tree.map(lambda x: x[:, None], s_p))
+            z_p = mix.read(s_p, y_p)                               # (B, D_out)
+            out = m.block(params, l, z_p[:, None], y_p[:, None])   # (B, 1, w)
+            out = out.astype(self.dtype)
+            a[l + 1] = update_rows(a[l + 1], p, out)
+            top = out[:, 0]
+        a0_next, token = m.advance(params, top, rng)
+        a[0] = write_next_rows(a[0], p, a0_next.astype(self.dtype), self.Lbuf)
+        return self._shard_state(GenericState(a=tuple(a), s=tuple(s))), token
+
+    # ------------------------------------------------------------- gray tiles
+    def _gray_tile(self, params, state: GenericState, p, mask, *, U: int):
+        """Per-slot range-algorithm call: contributions of a[b, p_b-U+1 .. p_b]
+        to states at positions p_b+1 .. p_b+U (tile side U, static).
+        ``mask`` (B,) bool selects which slots the tile applies to —
+        masked-out rows are left untouched, which is what lets the
+        continuous-batching server dispatch tiles per (slot, tile-side)
+        while other slots sit at different schedule points.  ``params`` is
+        traced (walker-threaded): the mixer weights stay jit arguments
+        instead of being baked into every cached tile/chunk program as
+        constants."""
+        m = self.model
+        s = list(state.s)
+        start = p - U + 1  # (B,); >= 0 for any live slot (U | rel step)
+        offs = jnp.arange(1, U + 1)
+        for l, mix in enumerate(m.mixers(params)):
+            y_seg = slice_rows(state.a[l], start, 0, U, state.a[l].shape[-1])
+            contrib = mix.range_alg(y_seg, start, offs)  # (B, U, ...)
+            s[l] = _apply_tile(mix, s[l], p, contrib, mask, U, self.Lbuf)
+        return self._shard_state(state._replace(s=tuple(s)))
+
+    # ---------------------------------------------------------------- prefill
+    def _prefill_rows(self, params, a0_prompt: jnp.ndarray, rng):
+        """Teacher-forced prompt ingestion on fresh zero buffers: per level,
+        the mixer's static path (``prefill_states``) finalizes the prompt
+        rows, ONE range-algorithm call spills the whole prompt's
+        contributions into every future position (the generic analogue of
+        the LCSM engine's Massaroli Lemma-2.1 eager spill), and the block
+        runs full-width.  Ends with an ``advance`` from the last prompt
+        position P-1 so the first emitted token is prompt-conditioned."""
+        m = self.model
+        Bp, P, _ = a0_prompt.shape
+        a = [jnp.zeros((Bp, self.Lbuf, w), self.dtype)
+             for w in (m.a0_width,) + tuple(m.widths)]
+        mixers = m.mixers(params)
+        s = [mix.init_state(Bp, self.Lbuf) for mix in mixers]
+        a[0] = a[0].at[:, :P].set(a0_prompt.astype(self.dtype))
+        for l, mix in enumerate(mixers):
+            y = a[l][:, :P]
+            states = mix.prefill_states(y)  # leaves (Bp, P, ...)
+            s[l] = jax.tree.map(
+                lambda big, rows: jax.lax.dynamic_update_slice(
+                    big, rows.astype(big.dtype), (0,) * big.ndim),
+                s[l], states)
+            if P < self.Lbuf:
+                spill = mix.range_alg(
+                    y, jnp.zeros((Bp,), jnp.int32),
+                    jnp.arange(1, self.Lbuf - P + 1))
+                tail = jax.tree.map(lambda leaf: leaf[:, P:], s[l])
+                tail = mix.agg(tail, spill)
+                s[l] = jax.tree.map(
+                    lambda big, t: jax.lax.dynamic_update_slice(
+                        big, t.astype(big.dtype),
+                        (0, P) + (0,) * (big.ndim - 2)),
+                    s[l], tail)
+            z = jax.vmap(mix.read, in_axes=1, out_axes=1)(states, y)
+            a[l + 1] = a[l + 1].at[:, :P].set(
+                m.block(params, l, z, y).astype(self.dtype))
+        top = a[len(mixers)][:, P - 1]
+        a0_next, token = m.advance(params, top, rng)
+        if P < self.Lbuf:
+            a[0] = a[0].at[:, P].set(a0_next.astype(self.dtype))
+        return a, s, token
+
+    def prefill(
+        self, a0_prompt: jnp.ndarray, rng: jax.Array | None = None
+    ) -> tuple[GenericState, jnp.ndarray]:
+        """Full-batch prompt ingestion on fresh buffers; the tile schedule
+        restarts at origin = P.  Returns (state, first sampled token (B,));
+        subsequent tokens come from ``generate(..., origin=P)``."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        assert a0_prompt.shape[0] == self.batch
+        a, s, token = self._jit_prefill(self.params, a0_prompt, rng)
+        return GenericState(a=tuple(a), s=tuple(s)), token
+
+    def prefill_slot(
+        self, state: GenericState, slot, a0_prompt: jnp.ndarray,
+        rng: jax.Array | None = None,
+    ) -> tuple[GenericState, jnp.ndarray]:
+        """Single-slot admission prefill for continuous batching: a batch-1
+        prompt prefill on fresh buffers whose full Lbuf rows are then written
+        into row ``slot`` of the batched state (no other slot is disturbed;
+        slot reuse needs no separate reset because every row is
+        overwritten).  The input state is donated.  Returns
+        (state, first sampled token, scalar)."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        assert a0_prompt.shape[0] == 1
+        return self._jit_prefill_slot(
+            self.params, state, jnp.asarray(slot, jnp.int32), a0_prompt, rng)
+
+    def _prefill_slot_impl(self, params, state: GenericState, slot,
+                           a0_prompt, rng):
+        a1, s1, token = self._prefill_rows(params, a0_prompt, rng)
+        a = tuple(write_slot_rows(big, one, slot)
+                  for big, one in zip(state.a, a1))
+        s = tuple(jax.tree.map(lambda b, o: write_slot_rows(b, o, slot),
+                               big, one)
+                  for big, one in zip(state.s, s1))
+        return self._shard_state(GenericState(a=a, s=s)), token[0]
+
+
+class ReferenceGenericEngine:
+    """Algorithm 4 as a plain Python loop — the documented SLOW REFERENCE:
+    autoregressive evaluation of a bare GenericMixer with L-1 calls to A
+    (2^(P-1-q) of length 2^q each) + L diagonal conts, no jit, no batching
+    of dispatches.  The production :class:`GenericFlashEngine` is
+    differentially tested against it (and against the mixers' own
+    naive/recurrent oracles)."""
 
     def __init__(self, mixer: GenericMixer, batch: int, length: int):
         self.mixer = mixer
@@ -106,31 +383,57 @@ class GatedLinearAttention:
       A(y,[l,r],·)_p = λ^(p-r) · Σ_i λ^(r-i) k_i⊗v_i  — one decayed sum
     shared by all outputs ⇒ O((L1+L2)·dk·dv) per tile, satisfying the
     framework's efficiency requirement (T(U,U) quasilinear in U).
+
+    ``norm`` (optional, (D,)) folds the pre-mixer RMS norm of a language-
+    model layer into the mixer, so the engine can keep RAW activations in
+    its buffers (models/gla.py uses this; the bare mixer of the original
+    tests passes None and is unchanged).
+
+    Reproducibility note: every contraction here is written as an explicit
+    multiply + ``sum`` instead of ``dot``/``einsum``.  XLA CPU lowers small
+    dots differently depending on what else shares their program (gemv
+    runtime call vs fused loop — the same backend caveat PR 3 pinned for
+    single-row matmuls), which made fused decode chunks drift ~1e-6 from
+    the per-step path and broke the engine's chunked-vs-stepwise
+    BIT-identity contract.  Mul+reduce lowers to the same in-order loop in
+    every fusion context (tests/test_differential.py pins the contract);
+    the arithmetic count is unchanged (2·U·dk·dv-ish per tile).
     """
 
-    def __init__(self, wq, wk, wv, lam: float = 0.97):
+    def __init__(self, wq, wk, wv, lam: float = 0.97, norm=None):
         self.wq, self.wk, self.wv = wq, wk, wv
         self.lam = lam
+        self.norm = norm
         self.dk = wk.shape[1]
         self.dv = wv.shape[1]
 
     # -- projections
+    def _in(self, y):  # pre-projection input map (optional fused RMS norm)
+        y = y.astype(_F32)
+        if self.norm is None:
+            return y
+        var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+        return y * jax.lax.rsqrt(var + 1e-6) * self.norm
+
     def _kv(self, y):  # y (..., D) -> k (..., dk), v (..., dv)
-        return y @ self.wk, y @ self.wv
+        yn = self._in(y)
+        k = (yn[..., :, None] * self.wk).sum(-2)
+        v = (yn[..., :, None] * self.wv).sum(-2)
+        return k, v
 
     def init_state(self, batch, length):
         return jnp.zeros((batch, length, self.dk, self.dv), _F32)
 
     def cont_diag(self, y_i, i):
-        k, v = self._kv(y_i.astype(_F32))
+        k, v = self._kv(y_i)
         return k[..., :, None] * v[..., None, :]  # (B, dk, dv)
 
     def range_alg(self, y_seg, in_lo, out_offsets):
-        k, v = self._kv(y_seg.astype(_F32))  # (B, U, dk/dv)
+        k, v = self._kv(y_seg)  # (B, U, dk/dv)
         U = y_seg.shape[1]
         # decayed sum anchored at the LAST input position r = in_lo+U-1:
         w = self.lam ** jnp.arange(U - 1, -1, -1, dtype=_F32)  # λ^(r-i)
-        S = jnp.einsum("u,buk,buv->bkv", w, k, v)
+        S = ((k * w[None, :, None])[..., :, None] * v[..., None, :]).sum(1)
         scale = self.lam ** out_offsets.astype(_F32)  # λ^(p-r), p>r
         return scale[None, :, None, None] * S[:, None]  # (B, U2, dk, dv)
 
@@ -138,15 +441,36 @@ class GatedLinearAttention:
         return b + x
 
     def read(self, b_i, y_i):
-        q = (y_i.astype(_F32) @ self.wq)
+        q = (self._in(y_i)[..., :, None] * self.wq).sum(-2)
         q = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-6)
-        return jnp.einsum("bk,bkv->bv", q, b_i)
+        return (q[..., :, None] * b_i).sum(-2)
+
+    def step_state(self, S, y_i):
+        """RNN-mode state update S_j = λ·S_{j-1} + k_j⊗v_j — the compact
+        recurrence GLA happens to admit (the recurrent oracle; mixers
+        without one are exactly why the schedule exists)."""
+        k, v = self._kv(y_i)
+        return self.lam * S + k[..., :, None] * v[..., None, :]
+
+    def prefill_states(self, ys):
+        """Finalized states at every position of a teacher-forced prompt:
+        one lax.scan of the RNN recurrence (static path, prefill only)."""
+        k, v = self._kv(ys)  # (B, P, dk/dv)
+        kv = k[..., :, None] * v[..., None, :]  # (B, P, dk, dv)
+
+        def step(S, x):
+            S = self.lam * S + x
+            return S, S
+        _, states = jax.lax.scan(
+            step, jnp.zeros((ys.shape[0], self.dk, self.dv), _F32),
+            jnp.moveaxis(kv, 1, 0))
+        return jnp.moveaxis(states, 0, 1)  # (B, P, dk, dv)
 
     # ------------------------------------------------------------ oracles
     def naive(self, ys):
         """O(L²) direct evaluation of mixer(y)_j (B, L, dv)."""
         B, L, _ = ys.shape
-        k, v = self._kv(ys.astype(_F32))
+        k, v = self._kv(ys)
         out = []
         for j in range(L):
             S = jnp.zeros((B, self.dk, self.dv), _F32)
@@ -158,10 +482,9 @@ class GatedLinearAttention:
     def recurrent(self, ys):
         """O(L·dk·dv) RNN-mode oracle: S_j = λ·S_{j-1} + k_j⊗v_j."""
         B, L, _ = ys.shape
-        k, v = self._kv(ys.astype(_F32))
         S = jnp.zeros((B, self.dk, self.dv), _F32)
         out = []
         for j in range(L):
-            S = self.lam * S + k[:, j, :, None] * v[:, j, None, :]
+            S = self.step_state(S, ys[:, j])
             out.append(self.read(S, ys[:, j]))
         return jnp.stack(out, axis=1)

@@ -1,0 +1,394 @@
+"""Shared schedule-walking machinery for Flash-Inference engines.
+
+The fractal tile schedule (paper §3.1, Algorithm 2) is mixer-agnostic:
+what varies between the LCSM engine (``core/engine.FlashEngine``, long
+convolutions, Algorithms 2/3) and the generic §4 engine
+(``core/generic.GenericFlashEngine``, any P.1∧P.2 mixer, Algorithm 4) is
+only *what a red cell and a gray tile compute* — never how the schedule
+is walked, fused, cached, or dispatched.  This module owns that shared
+half:
+
+* **per-slot position vectors** — every jitted piece takes a traced
+  ``(B,)`` vector of positions, so each batch row (serving slot) can sit
+  at its own point of its own tile schedule;
+* **per-step dispatch** — one jitted red pass, one jitted gray-tile
+  function per tile side (log2(L) specializations), all donating their
+  state so buffers alias in place instead of being copied per token;
+* **``schedule_segment``-keyed chunk fusion** — ``decode_chunk`` fuses K
+  schedule steps (red pass + the gray tiles the segment prescribes,
+  sides static at trace time) into ONE donated XLA computation, cached
+  per segment (O(log L) distinct programs for aligned pow2 chunks);
+* **per-slot fused serving chunks** — ``server_chunk`` steps all slots K
+  tokens with one dispatch, branching per possible tile side through
+  masked ``lax.cond``s, deferring the token readback to the chunk end.
+
+An engine subclasses :class:`ScheduleWalker` and provides:
+
+  required attributes
+    ``batch``       slots B (leading axis of every state buffer)
+    ``Lbuf``        buffer horizon (positions per slot)
+    ``params``      the model parameter pytree passed to ``_red_pass``
+    ``strategy``    "flash" | "lazy" | "eager"
+    ``chunk_size``  default K for ``generate``
+
+  required methods (the mixer-specific half)
+    ``_red_pass(params, state, p, rng) -> (state, tokens)``
+        finalize per-slot positions ``p`` (B,) and advance every slot
+    ``_gray_tile(params, state, p, mask, *, U) -> state``
+        apply the side-``U`` tile at per-slot positions ``p`` to the
+        slots selected by ``mask`` (B,) bool.  ``params`` is threaded
+        (traced) so engines whose tiles read model parameters don't bake
+        them into every cached program as constants; engines whose tiles
+        only use derived host constants (the LCSM filters) ignore it
+
+  optional methods
+    ``_lazy_fill(state, p)`` / ``_eager_push(state, p)``
+        the Ω(L²) baseline strategies (engines that only implement
+        "flash" simply omit them)
+    ``_shard_state(state)``
+        pin a sharding on a traced state (default: identity) — mesh-
+        aware engines override so every cached program lowers with
+        output shardings equal to its input's and donation aliases in
+        place across devices
+
+and calls ``_init_schedule_dispatch()`` at the end of its ``__init__``.
+
+Every state-taking method here DONATES the state argument: after a call
+the passed-in state is dead and callers must thread the returned one.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tiling import largest_pow2_divisor, schedule_segment
+
+
+def ceil_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def as_pos_vec(p, batch: int) -> jnp.ndarray:
+    """Normalize a position argument to a (batch,) int32 vector."""
+    p = jnp.asarray(p, jnp.int32)
+    if p.ndim == 0:
+        p = jnp.full((batch,), p, jnp.int32)
+    return p
+
+
+def starts(q: jnp.ndarray, *rest) -> tuple:
+    """dynamic_slice start tuple mixing a traced index with literals: the
+    literals are cast to the traced dtype — x64 mode would otherwise
+    promote them to int64 and lax rejects the int32/int64 mix."""
+    return (q,) + tuple(jnp.asarray(r, q.dtype) for r in rest)
+
+
+def slice_rows(arr: jnp.ndarray, p: jnp.ndarray, start_ch: int,
+               length: int, n_ch: int) -> jnp.ndarray:
+    """Per-slot dynamic_slice: row b gets arr[b, p[b] : p[b]+length,
+    start_ch : start_ch+n_ch].  Starts clamp like dynamic_slice."""
+    return jax.vmap(
+        lambda row, q: jax.lax.dynamic_slice(
+            row, starts(q, start_ch), (length, n_ch)))(arr, p)
+
+
+def update_rows(arr: jnp.ndarray, p: jnp.ndarray, val: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot dynamic_update_slice of val[b] at (p[b], 0)."""
+    return jax.vmap(
+        lambda row, q, v: jax.lax.dynamic_update_slice(row, v, starts(q, 0))
+    )(arr, p, val)
+
+
+def write_next_rows(arr: jnp.ndarray, p: jnp.ndarray, val: jnp.ndarray,
+                    horizon: int) -> jnp.ndarray:
+    """Per-slot write of val[b] at row p[b] + 1 — the a0 advance write.
+    dynamic_update_slice clamps out-of-range starts, which would silently
+    overwrite the last row at the horizon, so rows with p+1 >= horizon are
+    left untouched instead (their positions are never generated)."""
+    def one(row, q, v, ok):
+        new = jax.lax.dynamic_update_slice(row, v[None], starts(q + 1, 0))
+        return jnp.where(ok, new, row)
+    return jax.vmap(one)(arr, p, val, p + 1 < horizon)
+
+
+def write_slot_rows(big: jnp.ndarray, one: jnp.ndarray, slot) -> jnp.ndarray:
+    """Write a batch-1 buffer's full rows into row ``slot`` of the batched
+    buffer (one dynamic_update_slice — no other slot is disturbed): the
+    admission-prefill splice."""
+    return jax.lax.dynamic_update_slice(
+        big, one.astype(big.dtype), starts(slot, *(0,) * (big.ndim - 1)))
+
+
+def tree_slice_rows(tree, p: jnp.ndarray, length: int):
+    """Pytree generalization of :func:`slice_rows` over full trailing dims:
+    every leaf is (B, L, ...) and row b yields leaf[b, p[b] : p[b]+length]."""
+    def one(leaf):
+        return jax.vmap(
+            lambda row, q: jax.lax.dynamic_slice(
+                row, starts(q, *(0,) * (row.ndim - 1)),
+                (length,) + row.shape[1:]))(leaf, p)
+    return jax.tree.map(one, tree)
+
+
+def tree_update_rows(tree, p: jnp.ndarray, val):
+    """Pytree generalization of :func:`update_rows`: write val leaf rows
+    (B, length, ...) into each (B, L, ...) leaf at per-slot positions p."""
+    def one(leaf, v):
+        return jax.vmap(
+            lambda row, q, vr: jax.lax.dynamic_update_slice(
+                row, vr.astype(row.dtype),
+                starts(q, *(0,) * (row.ndim - 1))))(leaf, p, v)
+    return jax.tree.map(one, tree, val)
+
+
+class ScheduleWalker:
+    """Schedule-walking half of a Flash-Inference engine (see module doc)."""
+
+    # -- subclass-provided (declared for reference; see module docstring)
+    batch: int
+    Lbuf: int
+    strategy: str
+    chunk_size: int
+
+    def _init_schedule_dispatch(self) -> None:
+        """Build the jitted dispatch caches.  Every step function donates
+        its state: the buffers alias input to output in XLA instead of
+        being copied per dispatch."""
+        self._jit_red = jax.jit(self._red_pass, donate_argnums=(1,))
+        self._jit_gray: dict[int, Callable] = {}
+        if hasattr(self, "_lazy_fill"):
+            self._jit_lazy = jax.jit(self._lazy_fill, donate_argnums=(0,))
+        if hasattr(self, "_eager_push"):
+            self._jit_eager = jax.jit(self._eager_push, donate_argnums=(0,))
+        # Fused-chunk caches: decode_chunk per schedule segment (lockstep),
+        # server_chunk per K (per-slot traced schedules).
+        self._jit_chunk: dict[tuple[int, ...], Callable] = {}
+        self._jit_server_chunk: dict[int, Callable] = {}
+
+    def _shard_state(self, state):
+        """Pin a sharding on a TRACED state (default: identity).  Mesh-aware
+        engines override; called at every state-returning trace's exit."""
+        return state
+
+    # ----------------------------------------------------------------- decode
+    def generate(
+        self,
+        state,
+        n_tokens: int,
+        *,
+        origin: int = 0,
+        rng: jax.Array | None = None,
+        chunk_size: int | None = None,
+    ):
+        """Lockstep decode of ``n_tokens`` from schedule origin ``origin``.
+
+        Thin host loop over device-resident chunks: each ``decode_chunk``
+        fuses up to K schedule steps into one donated XLA computation, so the
+        host dispatches (and may sync) once per K tokens instead of several
+        times per token.  ``chunk_size=1`` is the historical per-step path
+        (one jitted red pass / gray tile per dispatch) — kept as the
+        exactness reference: flash and lazy are BITWISE identical chunked
+        vs per-step; eager is identical up to rounding (XLA FMA-contracts
+        its per-step b += y*rho accumulation when steps fuse).  The input
+        ``state`` is donated."""
+        rng = jax.random.PRNGKey(0) if rng is None else rng
+        origin = int(origin)
+        K = self.chunk_size if chunk_size is None else chunk_size
+        if K <= 1:
+            return self._generate_stepwise(state, n_tokens, origin, rng)
+        toks = []
+        step = 0
+        while step < n_tokens:
+            k = min(K, n_tokens - step)
+            if self.strategy == "flash":
+                sides = schedule_segment(step + 1, k, origin=origin,
+                                         horizon=self.Lbuf,
+                                         last_step=n_tokens)
+            else:
+                sides = (0,) * k
+            state, tk, rng = self.decode_chunk(
+                state, origin + step, rng, sides)
+            toks.append(tk)
+            step += k
+        toks = (jnp.concatenate(toks, axis=1) if toks
+                else jnp.zeros((self.batch, 0), jnp.int32))
+        return state, toks
+
+    def _schedule_step(self, params, state, pv, rng, tile=None, *,
+                       jitted: bool):
+        """THE schedule step, defined once: rng split -> (lazy fill) -> red
+        pass -> (eager push | this step's gray tile).  Every decode path —
+        per-step loop, fused lockstep chunk, fused server chunk — drives
+        this skeleton; the bit-identity contract between them rests on the
+        ordering living in exactly one place.  ``tile`` is a callable
+        (state) -> state applying whatever gray tile(s) the step unlocks,
+        or None; ``jitted`` picks the per-piece jitted wrappers (per-step
+        dispatch) vs the raw methods (tracing inside a fused chunk)."""
+        rng, sub = jax.random.split(rng)
+        if self.strategy == "lazy":
+            state = (self._jit_lazy if jitted else self._lazy_fill)(state, pv)
+        state, tok = (self._jit_red if jitted else self._red_pass)(
+            params, state, pv, sub)
+        if self.strategy == "eager":
+            state = (self._jit_eager if jitted else self._eager_push)(state, pv)
+        elif tile is not None:
+            state = tile(state)
+        return state, tok, rng
+
+    def _generate_stepwise(self, state, n_tokens: int, origin: int, rng):
+        """Per-step dispatch (the pre-chunking hot loop): one host round-trip
+        per red pass and per gray tile."""
+        toks = []
+        for step in range(n_tokens):
+            p = origin + step
+            pv = jnp.full((self.batch,), p, jnp.int32)
+            tile = None
+            if self.strategy == "flash" and step + 1 < n_tokens:
+                U = largest_pow2_divisor(step + 1)
+                tile = lambda st, p=p, U=U: self._gray_tile_guard(st, p, U)
+            state, tok, rng = self._schedule_step(
+                self.params, state, pv, rng, tile, jitted=True)
+            toks.append(tok)
+        toks = (jnp.stack(toks, axis=1) if toks
+                else jnp.zeros((self.batch, 0), jnp.int32))
+        return state, toks
+
+    # ------------------------------------------------- fused chunked decode
+    def _decode_chunk_impl(self, params, state, p0, rng, *,
+                           sides: tuple[int, ...]):
+        """len(sides) fused schedule steps starting at per-slot positions
+        ``p0``.  ``sides[i]`` is the gray-tile side unlocked after red step i
+        (0 = no tile: past the last step, or fully past the horizon) — all
+        trace-time constants, so the whole chunk is one XLA program with no
+        host involvement.  The rng is split exactly as the per-step loop
+        splits it, so sampling models see identical keys."""
+        toks = []
+        for i, U in enumerate(sides):
+            pv = p0 + i
+            tile = None
+            if U:
+                tile = lambda st, pv=pv, U=U: self._gray_tile(
+                    params, st, pv, jnp.ones((self.batch,), bool), U=U)
+            state, tok, rng = self._schedule_step(
+                params, state, pv, rng, tile, jitted=False)
+            toks.append(tok)
+        return state, jnp.stack(toks, axis=1), rng
+
+    def decode_chunk(self, state, p0, rng, sides: Sequence[int]):
+        """Run one fused chunk: red pass + block + advance for each step,
+        plus the gray tiles ``sides`` prescribes (see tiling.schedule_segment
+        for how a segment is derived and why segments make good cache keys).
+        ``p0``: position of the first step, scalar or (B,).  Returns
+        (state, tokens (B, K), advanced rng); the input state is donated."""
+        sides = tuple(int(u) for u in sides)
+        fn = self._jit_chunk.get(sides)
+        if fn is None:
+            fn = jax.jit(
+                functools.partial(self._decode_chunk_impl, sides=sides),
+                donate_argnums=(1,))
+            self._jit_chunk[sides] = fn
+        return fn(self.params, state, as_pos_vec(p0, self.batch), rng)
+
+    def _server_chunk_impl(self, params, state, p0, origin, live, rng, *,
+                           K: int):
+        """K fused continuous-batching steps with PER-SLOT schedules.
+
+        Unlike ``_decode_chunk_impl`` the tile side is data-dependent here —
+        each slot sits at its own point of its own schedule — so every step
+        branches over the log2(L) possible sides: for each side U a masked
+        ``lax.cond`` applies the side-U tile to exactly the slots whose
+        relative step unlocks U this step (and skips the computation
+        entirely when no slot does, preserving the Algorithm-2 work bound).
+        Slots are stepped blindly for K tokens; the host truncates at
+        EOS/max_new after readback — overshoot steps only touch the
+        overshooting slot's own rows, which the next admission prefill
+        rewrites wholesale.  p0/origin: (B,) int32; live: (B,) bool.
+
+        Branch list: sides with 2U <= Lbuf — every tile a *live* slot can
+        unlock (its relative step stays < gen_max, so U <= ceil_pow2(gen_max)/2
+        and the buffer holds rho[0..2U-1]).  A blind overshoot step past
+        retirement may compute a larger lowbit; no branch matches and the
+        junk tile is simply skipped."""
+        sides = []
+        u = 1
+        while 2 * u <= self.Lbuf:
+            sides.append(u)
+            u *= 2
+
+        def masked_tiles(state, pv):
+            rel = pv + 1 - origin          # 1-based schedule step done
+            low = rel & (-rel)             # per-slot unlocked tile side
+            writable = pv + 1 < self.Lbuf  # full-spill guard (clip
+            for U in sides:                # handles partial spill)
+                m = live & writable & (low == U)
+                state = jax.lax.cond(
+                    jnp.any(m),
+                    functools.partial(self._gray_tile, params,
+                                      p=pv, mask=m, U=U),
+                    lambda st: st,
+                    state)
+            return state
+
+        toks = []
+        for i in range(K):
+            pv = p0 + i
+            tile = None
+            if self.strategy == "flash":
+                tile = lambda st, pv=pv: masked_tiles(st, pv)
+            state, tok, rng = self._schedule_step(
+                params, state, pv, rng, tile, jitted=False)
+            toks.append(tok)
+        return state, jnp.stack(toks, axis=1), rng
+
+    def server_chunk(self, state, p0, origin, live, rng, K: int):
+        """Fused K-step advance for the continuous-batching server: per-slot
+        positions/origins, one dispatch, one deferred token readback.
+        Returns (state, tokens (B, K), advanced rng); state is donated."""
+        fn = self._jit_server_chunk.get(K)
+        if fn is None:
+            fn = jax.jit(
+                functools.partial(self._server_chunk_impl, K=K),
+                donate_argnums=(1,))
+            self._jit_server_chunk[K] = fn
+        return fn(self.params, state, as_pos_vec(p0, self.batch),
+                  as_pos_vec(origin, self.batch),
+                  jnp.asarray(live, bool), rng)
+
+    def _gray_tile_guard(self, state, p: int, U: int):
+        if p + 1 >= self.Lbuf:  # no output position fits in the buffer: skip.
+            return state        # (Tiles that only PARTIALLY spill are clipped
+        return self.gray_step(state, p, None, U)  # inside _gray_tile.)
+
+    # ------------------------------------------- continuous-serving step API
+    # All step functions DONATE the input state (buffers alias in place);
+    # callers must thread the returned state and never reuse the argument.
+    def red_step(self, state, p, rng):
+        """Finalize per-slot positions p ((B,) or scalar) and sample every
+        slot; returns (state, tokens (B,))."""
+        return self._jit_red(self.params, state, as_pos_vec(p, self.batch), rng)
+
+    def lazy_step(self, state, p):
+        return self._jit_lazy(state, as_pos_vec(p, self.batch))
+
+    def eager_step(self, state, p):
+        return self._jit_eager(state, as_pos_vec(p, self.batch))
+
+    def gray_step(self, state, p, mask, U: int):
+        """Apply the side-U gray tile at per-slot positions p to the slots
+        selected by ``mask`` ((B,) bool; None = all).  Jitted once per tile
+        side — slot index and positions stay traced."""
+        fn = self._jit_gray.get(U)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._gray_tile, U=U),
+                         donate_argnums=(1,))
+            self._jit_gray[U] = fn
+        mask = (jnp.ones((self.batch,), bool) if mask is None
+                else jnp.asarray(mask))
+        return fn(self.params, state, as_pos_vec(p, self.batch), mask)

@@ -164,6 +164,13 @@ def count_params(cfg) -> float:
         per_op = D * 3 * D + D * D + 3 * D * cfg.d_ff  # in/out proj + swiglu
         total = active = V * D + n_ops * per_op
         return total, active
+    if cfg.family == "gla":
+        dk = cfg.gla_dk or D
+        dv = cfg.gla_dv or D
+        # q/k/v projections + out_proj + swiglu, per layer (tied embedding)
+        per_layer = D * dk * 2 + D * dv + dv * D + 3 * D * cfg.d_ff
+        total = active = V * D + cfg.n_layers * per_layer
+        return total, active
     for stack in cfg.stacks():
         for ld in stack.pattern:
             n = stack.repeat
@@ -206,7 +213,7 @@ def attn_flops_for(cfg, shape_name: str) -> float:
     (fwd + ~2× bwd).  Decode: one query row against the cache."""
     from repro.launch.specs import LONG_WINDOW, SHAPES
 
-    if cfg.family in ("ssm", "lcsm"):
+    if cfg.family in ("ssm", "lcsm", "gla"):  # no softmax-attention layers
         return 0.0
     info = SHAPES[shape_name]
     T, B, kind = info["seq_len"], info["global_batch"], info["kind"]

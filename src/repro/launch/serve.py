@@ -2,11 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --n-requests 6 --slots 2 --max-new 8
+    PYTHONPATH=src python -m repro.launch.serve --arch gla --smoke \
+        --slots 3 --chunk 4
 
-Both backend families go through ``repro.serving.make_server``: LCSM archs
+All backend families go through ``repro.serving.make_server``: LCSM archs
 get the slot-based Flash-Inference LCSMServer (per-slot tile schedules),
-all others the ServingEngine with per-family caches.  Same admission loop
-either way: submit -> run -> slots refill as requests retire.
+GLA archs the GenericServer (same schedules through the §4 generic
+engine), all others the ServingEngine with per-family caches.  Same
+admission loop either way: submit -> run -> slots refill as requests
+retire.
 
 Multi-device: ``--mesh-data N [--mesh-model M]`` builds an (N, M) serving
 mesh (launch/mesh.make_serving_mesh) and shards slots over 'data' /
@@ -43,6 +47,9 @@ def main():
     ap.add_argument("--strategy", default="flash",
                     choices=["flash", "lazy", "eager"],
                     help="LCSM mixer strategy (ignored for other families)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="fused decode chunk size K (LCSM/GLA backends); "
+                         "default: per-step")
     ap.add_argument("--mesh-data", type=int, default=0,
                     help="shard slots over a 'data' mesh axis of this size")
     ap.add_argument("--mesh-model", type=int, default=1,
@@ -66,6 +73,11 @@ def main():
 
         params = HyenaLCSM(cfg).init(jax.random.PRNGKey(0))
         extra = {"strategy": args.strategy}
+    elif cfg.family == "gla":
+        from repro.models.gla import GLALM
+
+        params = GLALM(cfg).init(jax.random.PRNGKey(0))
+        extra = {}
     else:
         params = LM(cfg).init(jax.random.PRNGKey(0))
         extra = {"cache_dtype": jnp.float32}
@@ -80,7 +92,7 @@ def main():
             uid=i,
             prompt=rng.randint(0, cfg.vocab, (args.prompt_len,)).astype(np.int32),
             max_new=args.max_new))
-    done = srv.run()
+    done = srv.run(chunk=args.chunk)
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {r.out}")
     dt = time.perf_counter() - t0

@@ -1,0 +1,141 @@
+"""Gated-linear-attention language model — the paper's "and Beyond" mixer
+(Katharopoulos et al., "Transformers are RNNs" style) served in production.
+
+Layer l on input u (B, T, D):
+
+    z = GLA(rms_norm(u))        # cont(y,i,j) = λ^{j-i}·(k_i⊗v_i), read = q·S
+    y = u + out_proj(z)
+    u' = y + mlp(norm2(y))
+
+The mixer is P.1∧P.2 (core/generic.GatedLinearAttention — the pre-mixer
+RMS norm is folded INTO the mixer via its ``norm`` argument, so the
+engine's activation buffers hold raw residual-stream values), which means
+decode runs through the generic Flash-Inference engine
+(core/generic.GenericFlashEngine): the fractal tile schedule with the
+O((U+U2)·dk·dv) decayed-sum range algorithm, fused chunks, donated
+buffers, continuous batching via serving/generic_backend.GenericServer.
+
+Engine mapping (GenericModel protocol):
+  a[0]    (B, Lbuf, D)  token embeddings
+  s[l]    (B, Lbuf, dk, dv)  per-position mixer states
+  a[l+1]  (B, Lbuf, D)  layer-l output (residual stream)
+
+``decode_recurrent`` is the RNN-mode oracle (S_j = λS_{j-1} + k_j⊗v_j,
+O(1) state per layer) that the differential and serving tests pin the
+engine against — GLA happens to admit a compact recurrence; mixers that
+don't are exactly why the generic schedule exists.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.generic import GatedLinearAttention
+from repro.models import components as C
+
+_F32 = jnp.float32
+
+
+class GLALM:
+    """GenericModel-protocol language model over GatedLinearAttention
+    mixers.  Decode for ``cfg.family == "gla"`` runs through
+    repro.core.generic.GenericFlashEngine with this model."""
+
+    def __init__(self, cfg):
+        assert cfg.family == "gla"
+        self.cfg = cfg
+        self.D = cfg.d_model
+        self.dk = cfg.gla_dk or cfg.d_model
+        self.dv = cfg.gla_dv or cfg.d_model
+        self.lam = cfg.gla_lam
+        self.n_levels = cfg.n_layers
+        self.a0_width = self.D
+        self.widths = (self.D,) * self.n_levels
+
+    # params: {"emb": (V, D), "layers": [layer0..], "norm_f": (D,)}
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        ks = jax.random.split(key, self.n_levels + 1)
+
+        def layer(k):
+            kq, kk, kv, ko, km = jax.random.split(k, 5)
+            return {
+                "norm1": jnp.ones((self.D,), _F32),
+                "wq": C.init_dense(kq, self.D, self.dk)["w"],
+                "wk": C.init_dense(kk, self.D, self.dk)["w"],
+                "wv": C.init_dense(kv, self.D, self.dv)["w"],
+                "out_proj": C.init_dense(ko, self.dv, self.D),
+                "norm2": jnp.ones((self.D,), _F32),
+                "mlp": C.init_swiglu(km, self.D, cfg.d_ff),
+            }
+        return {
+            "emb": jax.random.normal(ks[0], (cfg.vocab, self.D), _F32) * 0.02,
+            "layers": [layer(ks[1 + i]) for i in range(self.n_levels)],
+            "norm_f": jnp.ones((self.D,), _F32),
+        }
+
+    # ------------------------------------------------- GenericModel protocol
+    def mixers(self, params) -> Sequence[GatedLinearAttention]:
+        return tuple(
+            GatedLinearAttention(wq=lp["wq"], wk=lp["wk"], wv=lp["wv"],
+                                 lam=self.lam, norm=lp["norm1"])
+            for lp in params["layers"])
+
+    def block(self, params, level: int, z: jnp.ndarray,
+              y: jnp.ndarray) -> jnp.ndarray:
+        lp = params["layers"][level]
+        h = y + C.dense(z.astype(y.dtype), lp["out_proj"]["w"])
+        return h + C.swiglu(lp["mlp"], C.rms_norm(h, lp["norm2"]))
+
+    def logits(self, params, z: jnp.ndarray) -> jnp.ndarray:
+        h = C.rms_norm(z, params["norm_f"])
+        return jnp.einsum("...d,vd->...v", h, params["emb"],
+                          preferred_element_type=_F32)
+
+    def advance(self, params, a_top: jnp.ndarray, rng):
+        logits = self.logits(params, a_top)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return params["emb"][token], token
+
+    # ---------------------------------------------------------- embeddings
+    def embed_tokens(self, params, tokens: jnp.ndarray) -> jnp.ndarray:
+        return params["emb"][tokens]  # (B, T, D)
+
+    def embed_entry(self, params, e: jnp.ndarray) -> jnp.ndarray:
+        return e  # a0 rows ARE embeddings (no fused projection streams)
+
+    # ------------------------------------------------- recurrent oracle path
+    def forward_tokens_recurrent(self, params, tokens: jnp.ndarray) -> jnp.ndarray:
+        """(B, T) tokens -> (B, T, V) logits in RNN mode (mixer.recurrent):
+        the teacher-forced full-sequence reference path."""
+        u = params["emb"][tokens]
+        for level, mix in enumerate(self.mixers(params)):
+            z = mix.recurrent(u)
+            u = self.block(params, level, z, u)
+        return self.logits(params, u)
+
+    def decode_recurrent(self, params, prompt, n_tokens: int) -> list[int]:
+        """Greedy RNN-mode decode oracle: per-layer O(1) states stepped one
+        token at a time — what the generic engine must reproduce."""
+        mixers = self.mixers(params)
+        S = [jnp.zeros((1, m.dk, m.dv), _F32) for m in mixers]
+
+        def step(u):  # u (1, D) one position through all layers
+            for l, mix in enumerate(mixers):
+                S[l] = mix.step_state(S[l], u)
+                z = mix.read(S[l], u)
+                u = self.block(params, l, z[:, None], u[:, None])[:, 0]
+            return u
+
+        top = None
+        for t in jnp.asarray(prompt, jnp.int32):
+            top = step(params["emb"][t][None])
+        out = []
+        for _ in range(n_tokens):
+            tok = int(jnp.argmax(self.logits(params, top)[0]))
+            out.append(tok)
+            top = step(params["emb"][tok][None])
+        return out

@@ -1,11 +1,14 @@
 """Serving backends, unified behind one factory.
 
-Two slot-based continuous-batching servers share the
+Three slot-based continuous-batching servers share the
 ``submit()/step()/run()`` surface:
 
-* ``ServingEngine`` — transformer-family archs (KV / MLA / SSM caches).
-* ``LCSMServer``    — LCSM (Hyena) archs via the Flash Inference engine,
+* ``ServingEngine``  — transformer-family archs (KV / MLA / SSM caches).
+* ``LCSMServer``     — LCSM (Hyena) archs via the Flash Inference engine,
   with a per-slot tile schedule (see serving/lcsm_backend.py).
+* ``GenericServer``  — "and Beyond" generic-mixer archs (GLA) via the §4
+  GenericFlashEngine on the same schedule machinery
+  (see serving/generic_backend.py).
 
 ``make_server`` picks by ``cfg.family``.
 """
@@ -16,6 +19,7 @@ from typing import Any
 
 from repro.configs.base import ModelConfig
 from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.generic_backend import GenericServer  # noqa: F401
 from repro.serving.lcsm_backend import LCSMServer  # noqa: F401
 
 
@@ -25,14 +29,17 @@ def make_server(cfg: ModelConfig, params: Any, *, n_slots: int,
     """Build the serving backend for ``cfg``.
 
     ``max_seq`` sizes transformer caches; ``prompt_max``/``gen_max`` size
-    the LCSM per-slot buffers (Lbuf = prompt_max + ceil_pow2(gen_max)).
+    the LCSM/GLA per-slot buffers (Lbuf = prompt_max + ceil_pow2(gen_max)).
     Extra keyword args go to the chosen backend (e.g. ``strategy=`` /
     ``tau_impl=`` for LCSM, ``window=`` / ``cache_dtype=`` for the rest).
-    ``mesh=`` (both backends) shards serving slots over the mesh's 'data'
-    axis and channels/decode state over 'model' — see
+    ``mesh=`` (transformer + LCSM backends) shards serving slots over the
+    mesh's 'data' axis and channels/decode state over 'model' — see
     launch/mesh.make_serving_mesh and README "Multi-device serving".
     """
     if cfg.family == "lcsm":
         return LCSMServer(cfg, params, n_slots=n_slots,
                           prompt_max=prompt_max, gen_max=gen_max, **kw)
+    if cfg.family == "gla":
+        return GenericServer(cfg, params, n_slots=n_slots,
+                             prompt_max=prompt_max, gen_max=gen_max, **kw)
     return ServingEngine(cfg, params, n_slots=n_slots, max_seq=max_seq, **kw)

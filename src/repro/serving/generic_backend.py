@@ -1,0 +1,73 @@
+"""Serving backend for generic ("and Beyond") mixer families: continuously
+batched decode through the §4 GenericFlashEngine.
+
+``GenericServer`` IS the slot bookkeeping of ``LCSMServer`` — admission by
+single-slot prefill, per-slot tile schedules, per-(slot, tile-side) gray
+dispatch, fused ``step_chunk(K)`` with deferred readback, EOS/max_new
+retirement — pointed at a different engine/model pair: the generic
+schedule walker over ``GatedLinearAttention`` language models
+(``cfg.family == "gla"``).  That the subclass overrides ONLY construction
+is the point of the PR that introduced it: everything the LCSM server
+does is a property of the shared fractal-schedule machinery
+(core/schedule.ScheduleWalker), not of long convolutions.
+
+Exactness bar (tests/test_serving_continuous.py): every stream emitted
+under slot sharing equals ``isolated_decode`` of the same prompt — the
+batch-1 lockstep reference below — per-step and chunked.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.configs.base import ModelConfig
+from repro.core.generic import GenericFlashEngine
+from repro.models.gla import GLALM
+from repro.serving.lcsm_backend import LCSMServer, isolated_decode_via
+
+
+def isolated_decode(cfg: ModelConfig, params: Any, prompt, n_tokens: int, *,
+                    prompt_max: int, gen_max: int) -> list[int]:
+    """Isolated batch-1 lockstep greedy decode through the generic engine —
+    the exactness reference for GLA continuous batching (tests and
+    examples/serve_batched.py).  ``prompt_max``/``gen_max`` should match
+    the server under comparison (they size Lbuf; GLA values are
+    Lbuf-independent, but keeping them equal makes the comparison a pure
+    slot-sharing differential).  Delegates to the single shared reference
+    implementation (lcsm_backend.isolated_decode_via)."""
+    model = GLALM(cfg)
+    eng = GenericFlashEngine(model, params, batch=1, gen_max=gen_max,
+                             prompt_max=prompt_max)
+    return isolated_decode_via(model, eng, params, prompt, n_tokens)
+
+
+class GenericServer(LCSMServer):
+    """Continuous-batching server for ``cfg.family == "gla"`` archs.
+
+    Same ``submit()/step()/step_chunk()/run()/generate()`` surface and
+    bookkeeping as LCSMServer (inherited verbatim); only the engine/model
+    construction differs.  The generic engine is flash-only (no Ω(L²)
+    lazy/eager baselines) and currently single-device (``mesh`` must be
+    None — the LCSM backend shows the pattern if sharding is wanted)."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, *,
+                 n_slots: int | None = None, batch: int | None = None,
+                 gen_max: int, prompt_max: int = 0, strategy: str = "flash",
+                 chunk: int | None = None, chunk_size: int = 1,
+                 mesh=None, seed: int = 0):
+        assert cfg.family == "gla"
+        assert strategy == "flash", "generic engine has no lazy/eager baselines"
+        assert mesh is None, "GenericServer is single-device for now"
+        if n_slots is None:
+            n_slots = 1 if batch is None else batch
+        self.cfg = cfg
+        self.model = GLALM(cfg)
+        self.params = params
+        self.mesh = None
+        self.engine = GenericFlashEngine(
+            self.model, params, batch=n_slots, gen_max=gen_max,
+            prompt_max=prompt_max, chunk_size=chunk_size)
+        self._init_slot_bookkeeping(
+            n_slots, strategy=strategy, gen_max=gen_max,
+            prompt_max=prompt_max, chunk=chunk, chunk_size=chunk_size,
+            seed=seed)

@@ -49,6 +49,23 @@ from repro.models.hyena import HyenaLCSM
 from repro.serving.engine import Request
 
 
+def isolated_decode_via(model, eng, params: Any, prompt,
+                        n_tokens: int) -> list[int]:
+    """Batch-1 lockstep greedy decode through an already-built
+    (model, engine) pair: prefill (the first token comes from the prefill
+    advance), then generate from origin = prompt length.  The ONE
+    reference-decode implementation every slot-sharing exactness
+    comparison is measured against — the family-specific wrappers below
+    and in serving/generic_backend only choose the classes."""
+    a0 = model.embed_tokens(params, jnp.asarray(prompt, jnp.int32)[None])
+    state, t0 = eng.prefill(a0)
+    out = [int(t0[0])]
+    if n_tokens > 1:
+        _, toks = eng.generate(state, n_tokens - 1, origin=len(prompt))
+        out += np.asarray(toks)[0].tolist()
+    return out[:n_tokens]
+
+
 def isolated_decode(cfg: ModelConfig, params: Any, prompt, n_tokens: int, *,
                     prompt_max: int, gen_max: int,
                     strategy: str = "flash") -> list[int]:
@@ -61,13 +78,7 @@ def isolated_decode(cfg: ModelConfig, params: Any, prompt, n_tokens: int, *,
     model = HyenaLCSM(cfg)
     eng = FlashEngine(model, params, batch=1, gen_max=gen_max,
                       prompt_max=prompt_max, strategy=strategy)
-    a0 = model.embed_tokens(params, jnp.asarray(prompt, jnp.int32)[None])
-    state, t0 = eng.prefill(a0)
-    out = [int(t0[0])]
-    if n_tokens > 1:
-        _, toks = eng.generate(state, n_tokens - 1, origin=len(prompt))
-        out += np.asarray(toks)[0].tolist()
-    return out[:n_tokens]
+    return isolated_decode_via(model, eng, params, prompt, n_tokens)
 
 
 class LCSMServer:
@@ -102,6 +113,19 @@ class LCSMServer:
             prompt_max=prompt_max, strategy=strategy, tau_impl=tau_impl,
             direct_max=direct_max, use_pallas=use_pallas,
             chunk_size=chunk_size, mesh=mesh)
+        self._init_slot_bookkeeping(
+            n_slots, strategy=strategy, gen_max=gen_max,
+            prompt_max=prompt_max, chunk=chunk, chunk_size=chunk_size,
+            seed=seed)
+
+    def _init_slot_bookkeeping(self, n_slots: int, *, strategy: str,
+                               gen_max: int, prompt_max: int,
+                               chunk: int | None, chunk_size: int,
+                               seed: int) -> None:
+        """The engine-independent tail of construction, shared with every
+        subclassed backend (serving/generic_backend.GenericServer): slot
+        tables, per-slot schedule positions, the run() chunk default.
+        Requires ``self.engine`` to be set."""
         self.batch = self.B = n_slots
         self.strategy = strategy
         self.gen_max = gen_max

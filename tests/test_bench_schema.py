@@ -24,7 +24,7 @@ def _bench_files():
 def test_committed_bench_records_exist():
     names = {os.path.basename(p) for p in _bench_files()}
     assert {"BENCH_decode.json", "BENCH_serving.json",
-            "BENCH_sharded.json"} <= names, names
+            "BENCH_sharded.json", "BENCH_generic.json"} <= names, names
 
 
 @pytest.mark.parametrize("path", _bench_files(), ids=os.path.basename)
@@ -48,6 +48,19 @@ def test_bench_record_schema(path):
         assert isinstance(cell.get("tokens"), int) and cell["tokens"] > 0
         assert isinstance(cell.get("seconds"), (int, float))
         assert isinstance(cell.get("tok_s"), (int, float)) and cell["tok_s"] > 0
+
+
+def test_generic_bench_covers_both_modes():
+    """Acceptance: BENCH_generic.json reports flash (chunk-K sweep) AND the
+    recurrent oracle, measured on verified-identical greedy streams."""
+    path = os.path.join(BENCH_DIR, "BENCH_generic.json")
+    with open(path) as f:
+        rec = json.load(f)
+    modes = {cell["mode"] for cell in rec["series"]}
+    assert modes == {"flash", "recurrent"}, modes
+    assert len({c["chunk_K"] for c in rec["series"]
+                if c["mode"] == "flash"}) >= 2
+    assert rec["config"]["streams_identical_across_modes"] is True
 
 
 def test_sharded_bench_covers_multiple_device_counts():

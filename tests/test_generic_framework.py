@@ -1,13 +1,18 @@
 """§4 generic framework (Algorithm 4) as library code: the fractal tile
 schedule over a black-box P.1∧P.2 mixer must reproduce both the naive O(L²)
-and the recurrent oracles exactly, under autoregressive feedback."""
+and the recurrent oracles exactly, under autoregressive feedback.
+
+These tests drive the Python-loop ReferenceGenericEngine — the documented
+slow reference.  The production jitted engine (GenericFlashEngine) is
+covered by tests/test_generic_schedule.py and the GLA legs of
+tests/test_differential.py / test_serving_continuous.py."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.generic import GatedLinearAttention, GenericFlashEngine
+from repro.core.generic import GatedLinearAttention, ReferenceGenericEngine
 from repro.launch.analysis import cost_analysis_dict
 
 
@@ -24,7 +29,7 @@ def _mixer(D=6, dk=4, dv=5, seed=0):
 def test_algorithm4_matches_oracles(L):
     mixer, D, dv = _mixer()
     B = 2
-    eng = GenericFlashEngine(mixer, batch=B, length=L)
+    eng = ReferenceGenericEngine(mixer, batch=B, length=L)
 
     # teacher-forced inputs (fixed stream, ignores outputs)
     stream = jax.random.normal(jax.random.PRNGKey(9), (B, L, D), jnp.float32)
@@ -54,7 +59,7 @@ def test_algorithm4_autoregressive_feedback():
     def next_input(zs, z_i):
         return jnp.tanh(z_i @ W)
 
-    eng = GenericFlashEngine(mixer, batch=B, length=L)
+    eng = ReferenceGenericEngine(mixer, batch=B, length=L)
     ys, zs = eng.run(next_input, y0)
 
     # recurrent reference with identical feedback

@@ -1,0 +1,301 @@
+"""Property tests for the PRODUCTION generic engine (Algorithm 4 on the
+shared schedule machinery, core/generic.GenericFlashEngine).
+
+The central invariant — every contribution cell (i, j >= i) aggregated
+EXACTLY once — is proved with an instrumented "fingerprint mixer" whose
+agg literally counts coverage: inputs are one-hot position markers,
+cont(y,i,·) re-emits input i's marker, agg = +.  A finalized state at
+position j must then be the exact indicator vector of {0..j}: a missed
+(i, j) pair shows as a 0, a double-covered one as a 2 — for random pow2
+horizons AND random chunk splits (the schedule's execution order/fusion
+must never change coverage).  This mirrors the red/gray invariants
+test_core_tiling.py pins for the LCSM path.
+
+Also pinned here: the production engine vs the Python-loop
+ReferenceGenericEngine (same mixer, same feedback), and the rng-key
+schedule of the generic decode_chunk/server_chunk (one split per step —
+the same contract test_decode_chunk.py pins for the LCSM engine).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core.generic import (GatedLinearAttention, GenericFlashEngine,
+                                ReferenceGenericEngine)
+from repro.core.tiling import schedule_segment
+
+_F32 = jnp.float32
+
+
+# ------------------------------------------------------- fingerprint mixer
+class FingerprintMixer:
+    """Coverage-counting P.1∧P.2 mixer over one-hot position markers:
+    cont(y, i, j) = y_i for every j, agg = +, read = identity.  With
+    y_i = onehot(i), the state at j accumulates exactly one unit per
+    covered (i, j) cell — the aggregated state IS the coverage audit."""
+
+    def __init__(self, dim: int):
+        self.dim = dim
+
+    def init_state(self, batch, length):
+        return jnp.zeros((batch, length, self.dim), _F32)
+
+    def cont_diag(self, y_i, i):
+        return y_i.astype(_F32)
+
+    def range_alg(self, y_seg, in_lo, out_offsets):
+        s = y_seg.astype(_F32).sum(axis=1)  # (B, dim): one marker per input
+        return jnp.broadcast_to(
+            s[:, None], (s.shape[0], out_offsets.shape[0], self.dim))
+
+    def agg(self, b, x):
+        return b + x
+
+    def read(self, s, y_i):
+        return s
+
+    def prefill_states(self, ys):
+        return jnp.cumsum(ys.astype(_F32), axis=1)
+
+
+class FingerprintModel:
+    """GenericModel wrapper: block passes the coverage vector through and
+    ``advance`` emits the NEXT one-hot marker from the coverage count —
+    so a correct engine self-sustains the marker stream, and the emitted
+    token at position p is the count p+1 (checked too)."""
+
+    def __init__(self, dim: int):
+        self.dim = dim
+        self.a0_width = dim
+        self.n_levels = 1
+        self.widths = (dim,)
+        self._mixer = FingerprintMixer(dim)
+
+    def mixers(self, params):
+        return (self._mixer,)
+
+    def block(self, params, level, z, y):
+        return z
+
+    def advance(self, params, a_top, rng):
+        count = jnp.round(a_top.sum(-1)).astype(jnp.int32)  # (B,) = p+1
+        return jax.nn.one_hot(count, self.dim, dtype=_F32), count
+
+
+def _staircase(n, dim):
+    """Expected finalized states: row j = indicator of {0..j}."""
+    return (np.arange(dim)[None, :] <= np.arange(n)[:, None]).astype(np.float32)
+
+
+def _check_coverage(state, n, dim, B):
+    s = np.asarray(state.s[0])  # (B, Lbuf, dim)
+    want = _staircase(n, dim)
+    for b in range(B):
+        np.testing.assert_array_equal(
+            s[b, :n], want,
+            err_msg=f"slot {b}: coverage != exactly-once over {n} positions")
+
+
+# --------------------------------------------------------- exactly-once
+@given(st.integers(min_value=2, max_value=5),   # P: horizon L = 2^P
+       st.integers(min_value=0, max_value=4))   # K = 2^k chunking
+@settings(max_examples=12, deadline=None)
+def test_every_contribution_aggregated_exactly_once(P, k):
+    """Random pow2 L, aligned pow2 chunk sizes: after generating L tokens
+    the state at every position j is EXACTLY the indicator of {0..j} —
+    each (i, j) contribution aggregated once by red cells + gray tiles."""
+    L = 1 << P
+    K = min(1 << k, L)
+    model = FingerprintModel(L)
+    eng = GenericFlashEngine(model, {}, batch=2, gen_max=L, chunk_size=K)
+    state = eng.set_first(eng.init_state(),
+                          jax.nn.one_hot(jnp.zeros(2, jnp.int32), L))
+    state, toks = eng.generate(state, L)
+    _check_coverage(state, L, L, B=2)
+    np.testing.assert_array_equal(
+        np.asarray(toks), np.tile(np.arange(1, L + 1), (2, 1)))
+
+
+@given(st.integers(min_value=2, max_value=5),    # P: L = 2^P
+       st.integers(min_value=0, max_value=10**6))  # split-pattern seed
+@settings(max_examples=12, deadline=None)
+def test_random_chunk_splits_cover_exactly_once(P, seed):
+    """Coverage must be split-invariant: drive decode_chunk directly with a
+    RANDOM partition of the step range (not just aligned pow2 chunks) —
+    the segment metadata plus in-tile clipping must still aggregate every
+    cell exactly once and bit-reproduce the one-chunk run."""
+    L = 1 << P
+    rng = np.random.RandomState(seed)
+    model = FingerprintModel(L)
+
+    def run(splits):
+        eng = GenericFlashEngine(model, {}, batch=1, gen_max=L)
+        st_ = eng.set_first(eng.init_state(),
+                            jax.nn.one_hot(jnp.zeros(1, jnp.int32), L))
+        key = jax.random.PRNGKey(0)
+        step = 0
+        for k in splits:
+            sides = schedule_segment(step + 1, k, origin=0,
+                                     horizon=eng.Lbuf, last_step=L)
+            st_, _, key = eng.decode_chunk(st_, step, key, sides)
+            step += k
+        return st_
+
+    splits = []
+    left = L
+    while left:
+        k = int(rng.randint(1, left + 1))
+        splits.append(k)
+        left -= k
+    state = run(splits)
+    _check_coverage(state, L, L, B=1)
+    ref = run([L])  # single fused chunk
+    np.testing.assert_array_equal(np.asarray(state.s[0]), np.asarray(ref.s[0]))
+
+
+@given(st.integers(min_value=1, max_value=4),   # K server chunk size
+       st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=8, deadline=None)
+def test_server_chunks_cover_exactly_once_per_slot(K, seed):
+    """Per-slot schedules through the masked-cond server path: 3 slots
+    admitted with DIFFERENT prompt lengths (prefill_slot writes the prompt
+    staircase + spill), then advanced in fused K-chunks — every slot's
+    coverage must stay exactly-once across its own origin-shifted
+    schedule."""
+    L = 16
+    rng = np.random.RandomState(seed)
+    plens = [int(rng.randint(1, 7)) for _ in range(3)]
+    gen = [int(8 + rng.randint(0, 5)) for _ in range(3)]
+    model = FingerprintModel(64)
+    eng = GenericFlashEngine(model, {}, batch=3, gen_max=L,
+                             prompt_max=8)
+    state = eng.init_state()
+    for s_i, P in enumerate(plens):
+        prompt = jax.nn.one_hot(jnp.arange(P), 64, dtype=_F32)[None]
+        state, tok = eng.prefill_slot(state, s_i, prompt)
+        assert int(tok) == P  # prefill advance reads the full prompt count
+    pos = list(plens)
+    key = jax.random.PRNGKey(1)
+    steps_left = list(gen)
+    while any(s > 0 for s in steps_left):
+        p0 = np.asarray(pos, np.int32)
+        live = np.asarray([s > 0 for s in steps_left], bool)
+        state, toks, key = eng.server_chunk(
+            state, p0, np.asarray(plens, np.int32), live, key, K)
+        toks = np.asarray(toks)
+        for s_i in range(3):
+            if live[s_i]:
+                kk = min(K, steps_left[s_i])
+                # emitted counts continue the per-slot staircase
+                np.testing.assert_array_equal(
+                    toks[s_i, :kk],
+                    np.arange(pos[s_i] + 1, pos[s_i] + kk + 1))
+                pos[s_i] += K  # blind advance, like the server
+                steps_left[s_i] -= K
+    s0 = np.asarray(state.s[0])
+    for s_i in range(3):
+        n = plens[s_i] + gen[s_i]
+        np.testing.assert_array_equal(
+            s0[s_i, :n], _staircase(n, 64),
+            err_msg=f"slot {s_i} (P={plens[s_i]}, gen={gen[s_i]})")
+
+
+# ------------------------------------- production engine vs slow reference
+def test_production_engine_matches_reference_runner():
+    """The jitted engine must reproduce the Python-loop ReferenceGenericEngine
+    under identical autoregressive feedback (GLA mixer, tanh readout):
+    same input stream, same outputs, to float tolerance."""
+    D, dk, dv, L = 12, 4, 6, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    mixer = GatedLinearAttention(
+        wq=jax.random.normal(ks[0], (D, dk), _F32),
+        wk=jax.random.normal(ks[1], (D, dk), _F32),
+        wv=jax.random.normal(ks[2], (D, dv), _F32), lam=0.9)
+    W = jax.random.normal(ks[3], (dv, D), _F32) * 0.3
+    y0 = jax.random.normal(jax.random.PRNGKey(5), (1, D), _F32)
+
+    ref_eng = ReferenceGenericEngine(mixer, batch=1, length=L)
+    ys_ref, zs_ref = ref_eng.run(lambda zs, z: jnp.tanh(z @ W), y0)
+
+    class M:
+        a0_width = D
+        n_levels = 1
+        widths = (dv,)
+
+        def mixers(self, params):
+            return (mixer,)
+
+        def block(self, params, level, z, y):
+            return z
+
+        def advance(self, params, a_top, rng):
+            return jnp.tanh(a_top @ W), jnp.zeros((a_top.shape[0],), jnp.int32)
+
+    eng = GenericFlashEngine(M(), {}, batch=1, gen_max=L, chunk_size=4)
+    state = eng.set_first(eng.init_state(), y0)
+    state, _ = eng.generate(state, L)
+    np.testing.assert_allclose(np.asarray(state.a[0][:, :L]),
+                               np.asarray(ys_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.a[1][:, :L]),
+                               np.asarray(zs_ref), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------- rng-key schedule
+def test_generic_chunk_rng_advances_one_split_per_step():
+    """decode_chunk and server_chunk return the rng advanced by EXACTLY one
+    split per schedule step, matching the stepwise loop's split chain —
+    the same deterministic contract the LCSM engine pins."""
+    model = FingerprintModel(16)
+    eng = GenericFlashEngine(model, {}, batch=2, gen_max=16)
+    rng = jax.random.PRNGKey(3)
+    state = eng.set_first(eng.init_state(),
+                          jax.nn.one_hot(jnp.zeros(2, jnp.int32), 16))
+    sides = schedule_segment(1, 4, origin=0, horizon=eng.Lbuf, last_step=8)
+    _, _, rng_out = eng.decode_chunk(state, 0, rng, sides)
+    want = rng
+    for _ in range(len(sides)):
+        want, _ = jax.random.split(want)
+    np.testing.assert_array_equal(np.asarray(rng_out), np.asarray(want))
+
+    K = 5
+    state2 = eng.set_first(eng.init_state(),
+                           jax.nn.one_hot(jnp.zeros(2, jnp.int32), 16))
+    _, _, rng_out2 = eng.server_chunk(
+        state2, np.zeros(2, np.int32), np.zeros(2, np.int32),
+        np.ones(2, bool), rng, K)
+    want2 = rng
+    for _ in range(K):
+        want2, _ = jax.random.split(want2)
+    np.testing.assert_array_equal(np.asarray(rng_out2), np.asarray(want2))
+
+
+def test_generic_chunk_jit_cache_stays_logarithmic():
+    """Aligned pow2 chunks share interior tile sides through the segment
+    cache — O(log L) distinct fused programs, exactly like the LCSM path."""
+    n, K = 32, 4
+    model = FingerprintModel(n)
+    eng = GenericFlashEngine(model, {}, batch=1, gen_max=n, chunk_size=K)
+    state = eng.set_first(eng.init_state(),
+                          jax.nn.one_hot(jnp.zeros(1, jnp.int32), n))
+    eng.generate(state, n)
+    assert len(eng._jit_chunk) <= int(np.log2(n // K)) + 2, \
+        f"chunk cache blew up: {list(eng._jit_chunk)}"
+
+
+def test_generic_step_functions_donate_state():
+    """Generic engine step/chunk functions donate their pytree state, like
+    the LCSM engine: the passed-in buffers are dead after the call."""
+    import pytest
+
+    model = FingerprintModel(8)
+    eng = GenericFlashEngine(model, {}, batch=1, gen_max=8)
+    state = eng.set_first(eng.init_state(),
+                          jax.nn.one_hot(jnp.zeros(1, jnp.int32), 8))
+    new_state, _ = eng.red_step(state, 0, jax.random.PRNGKey(1))
+    if not state.s[0].is_deleted():
+        pytest.skip("backend does not honor buffer donation")
+    with pytest.raises(RuntimeError):
+        np.asarray(state.s[0])
+    assert np.asarray(new_state.s[0]).shape == (1, eng.Lbuf, 8)

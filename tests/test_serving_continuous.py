@@ -1,10 +1,12 @@
-"""Continuous batching for LCSM serving (Flash Inference backend).
+"""Continuous batching for LCSM (Flash Inference) and GLA (generic §4
+engine) serving backends.
 
-The exactness bar: every per-request stream emitted by the slot-based
-LCSMServer — requests with independent lifetimes sharing slots, admitted
+The exactness bar: every per-request stream emitted by a slot-based
+server — requests with independent lifetimes sharing slots, admitted
 and retired mid-flight — must be identical to an isolated batch-1 lockstep
 greedy decode of the same prompt (the same bar examples/serve_batched.py
-asserts for the transformer backend).
+asserts for the transformer backend).  The GLA section runs the mirror
+trace through GenericServer: same slot logic, different mixer family.
 """
 
 import dataclasses
@@ -16,7 +18,9 @@ import pytest
 
 from repro.configs import get_config
 from repro.models.hyena import HyenaLCSM
-from repro.serving import LCSMServer, Request, ServingEngine, make_server
+from repro.serving import (GenericServer, LCSMServer, Request, ServingEngine,
+                           make_server)
+from repro.serving import generic_backend
 from repro.serving.lcsm_backend import isolated_decode
 
 PROMPT_MAX, GEN_MAX = 8, 16
@@ -169,10 +173,14 @@ def test_chunked_eos_truncates_mid_chunk(setup):
     assert req.out == ref[:cut]
 
 
-def test_make_server_routes_by_family(setup):
+def test_make_server_routes_by_family(setup, gla_setup):
     cfg, params = setup
     assert isinstance(make_server(cfg, params, n_slots=2, gen_max=8),
                       LCSMServer)
+    gcfg, gparams = gla_setup
+    srv = make_server(gcfg, gparams, n_slots=2, gen_max=8)
+    assert isinstance(srv, GenericServer)
+    assert isinstance(srv, LCSMServer)  # inherits the slot bookkeeping
     tcfg = get_config("qwen2.5-3b").smoke()
     from repro.models.lm import LM
     tparams = LM(tcfg).init(jax.random.PRNGKey(0))
@@ -180,3 +188,102 @@ def test_make_server_routes_by_family(setup):
         make_server(tcfg, tparams, n_slots=2, max_seq=16,
                     cache_dtype=jnp.float32),
         ServingEngine)
+
+
+# ------------------------------------------------ GLA ("and Beyond") mirror
+@pytest.fixture(scope="module")
+def gla_setup():
+    from repro.models.gla import GLALM
+
+    cfg = dataclasses.replace(get_config("gla").smoke(), name="gla-cb",
+                              n_layers=2, d_model=32, d_ff=64, vocab=128,
+                              gla_dk=8, gla_dv=32)
+    params = GLALM(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _gla_isolated(cfg, params, prompt, n):
+    return generic_backend.isolated_decode(
+        cfg, params, prompt, n, prompt_max=PROMPT_MAX, gen_max=GEN_MAX)
+
+
+def test_gla_continuous_batching_matches_isolated(gla_setup):
+    """7 GLA requests with mixed prompt/output lengths over 3 slots through
+    the generic engine: slots refill as requests retire, and every stream
+    must equal its isolated batch-1 decode — bit for bit."""
+    cfg, params = gla_setup
+    srv = make_server(cfg, params, n_slots=3, prompt_max=PROMPT_MAX,
+                      gen_max=GEN_MAX)
+    assert isinstance(srv, GenericServer)
+    reqs = _mixed_requests(cfg, 7)
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run()
+    assert len(done) == len(reqs) and all(r.done for r in reqs)
+    for r in reqs:
+        assert len(r.out) == r.max_new
+        ref = _gla_isolated(cfg, params, r.prompt, r.max_new)
+        assert r.out == ref, f"req {r.uid}: {r.out} != {ref}"
+
+
+def test_gla_slot_count_invariance(gla_setup):
+    """The number of GLA slots must not change any request's tokens."""
+    cfg, params = gla_setup
+
+    def run(n_slots):
+        srv = make_server(cfg, params, n_slots=n_slots,
+                          prompt_max=PROMPT_MAX, gen_max=GEN_MAX)
+        reqs = _mixed_requests(cfg, 6, seed=3)
+        for r in reqs:
+            srv.submit(r)
+        srv.run()
+        return {r.uid: tuple(r.out) for r in reqs}
+
+    assert run(1) == run(3)
+
+
+def test_gla_chunked_run_matches_per_step(gla_setup):
+    """GenericServer.run(chunk=K): one fused dispatch + one deferred token
+    readback per K tokens through server_chunk's masked per-side branches —
+    streams must equal the per-step server exactly, including chunks that
+    overshoot past max_new (blind tail truncated on the host)."""
+    cfg, params = gla_setup
+
+    def run(chunk):
+        srv = make_server(cfg, params, n_slots=3, prompt_max=PROMPT_MAX,
+                          gen_max=GEN_MAX, chunk=chunk)
+        reqs = _mixed_requests(cfg, 6, seed=5)
+        for r in reqs:
+            srv.submit(r)
+        done = srv.run()
+        assert len(done) == len(reqs) and all(r.done for r in reqs)
+        return {r.uid: tuple(r.out) for r in reqs}
+
+    ref = run(None)
+    assert run(4) == ref
+
+
+def test_gla_eos_retires_slot_early(gla_setup):
+    """EOS mid-stream retires a GLA slot at that token and hands it to the
+    queue; other in-flight streams are unaffected."""
+    cfg, params = gla_setup
+    rng = np.random.RandomState(11)
+    prompts = [rng.randint(0, cfg.vocab, (4,)).astype(np.int32)
+               for _ in range(3)]
+    refs = [_gla_isolated(cfg, params, p, GEN_MAX) for p in prompts]
+    eos_pos = 5
+    reqs = [
+        Request(uid=0, prompt=prompts[0], max_new=GEN_MAX,
+                eos_id=refs[0][eos_pos]),
+        Request(uid=1, prompt=prompts[1], max_new=GEN_MAX),
+        Request(uid=2, prompt=prompts[2], max_new=GEN_MAX),
+    ]
+    srv = make_server(cfg, params, n_slots=2, prompt_max=PROMPT_MAX,
+                      gen_max=GEN_MAX)
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    cut = refs[0].index(refs[0][eos_pos]) + 1  # EOS may first occur earlier
+    assert reqs[0].out == refs[0][:cut]
+    assert reqs[1].out == refs[1]
+    assert reqs[2].out == refs[2]
