@@ -20,11 +20,13 @@ def main() -> None:
 
     from benchmarks import (bench_e2e, bench_flops, bench_generic,
                             bench_mixer, bench_serving, bench_tau,
-                            bench_tokentime, roofline_report)
+                            bench_tokentime, bench_traffic, roofline_report)
 
     jobs = [
         ("serving throughput (continuous batching)",
          lambda: bench_serving.main(smoke=args.fast)),
+        ("traffic frontend (open-loop arrivals + prefix-cache sweep)",
+         lambda: bench_traffic.main(smoke=args.fast)),
         ("generic engine, GLA flash vs recurrent (§4 'and Beyond')",
          lambda: bench_generic.main(smoke=args.fast)),
         ("flops (Prop 1/2, Thm 2)", lambda: bench_flops.main()),

@@ -417,16 +417,26 @@ class FlashEngine(ScheduleWalker):
         return self._shard_state(state._replace(b=tuple(b)))
 
     # ---------------------------------------------------------------- prefill
-    def _prefill_rows(self, params, a0_prompt: jnp.ndarray, rng):
+    def _prefill_rows(self, params, a0_prompt: jnp.ndarray, plen, rng):
         """Teacher-forced prompt ingestion (static FFT path) on FRESH zero
         buffers + eager spill of prompt contributions into all future b's
         (Massaroli Lemma 2.1), then a first ``advance`` from the last prompt
-        position P-1 — so the first emitted token is conditioned on the
+        position plen-1 — so the first emitted token is conditioned on the
         prompt, exactly like an autoregressive reference decode — whose
-        a0 entry is written at P.  Returns (a rows, b rows, token)."""
+        a0 entry is written at plen.  Returns (a rows, b rows, token).
+
+        ``a0_prompt`` may be right-padded with zero rows past the TRACED
+        true length ``plen`` (prompt-length bucketing, see
+        ScheduleWalker._bucket_prompt): zero rows contribute nothing to the
+        convolutions, and the mask below zeroes the (junk) block outputs at
+        padded positions before they feed the next level's convolution —
+        positions < plen come out exactly as an unpadded prefill of the
+        same FFT size would produce them."""
         m = self.model
         Bp, P, _ = a0_prompt.shape
         w = m.ctx_window
+        keep = jnp.arange(P) < plen  # (P,) true-prompt-row mask
+        p_last = jnp.broadcast_to(jnp.asarray(plen - 1, jnp.int32), (Bp,))
         a = [jnp.zeros((Bp, self.Lbuf, wd), self.dtype)
              for wd in [m.a0_width] + [s.width for s in m.levels]]
         b = [jnp.zeros((Bp, self.Lbuf, s.conv_size), jnp.float32)
@@ -441,24 +451,36 @@ class FlashEngine(ScheduleWalker):
             b_prompt = b[l][:, :P].astype(self.dtype)
             acts = [jnp.pad(arr[:, :P], ((0, 0), (w, 0), (0, 0))) for arr in a]
             out = m.block(params, l, b_prompt, acts)  # (Bp, P, width)
+            out = jnp.where(keep[None, :, None], out, 0)
             a[l + 1] = a[l + 1].at[:, :P].set(out.astype(self.dtype))
-        acts = self._acts_windows(a, jnp.full((Bp,), P - 1, jnp.int32), 1)
+        acts = self._acts_windows(a, p_last, 1)
         a0_next, token = m.advance(params, acts, rng)
-        if P < self.Lbuf:
-            a[0] = a[0].at[:, P].set(a0_next.astype(self.dtype))
+        a[0] = write_next_rows(a[0], p_last, a0_next.astype(self.dtype),
+                               self.Lbuf)
         return a, b, token
 
     def prefill(
-        self, a0_prompt: jnp.ndarray, rng: jax.Array | None = None
+        self, a0_prompt: jnp.ndarray, rng: jax.Array | None = None,
+        *, bucket: bool = False,
     ) -> tuple[EngineState, jnp.ndarray]:
         """Full-batch prompt ingestion on fresh buffers; the tile schedule
         restarts at origin = P.  Returns (state, first sampled token (B,));
         subsequent tokens come from ``generate(..., origin=P)``.  (Takes no
         input state on purpose: a prompt defines the whole prefix, so any
-        previously seeded state would be discarded anyway.)"""
+        previously seeded state would be discarded anyway.)
+
+        ``bucket=True`` pads the prompt to a pow2 length bucket before
+        tracing (see _bucket_prompt) — pass it when this prefill serves as
+        the bitwise reference for a server admission, which always buckets
+        (a different pad can mean a different FFT size, hence different
+        rounding)."""
         rng = jax.random.PRNGKey(0) if rng is None else rng
         assert a0_prompt.shape[0] == self.batch
-        a, b, token = self._jit_prefill(self.params, a0_prompt, rng)
+        plen = a0_prompt.shape[1]
+        if bucket:
+            a0_prompt, plen = self._bucket_prompt(a0_prompt)
+        a, b, token = self._jit_prefill(
+            self.params, a0_prompt, jnp.asarray(plen, jnp.int32), rng)
         # full prefill builds fresh buffers from a replicated prompt, so the
         # one-time commit onto the mesh happens here (decode then donates the
         # sharded buffers in place).
@@ -466,22 +488,31 @@ class FlashEngine(ScheduleWalker):
 
     def prefill_slot(
         self, state: EngineState, slot, a0_prompt: jnp.ndarray,
-        rng: jax.Array | None = None,
+        rng: jax.Array | None = None, *, bucket: bool = True,
     ) -> tuple[EngineState, jnp.ndarray]:
         """Single-slot admission prefill for continuous batching: a batch-1
         prompt prefill on fresh buffers whose full Lbuf rows are then written
         into row ``slot`` of the batched state (one dynamic_update_slice per
         buffer — no other slot is disturbed, and slot reuse needs no separate
         reset because every row is overwritten).  The input state is donated.
-        Returns (state, first sampled token, scalar)."""
+        Returns (state, first sampled token, scalar).
+
+        Admission prefill BUCKETS by default: the prompt is padded to a pow2
+        length (true length rides along traced), so this jit cache holds
+        O(log prompt_max) programs instead of one per distinct prompt length
+        a serving workload happens to contain."""
         rng = jax.random.PRNGKey(0) if rng is None else rng
         assert a0_prompt.shape[0] == 1
+        plen = a0_prompt.shape[1]
+        if bucket:
+            a0_prompt, plen = self._bucket_prompt(a0_prompt)
         return self._jit_prefill_slot(
-            self.params, state, jnp.asarray(slot, jnp.int32), a0_prompt, rng)
+            self.params, state, jnp.asarray(slot, jnp.int32), a0_prompt,
+            jnp.asarray(plen, jnp.int32), rng)
 
     def _prefill_slot_impl(self, params, state: EngineState, slot,
-                           a0_prompt, rng):
-        a1, b1, token = self._prefill_rows(params, a0_prompt, rng)
+                           a0_prompt, plen, rng):
+        a1, b1, token = self._prefill_rows(params, a0_prompt, plen, rng)
         a = tuple(write_slot_rows(big, one, slot)
                   for big, one in zip(state.a, a1))
         b = tuple(write_slot_rows(big, one, slot)

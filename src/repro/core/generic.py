@@ -247,16 +247,28 @@ class GenericFlashEngine(ScheduleWalker):
         return self._shard_state(state._replace(s=tuple(s)))
 
     # ---------------------------------------------------------------- prefill
-    def _prefill_rows(self, params, a0_prompt: jnp.ndarray, rng):
+    def _prefill_rows(self, params, a0_prompt: jnp.ndarray, plen, rng):
         """Teacher-forced prompt ingestion on fresh zero buffers: per level,
         the mixer's static path (``prefill_states``) finalizes the prompt
         rows, ONE range-algorithm call spills the whole prompt's
         contributions into every future position (the generic analogue of
         the LCSM engine's Massaroli Lemma-2.1 eager spill), and the block
         runs full-width.  Ends with an ``advance`` from the last prompt
-        position P-1 so the first emitted token is prompt-conditioned."""
+        position plen-1 so the first emitted token is prompt-conditioned.
+
+        ``a0_prompt`` may be right-padded with zero rows past the TRACED
+        true length ``plen`` (prompt-length bucketing).  Exactness leans on
+        the mixer contract that ``cont`` of an all-zero input row is
+        agg-neutral (GLA: k=v=0): then ``prefill_states`` rows past plen
+        are exactly the finalized-prompt state carried forward — i.e. the
+        spill values those positions need — and the padded ``range_alg``
+        call spills the same aggregate the unpadded one would.  Junk block
+        outputs at padded rows are masked to zero before they become the
+        next level's input."""
         m = self.model
         Bp, P, _ = a0_prompt.shape
+        keep = jnp.arange(P) < plen  # (P,) true-prompt-row mask
+        p_last = jnp.broadcast_to(jnp.asarray(plen - 1, jnp.int32), (Bp,))
         a = [jnp.zeros((Bp, self.Lbuf, w), self.dtype)
              for w in (m.a0_width,) + tuple(m.widths)]
         mixers = m.mixers(params)
@@ -281,43 +293,61 @@ class GenericFlashEngine(ScheduleWalker):
                         (0, P) + (0,) * (big.ndim - 2)),
                     s[l], tail)
             z = jax.vmap(mix.read, in_axes=1, out_axes=1)(states, y)
-            a[l + 1] = a[l + 1].at[:, :P].set(
-                m.block(params, l, z, y).astype(self.dtype))
-        top = a[len(mixers)][:, P - 1]
+            out = m.block(params, l, z, y)
+            out = jnp.where(keep[None, :, None], out, 0)
+            a[l + 1] = a[l + 1].at[:, :P].set(out.astype(self.dtype))
+        top = slice_rows(a[len(mixers)], p_last, 0, 1,
+                         a[len(mixers)].shape[-1])[:, 0]
         a0_next, token = m.advance(params, top, rng)
-        if P < self.Lbuf:
-            a[0] = a[0].at[:, P].set(a0_next.astype(self.dtype))
+        a[0] = write_next_rows(a[0], p_last, a0_next.astype(self.dtype),
+                               self.Lbuf)
         return a, s, token
 
     def prefill(
-        self, a0_prompt: jnp.ndarray, rng: jax.Array | None = None
+        self, a0_prompt: jnp.ndarray, rng: jax.Array | None = None,
+        *, bucket: bool = False,
     ) -> tuple[GenericState, jnp.ndarray]:
         """Full-batch prompt ingestion on fresh buffers; the tile schedule
         restarts at origin = P.  Returns (state, first sampled token (B,));
-        subsequent tokens come from ``generate(..., origin=P)``."""
+        subsequent tokens come from ``generate(..., origin=P)``.
+        ``bucket=True`` pads to the pow2 length bucket — pass it when this
+        prefill is the bitwise reference for a (bucketing) server
+        admission."""
         rng = jax.random.PRNGKey(0) if rng is None else rng
         assert a0_prompt.shape[0] == self.batch
-        a, s, token = self._jit_prefill(self.params, a0_prompt, rng)
+        plen = a0_prompt.shape[1]
+        if bucket:
+            a0_prompt, plen = self._bucket_prompt(a0_prompt)
+        a, s, token = self._jit_prefill(
+            self.params, a0_prompt, jnp.asarray(plen, jnp.int32), rng)
         return GenericState(a=tuple(a), s=tuple(s)), token
 
     def prefill_slot(
         self, state: GenericState, slot, a0_prompt: jnp.ndarray,
-        rng: jax.Array | None = None,
+        rng: jax.Array | None = None, *, bucket: bool = True,
     ) -> tuple[GenericState, jnp.ndarray]:
         """Single-slot admission prefill for continuous batching: a batch-1
         prompt prefill on fresh buffers whose full Lbuf rows are then written
         into row ``slot`` of the batched state (no other slot is disturbed;
         slot reuse needs no separate reset because every row is
         overwritten).  The input state is donated.  Returns
-        (state, first sampled token, scalar)."""
+        (state, first sampled token, scalar).
+
+        Admission prefill BUCKETS by default (pad to pow2 + traced true
+        length): the jit cache holds O(log prompt_max) programs instead of
+        one per distinct prompt length."""
         rng = jax.random.PRNGKey(0) if rng is None else rng
         assert a0_prompt.shape[0] == 1
+        plen = a0_prompt.shape[1]
+        if bucket:
+            a0_prompt, plen = self._bucket_prompt(a0_prompt)
         return self._jit_prefill_slot(
-            self.params, state, jnp.asarray(slot, jnp.int32), a0_prompt, rng)
+            self.params, state, jnp.asarray(slot, jnp.int32), a0_prompt,
+            jnp.asarray(plen, jnp.int32), rng)
 
     def _prefill_slot_impl(self, params, state: GenericState, slot,
-                           a0_prompt, rng):
-        a1, s1, token = self._prefill_rows(params, a0_prompt, rng)
+                           a0_prompt, plen, rng):
+        a1, s1, token = self._prefill_rows(params, a0_prompt, plen, rng)
         a = tuple(write_slot_rows(big, one, slot)
                   for big, one in zip(state.a, a1))
         s = tuple(jax.tree.map(lambda b, o: write_slot_rows(b, o, slot),

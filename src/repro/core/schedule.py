@@ -171,6 +171,8 @@ class ScheduleWalker:
         # server_chunk per K (per-slot traced schedules).
         self._jit_chunk: dict[tuple[int, ...], Callable] = {}
         self._jit_server_chunk: dict[int, Callable] = {}
+        self._jit_import = jax.jit(self._import_slot_rows_impl,
+                                   donate_argnums=(0,))
 
     def _shard_state(self, state):
         """Pin a sharding on a TRACED state (default: identity).  Mesh-aware
@@ -360,6 +362,61 @@ class ScheduleWalker:
         return fn(self.params, state, as_pos_vec(p0, self.batch),
                   as_pos_vec(origin, self.batch),
                   jnp.asarray(live, bool), rng)
+
+    # --------------------------------------------------- prompt-length buckets
+    def _bucket_prompt(self, a0_prompt):
+        """Right-pad an embedded prompt (B, P, D) with zero rows to the next
+        power of two (capped at Lbuf), returning (padded prompt, true P).
+
+        Prompt length is a trace shape, so an unbucketed prefill jit cache
+        holds one program per distinct P; bucketing bounds it at
+        O(log prompt_max) programs.  The true length rides along as a TRACED
+        scalar: the prefill body masks block writes past it and anchors the
+        first ``advance`` at plen-1, so padded rows never leak into real
+        positions.  Exactness contract: a zero input row must contribute
+        nothing — true for LCSM (zero convolution inputs; the FFT size is a
+        static function of the padded shape) and for any generic mixer whose
+        ``cont`` of an all-zero row is agg-neutral (GLA: k=v=0)."""
+        P = a0_prompt.shape[1]
+        P2 = min(ceil_pow2(P), self.Lbuf)
+        if P2 > P:
+            pad = jnp.zeros(
+                (a0_prompt.shape[0], P2 - P) + a0_prompt.shape[2:],
+                a0_prompt.dtype)
+            a0_prompt = jnp.concatenate([a0_prompt, pad], axis=1)
+        return a0_prompt, P
+
+    # ------------------------------------------------ slot-state export/import
+    # The entire inference state of a slot is its fixed-size buffer rows (a
+    # key LCSM/generic property: no growing KV cache), so a prompt's
+    # post-prefill state can be snapshotted and later restored into any slot
+    # of any same-shaped engine by a row copy — the mechanism behind the
+    # serving frontend's prefix-state cache (serving/frontend/prefix_cache).
+
+    def export_slot_rows(self, state, slot):
+        """Copy slot ``slot``'s full buffer rows out of ``state`` as a
+        batch-1 state pytree.  The returned leaves are FRESH buffers (a
+        gather, not a view), so they stay valid after the engine donates
+        and overwrites ``state`` in subsequent steps — safe to hold in a
+        host-side cache.  The input state is NOT donated."""
+        i = jnp.asarray(slot, jnp.int32)
+        return jax.tree.map(
+            lambda leaf: jax.lax.dynamic_slice_in_dim(leaf, i, 1, axis=0),
+            state)
+
+    def import_slot_rows(self, state, slot, rows):
+        """Write a previously exported batch-1 ``rows`` pytree into row
+        ``slot`` of the batched state (one dynamic_update_slice per leaf —
+        no other slot is disturbed; slot reuse needs no reset because every
+        row is overwritten).  Restoring rows exported right after a
+        ``prefill_slot`` reproduces that admission BITWISE: the restored
+        slot is indistinguishable from one that just ran the prefill.
+        The input state is donated.  Returns the new state."""
+        return self._jit_import(state, jnp.asarray(slot, jnp.int32), rows)
+
+    def _import_slot_rows_impl(self, state, slot, rows):
+        return self._shard_state(jax.tree.map(
+            lambda big, one: write_slot_rows(big, one, slot), state, rows))
 
     def _gray_tile_guard(self, state, p: int, U: int):
         if p + 1 >= self.Lbuf:  # no output position fits in the buffer: skip.

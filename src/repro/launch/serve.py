@@ -12,6 +12,18 @@ engine), all others the ServingEngine with per-family caches.  Same
 admission loop either way: submit -> run -> slots refill as requests
 retire.
 
+Traffic mode (``--traffic``) serves the same workload through the
+frontend scheduler instead of submit-all-upfront: seeded Poisson-style
+arrivals (``--arrival-rate``), pluggable admission policy (``--policy``),
+bounded queue (``--queue-limit``), streamed token delivery, and a latency
+telemetry snapshot.  ``--prefix-cache [BYTES]`` adds the content-addressed
+prefix-state cache (LCSM/GLA only): requests repeating a system prompt
+skip prefill via a slot-row restore.  ``--hit-frac`` controls how much of
+the generated traffic reuses shared prompts:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch hyena --smoke \
+        --traffic --n-requests 12 --slots 3 --prefix-cache --hit-frac 0.6
+
 Multi-device: ``--mesh-data N [--mesh-model M]`` builds an (N, M) serving
 mesh (launch/mesh.make_serving_mesh) and shards slots over 'data' /
 channels over 'model'.  On a CPU host, force devices first:
@@ -54,6 +66,22 @@ def main():
                     help="shard slots over a 'data' mesh axis of this size")
     ap.add_argument("--mesh-model", type=int, default=1,
                     help="shard channels over a 'model' mesh axis")
+    ap.add_argument("--traffic", action="store_true",
+                    help="serve via the frontend scheduler (timed arrivals, "
+                         "streaming, telemetry) instead of submit-then-run")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="traffic mode: mean arrivals per decode step")
+    ap.add_argument("--policy", default="fcfs", choices=["fcfs", "spf"],
+                    help="traffic mode: admission policy")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="traffic mode: frontend queue bound (backpressure)")
+    ap.add_argument("--prefix-cache", nargs="?", type=int, const=-1,
+                    default=None, metavar="BYTES",
+                    help="traffic mode: enable the prefix-state cache, "
+                         "optionally with an LRU byte budget")
+    ap.add_argument("--hit-frac", type=float, default=0.5,
+                    help="traffic mode: share of arrivals reusing one of "
+                         "two shared system prompts")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -84,6 +112,33 @@ def main():
     srv = make_server(cfg, params, n_slots=args.slots, max_seq=args.max_seq,
                       prompt_max=args.prompt_len, gen_max=args.max_new,
                       mesh=mesh, **extra)
+
+    if args.traffic:
+        import json
+
+        from repro.serving.frontend import make_frontend, poisson_trace
+
+        budget = (args.prefix_cache if args.prefix_cache is not None
+                  and args.prefix_cache >= 0 else None)
+        sched = make_frontend(srv, policy=args.policy,
+                              queue_limit=args.queue_limit,
+                              prefix_cache=args.prefix_cache is not None,
+                              prefix_cache_bytes=budget, chunk=args.chunk)
+        cache = sched.cache
+        trace = poisson_trace(cfg.vocab, args.n_requests,
+                              rate=args.arrival_rate,
+                              prompt_max=args.prompt_len,
+                              gen_max=args.max_new,
+                              hit_frac=args.hit_frac)
+        for ev in sched.serve(trace):  # streaming consumption
+            print(f"  t={ev.step:6.1f} req {ev.uid} tok[{ev.index}]="
+                  f"{ev.token}{'  <done>' if ev.done else ''}")
+        snap = sched.metrics.snapshot()
+        snap.pop("per_request")
+        if cache is not None:
+            snap["prefix_cache"] = cache.stats()
+        print(json.dumps(snap, indent=1, default=float))
+        return
 
     rng = np.random.RandomState(0)
     t0 = time.perf_counter()

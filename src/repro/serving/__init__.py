@@ -25,21 +25,37 @@ from repro.serving.lcsm_backend import LCSMServer  # noqa: F401
 
 def make_server(cfg: ModelConfig, params: Any, *, n_slots: int,
                 max_seq: int = 64, prompt_max: int = 16,
-                gen_max: int = 32, **kw):
+                gen_max: int = 32, frontend: dict | None = None, **kw):
     """Build the serving backend for ``cfg``.
 
     ``max_seq`` sizes transformer caches; ``prompt_max``/``gen_max`` size
     the LCSM/GLA per-slot buffers (Lbuf = prompt_max + ceil_pow2(gen_max)).
     Extra keyword args go to the chosen backend (e.g. ``strategy=`` /
-    ``tau_impl=`` for LCSM, ``window=`` / ``cache_dtype=`` for the rest).
+    ``tau_impl=`` / ``chunk=`` / ``seed=`` for LCSM, ``chunk=`` / ``seed=``
+    for GLA, ``window=`` / ``cache_dtype=`` for the rest).
     ``mesh=`` (transformer + LCSM backends) shards serving slots over the
     mesh's 'data' axis and channels/decode state over 'model' — see
     launch/mesh.make_serving_mesh and README "Multi-device serving".
+
+    ``frontend=`` (a kwargs dict for
+    ``repro.serving.frontend.make_frontend``: ``policy=``,
+    ``queue_limit=``, ``prefix_cache=``/``prefix_cache_bytes=``,
+    ``chunk=``) wraps the backend in a traffic-serving
+    :class:`~repro.serving.frontend.TrafficScheduler` — timed arrivals,
+    streaming token delivery, prefix-state caching (LCSM/GLA only), and
+    latency telemetry — and returns the scheduler (the raw server stays
+    reachable as ``scheduler.server``).  See README "Serving frontend".
     """
     if cfg.family == "lcsm":
-        return LCSMServer(cfg, params, n_slots=n_slots,
-                          prompt_max=prompt_max, gen_max=gen_max, **kw)
-    if cfg.family == "gla":
-        return GenericServer(cfg, params, n_slots=n_slots,
-                             prompt_max=prompt_max, gen_max=gen_max, **kw)
-    return ServingEngine(cfg, params, n_slots=n_slots, max_seq=max_seq, **kw)
+        srv = LCSMServer(cfg, params, n_slots=n_slots,
+                         prompt_max=prompt_max, gen_max=gen_max, **kw)
+    elif cfg.family == "gla":
+        srv = GenericServer(cfg, params, n_slots=n_slots,
+                            prompt_max=prompt_max, gen_max=gen_max, **kw)
+    else:
+        srv = ServingEngine(cfg, params, n_slots=n_slots, max_seq=max_seq,
+                            **kw)
+    if frontend is not None:
+        from repro.serving.frontend import make_frontend
+        return make_frontend(srv, **frontend)
+    return srv

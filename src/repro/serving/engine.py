@@ -95,31 +95,55 @@ class ServingEngine:
 
         self.caches = jax.tree.map(merge, self.caches, cache1)
 
-    def _admit(self, slot: int, req: Request) -> None:
-        P = len(req.prompt)
+    def _admit(self, slot: int, req: Request,
+               finished: list[Request] | None = None) -> None:
         batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
         last_logits, cache1 = self._prefill1(self.params, batch, S_cap=self.S)
         self._write_slot_cache(slot, cache1)
         nxt = int(jnp.argmax(last_logits[0]))
         req.out.append(nxt)
+        if nxt == req.eos_id or len(req.out) >= req.max_new:
+            req.done = True              # prompt-only request: done at
+            if finished is not None:     # admission, the slot stays free
+                finished.append(req)     # (same semantics as LCSMServer).
+            return
         self.tokens = self.tokens.at[slot, 0].set(nxt)
         self.slots[slot] = req
 
-    def _fill_free_slots(self) -> None:
+    def _fill_free_slots(self, finished: list[Request]) -> None:
         for slot in range(self.B):
-            if self.slots[slot] is None and self.queue:
-                self._admit(slot, self.queue.pop(0))
+            while self.slots[slot] is None and self.queue:
+                self._admit(slot, self.queue.pop(0), finished)
+
+    def admit(self, req: Request, *, rows=None, first_token=None,
+              finished: list[Request] | None = None) -> int | None:
+        """Frontend admission hook (surface parity with LCSMServer.admit):
+        admit ``req`` into the first free slot now, bypassing the queue.
+        Returns the slot used — also for requests that complete at
+        admission (collected in ``finished``, slot left free) — or None
+        when every slot is busy.  Transformer caches grow with the
+        sequence, so there is no prefix-state restore path here —
+        ``rows`` is rejected (the frontend's prefix cache is an
+        LCSM/generic-engine feature; see ISSUE motivation)."""
+        assert rows is None and first_token is None, (
+            "prefix-state restore is only supported by the LCSM/generic "
+            "backends (fixed-size sliceable slot rows)")
+        for slot in range(self.B):
+            if self.slots[slot] is None:
+                self._admit(slot, req, finished)
+                return slot
+        return None
 
     # ----------------------------------------------------------------- step
     def step(self) -> list[Request]:
         """Advance every active slot one token; returns requests finished
-        this step."""
-        self._fill_free_slots()
+        this step (including any finished at admission)."""
+        finished: list[Request] = []
+        self._fill_free_slots(finished)
         if all(s is None for s in self.slots):
-            return []
+            return finished
         logits, self.caches = self._decode(self.params, self.tokens, self.caches)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        finished = []
         new_tok = np.asarray(self.tokens).copy()
         for slot, req in enumerate(self.slots):
             if req is None:

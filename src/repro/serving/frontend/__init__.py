@@ -1,0 +1,46 @@
+"""Serving frontend: traffic scheduling, streaming delivery, prefix-state
+caching, and latency telemetry over the slot servers.
+
+The backends under ``repro.serving`` decode; this package serves.  See
+``scheduler.py`` (deterministic event-driven admission + streaming),
+``prefix_cache.py`` (content-addressed post-prefill row snapshots), and
+``metrics.py`` (TTFT / per-token latency / queue & occupancy telemetry).
+
+    from repro.serving import make_server
+    from repro.serving.frontend import TrafficScheduler, PrefixCache
+
+    srv = make_server(cfg, params, n_slots=4, prompt_max=8, gen_max=32)
+    sched = TrafficScheduler(srv, policy="fcfs",
+                             prefix_cache=PrefixCache(byte_budget=1 << 24))
+    report = sched.run(trace)          # or: for ev in sched.serve(trace): ...
+
+``make_frontend`` builds the whole stack in one call (what
+``launch/serve.py --traffic`` and ``make_server(frontend=...)`` use).
+"""
+
+from __future__ import annotations
+
+from repro.serving.frontend.metrics import ServingMetrics  # noqa: F401
+from repro.serving.frontend.prefix_cache import (  # noqa: F401
+    CacheEntry, PrefixCache, prefix_key)
+from repro.serving.frontend.scheduler import (  # noqa: F401
+    POLICIES, StreamEvent, TrafficReport, TrafficRequest, TrafficScheduler,
+    poisson_trace)
+
+
+def make_frontend(server, *, policy: str = "fcfs",
+                  queue_limit: int | None = None,
+                  prefix_cache_bytes: int | None = None,
+                  prefix_cache: bool = False,
+                  chunk: int | None = None) -> TrafficScheduler:
+    """Wrap a slot server in a TrafficScheduler.
+
+    ``prefix_cache=True`` (or a non-None ``prefix_cache_bytes`` byte
+    budget) attaches a :class:`PrefixCache` — LCSM/GLA backends only.
+    ``chunk`` overrides the decode granularity (K-token fused chunks where
+    the backend supports them)."""
+    cache = None
+    if prefix_cache or prefix_cache_bytes is not None:
+        cache = PrefixCache(byte_budget=prefix_cache_bytes)
+    return TrafficScheduler(server, policy=policy, queue_limit=queue_limit,
+                            prefix_cache=cache, chunk=chunk)

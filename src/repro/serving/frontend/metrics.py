@@ -1,0 +1,168 @@
+"""Latency telemetry for the serving frontend.
+
+One :class:`ServingMetrics` instance rides along a scheduler run and
+records the request lifecycle (submit -> admit -> first token -> finish)
+plus per-step gauges (queue depth, slot occupancy).  Every event carries
+TWO clocks:
+
+* ``step``  — the scheduler's deterministic virtual clock (decode steps):
+  identical across runs of the same trace, so tests can pin step-based
+  latencies exactly;
+* ``wall``  — ``time.perf_counter()`` seconds: the real latency numbers
+  the benchmark reports (TTFT, per-token latency, tok/s).
+
+``snapshot()`` folds the raw timelines into one structured, JSON-ready
+dict — the record benchmarks/bench_traffic.py emits per series cell.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import asdict, dataclass, field
+
+
+@dataclass
+class RequestTimeline:
+    """Lifecycle timestamps of one request (both clocks; -1 = never)."""
+
+    uid: int
+    submit_step: int = -1
+    submit_wall: float = -1.0
+    admit_step: int = -1
+    admit_wall: float = -1.0
+    first_token_step: int = -1
+    first_token_wall: float = -1.0
+    finish_step: int = -1
+    finish_wall: float = -1.0
+    n_tokens: int = 0
+    cache_hit: bool = False
+    rejected: bool = False
+    token_walls: list[float] = field(default_factory=list)
+
+
+def _percentile(xs: list[float], q: float) -> float:
+    """Nearest-rank percentile without numpy (tiny lists, exact ranks)."""
+    if not xs:
+        return 0.0
+    ys = sorted(xs)
+    i = min(len(ys) - 1, max(0, int(round(q / 100.0 * (len(ys) - 1)))))
+    return ys[i]
+
+
+def _dist(xs: list[float]) -> dict:
+    if not xs:
+        return {"n": 0, "mean": 0.0, "p50": 0.0, "p95": 0.0, "max": 0.0}
+    return {
+        "n": len(xs),
+        "mean": sum(xs) / len(xs),
+        "p50": _percentile(xs, 50),
+        "p95": _percentile(xs, 95),
+        "max": max(xs),
+    }
+
+
+class ServingMetrics:
+    """Event sink for TrafficScheduler (see module docstring)."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._t0 = clock()
+        self.timelines: dict[int, RequestTimeline] = {}
+        self.queue_depths: list[int] = []   # sampled once per scheduler step
+        self.occupancies: list[float] = []  # live slots / total slots
+        self.n_steps = 0
+        self.n_tokens = 0
+        self.n_cache_hits = 0
+        self.n_cache_misses = 0
+
+    def _wall(self) -> float:
+        return self._clock() - self._t0
+
+    def _tl(self, uid: int) -> RequestTimeline:
+        if uid not in self.timelines:
+            self.timelines[uid] = RequestTimeline(uid=uid)
+        return self.timelines[uid]
+
+    # ----------------------------------------------------- lifecycle events
+    def on_submit(self, uid: int, step: int) -> None:
+        tl = self._tl(uid)
+        tl.submit_step, tl.submit_wall = step, self._wall()
+
+    def on_reject(self, uid: int, step: int) -> None:
+        tl = self._tl(uid)
+        if tl.submit_step < 0:
+            tl.submit_step, tl.submit_wall = step, self._wall()
+        tl.rejected = True
+
+    def on_admit(self, uid: int, step: int, cache_hit: bool) -> None:
+        tl = self._tl(uid)
+        tl.admit_step, tl.admit_wall = step, self._wall()
+        tl.cache_hit = cache_hit
+        if cache_hit:
+            self.n_cache_hits += 1
+        else:
+            self.n_cache_misses += 1
+
+    def on_tokens(self, uid: int, n_new: int, step: int) -> None:
+        """``n_new`` tokens just streamed for ``uid`` (first call of a
+        request also stamps its first-token time = TTFT)."""
+        if n_new <= 0:
+            return
+        tl = self._tl(uid)
+        wall = self._wall()
+        if tl.first_token_step < 0:
+            tl.first_token_step, tl.first_token_wall = step, wall
+        tl.token_walls.extend([wall] * n_new)
+        tl.n_tokens += n_new
+        self.n_tokens += n_new
+
+    def on_finish(self, uid: int, step: int) -> None:
+        tl = self._tl(uid)
+        tl.finish_step, tl.finish_wall = step, self._wall()
+
+    def on_step(self, step: int, queue_depth: int, n_live: int,
+                n_slots: int) -> None:
+        self.n_steps = max(self.n_steps, step)
+        self.queue_depths.append(queue_depth)
+        self.occupancies.append(n_live / max(n_slots, 1))
+
+    # -------------------------------------------------------------- rollup
+    def snapshot(self) -> dict:
+        """Structured aggregate view (JSON-ready).  Wall-clock fields vary
+        run to run; every ``*_steps`` field is deterministic for a fixed
+        trace/scheduler config."""
+        tls = list(self.timelines.values())
+        done = [t for t in tls if t.finish_step >= 0]
+        ttft_wall = [t.first_token_wall - t.submit_wall
+                     for t in tls if t.first_token_step >= 0]
+        ttft_steps = [float(t.first_token_step - t.submit_step)
+                      for t in tls if t.first_token_step >= 0]
+        # inter-token gaps within each stream (the "per-token latency" a
+        # streaming client sees between consecutive deliveries)
+        gaps: list[float] = []
+        for t in tls:
+            gaps.extend(b - a for a, b in zip(t.token_walls, t.token_walls[1:]))
+        wall = self._wall()
+        return {
+            "requests": {
+                "submitted": len(tls),
+                "admitted": sum(1 for t in tls if t.admit_step >= 0),
+                "completed": len(done),
+                "rejected": sum(1 for t in tls if t.rejected),
+                "cache_hits": self.n_cache_hits,
+                "cache_misses": self.n_cache_misses,
+            },
+            "ttft_s": _dist(ttft_wall),
+            "ttft_steps": _dist(ttft_steps),
+            "token_gap_s": _dist(gaps),
+            "throughput": {
+                "tokens": self.n_tokens,
+                "wall_s": wall,
+                "tok_s": self.n_tokens / wall if wall > 0 else 0.0,
+            },
+            "queue_depth": _dist([float(q) for q in self.queue_depths]),
+            "slot_occupancy": _dist(self.occupancies),
+            "steps": self.n_steps,
+            "per_request": [asdict(t) | {"token_walls": None} for t in
+                            sorted(tls, key=lambda t: t.uid)],
+        }

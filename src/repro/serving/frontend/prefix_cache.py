@@ -1,0 +1,118 @@
+"""Content-addressed prefix-state cache for LCSM/generic-engine serving.
+
+The whole inference state of a slot after ingesting a prefix is its
+fixed-size buffer rows (unlike attention's growing KV cache, they are
+sliceable and constant-shape — the serving-side payoff of the paper's
+recurrence view).  So a shared system prompt can be prefilled ONCE, its
+post-prefill rows exported (``ScheduleWalker.export_slot_rows``), and
+every later request with the same token prefix admitted by a row copy
+(``import_slot_rows``) — skipping prefill entirely while staying bitwise
+identical to a cold admission: the restored rows ARE the rows the
+prefill wrote, and the server splits its rng identically on both paths.
+
+Keys are content addresses: the SHA-1 of the prompt's int32 token bytes
+(plus the engine's buffer horizon, so caches can't leak across engines
+with different Lbuf — Hyena's length-normalized filters make a different
+Lbuf a different model).  Lookup is EXACT-match over the full prompt:
+restoring a *proper* prefix and re-ingesting the suffix would need an
+incremental prefill whose rounding differs from the one-shot FFT path,
+breaking the bitwise guarantee this cache exists to keep.
+
+Eviction is LRU under a byte budget over the stored rows (host copies —
+``jax.device_get`` — so entries survive the engine donating its state
+buffers in place).
+
+Caveat (same as chunked serving's rng note): the cached first token and
+rows replay exactly for greedy models, whose ``advance`` ignores its rng.
+A model that truly samples its first token would see an equally valid but
+different draw than a cold prefill with the admission's fresh sub-key.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def prefix_key(tokens, horizon: int) -> str:
+    """Content address of a token prefix for an engine with buffer horizon
+    ``horizon`` (= Lbuf)."""
+    arr = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    h = hashlib.sha1()
+    h.update(str(int(horizon)).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+@dataclass
+class CacheEntry:
+    rows: Any          # batch-1 state pytree, host (numpy) leaves
+    first_token: int   # the prefill-advance token to replay
+    plen: int          # prefix length (bookkeeping/debug)
+    nbytes: int
+
+
+class PrefixCache:
+    """LRU map: content address -> post-prefill slot rows + first token.
+
+    ``byte_budget`` bounds the total stored row bytes (None = unbounded).
+    An entry larger than the whole budget is simply not stored.  Hit/miss/
+    eviction counters feed the frontend's metrics snapshot.
+    """
+
+    def __init__(self, byte_budget: int | None = None):
+        self.byte_budget = byte_budget
+        self._entries: OrderedDict[str, CacheEntry] = OrderedDict()
+        self.nbytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.insertions = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
+
+    def lookup(self, key: str) -> CacheEntry | None:
+        """LRU-touching lookup; counts a hit or miss."""
+        e = self._entries.get(key)
+        if e is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return e
+
+    def insert(self, key: str, rows, first_token: int, plen: int) -> bool:
+        """Store exported slot rows under ``key`` (host copies), evicting
+        LRU entries past the byte budget.  Returns False when the entry
+        alone exceeds the budget (nothing stored)."""
+        if key in self._entries:  # refresh recency, keep the existing copy
+            self._entries.move_to_end(key)
+            return True
+        rows = jax.device_get(rows)  # host copy: donation-proof, countable
+        nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(rows))
+        if self.byte_budget is not None and nbytes > self.byte_budget:
+            return False
+        self._entries[key] = CacheEntry(rows=rows, first_token=int(first_token),
+                                        plen=plen, nbytes=nbytes)
+        self.nbytes += nbytes
+        self.insertions += 1
+        while (self.byte_budget is not None
+               and self.nbytes > self.byte_budget and len(self._entries) > 1):
+            _, old = self._entries.popitem(last=False)
+            self.nbytes -= old.nbytes
+            self.evictions += 1
+        return True
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "bytes": self.nbytes,
+                "hits": self.hits, "misses": self.misses,
+                "insertions": self.insertions, "evictions": self.evictions}

@@ -56,9 +56,12 @@ def isolated_decode_via(model, eng, params: Any, prompt,
     advance), then generate from origin = prompt length.  The ONE
     reference-decode implementation every slot-sharing exactness
     comparison is measured against — the family-specific wrappers below
-    and in serving/generic_backend only choose the classes."""
+    and in serving/generic_backend only choose the classes.  The prefill
+    BUCKETS (pow2 prompt padding) because server admissions bucket: a
+    different pad can mean a different static FFT size / λ-power split,
+    i.e. different rounding, and these streams are compared bitwise."""
     a0 = model.embed_tokens(params, jnp.asarray(prompt, jnp.int32)[None])
-    state, t0 = eng.prefill(a0)
+    state, t0 = eng.prefill(a0, bucket=True)
     out = [int(t0[0])]
     if n_tokens > 1:
         _, toks = eng.generate(state, n_tokens - 1, origin=len(prompt))
@@ -146,21 +149,37 @@ class LCSMServer:
         self._rng = jax.random.PRNGKey(seed)
 
     # ------------------------------------------------------------ admission
-    def submit(self, req: Request) -> None:
+    def _check_request(self, req: Request) -> None:
         P = len(req.prompt)
         assert 1 <= P <= max(self.prompt_max, 1), (
             f"prompt length {P} exceeds prompt_max={self.prompt_max}")
         assert 1 <= req.max_new <= self.gen_max, (
             f"max_new {req.max_new} exceeds gen_max={self.gen_max}")
+
+    def submit(self, req: Request) -> None:
+        self._check_request(req)
         self.queue.append(req)
 
-    def _admit(self, slot: int, req: Request, finished: list[Request]) -> None:
+    def _admit(self, slot: int, req: Request, finished: list[Request],
+               rows=None, first_token: int | None = None) -> None:
         P = len(req.prompt)
-        a0 = self.model.embed_tokens(
-            self.params, jnp.asarray(req.prompt, jnp.int32)[None])
+        # The rng is split whether the prefill runs or the rows are restored
+        # from the prefix cache, so the downstream key schedule — and hence
+        # every later sampled token — is identical on the hit and miss paths.
         self._rng, sub = jax.random.split(self._rng)
-        self.state, tok = self.engine.prefill_slot(self.state, slot, a0, sub)
-        tok = int(tok)
+        if rows is None:
+            a0 = self.model.embed_tokens(
+                self.params, jnp.asarray(req.prompt, jnp.int32)[None])
+            self.state, tok = self.engine.prefill_slot(
+                self.state, slot, a0, sub)
+            tok = int(tok)
+        else:
+            # prefix-cache hit: the post-prefill rows are spliced in and the
+            # cached first token replayed — bitwise what prefill_slot would
+            # produce for greedy models (advance ignores its rng; a sampling
+            # model's first token would need `sub`, see frontend docs).
+            self.state = self.engine.import_slot_rows(self.state, slot, rows)
+            tok = int(first_token)
         req.out.append(tok)
         if tok == req.eos_id or len(req.out) >= req.max_new:
             req.done = True          # prompt-only request: done at admission,
@@ -174,6 +193,33 @@ class LCSMServer:
         for slot in range(self.B):
             while self.slots[slot] is None and self.queue:
                 self._admit(slot, self.queue.pop(0), finished)
+
+    # ------------------------------------------- frontend admission surface
+    def admit(self, req: Request, *, rows=None, first_token: int | None = None,
+              finished: list[Request] | None = None) -> int | None:
+        """Admit ``req`` into the first free slot NOW, bypassing the queue —
+        the serving frontend's admission hook (it owns request ordering, so
+        it feeds slots directly instead of going through ``self.queue``).
+
+        With ``rows``/``first_token`` (a prefix-state-cache hit, see
+        serving/frontend/prefix_cache) the slot is restored by a row copy
+        and prefill is skipped entirely.  Returns the slot used — also for
+        requests that complete at admission (their prefilled rows remain
+        exportable) — or None when every slot is busy.  ``finished``
+        collects requests that complete at admission."""
+        self._check_request(req)
+        for slot in range(self.B):
+            if self.slots[slot] is None:
+                self._admit(slot, req, [] if finished is None else finished,
+                            rows=rows, first_token=first_token)
+                return slot
+        return None
+
+    def export_slot(self, slot: int):
+        """Snapshot slot ``slot``'s full engine rows (a fresh batch-1 state
+        pytree, immune to later donation) — what the prefix cache stores
+        right after a cache-miss admission."""
+        return self.engine.export_slot_rows(self.state, slot)
 
     # ----------------------------------------------------------------- step
     def step(self) -> list[Request]:

@@ -24,7 +24,8 @@ def _bench_files():
 def test_committed_bench_records_exist():
     names = {os.path.basename(p) for p in _bench_files()}
     assert {"BENCH_decode.json", "BENCH_serving.json",
-            "BENCH_sharded.json", "BENCH_generic.json"} <= names, names
+            "BENCH_sharded.json", "BENCH_generic.json",
+            "BENCH_traffic.json"} <= names, names
 
 
 @pytest.mark.parametrize("path", _bench_files(), ids=os.path.basename)
@@ -61,6 +62,28 @@ def test_generic_bench_covers_both_modes():
     assert len({c["chunk_K"] for c in rec["series"]
                 if c["mode"] == "flash"}) >= 2
     assert rec["config"]["streams_identical_across_modes"] is True
+
+
+def test_traffic_bench_covers_cache_sweep_with_telemetry():
+    """Acceptance: BENCH_traffic.json reports an open-loop streamed run —
+    latency telemetry per cell (TTFT, queue depth, occupancy) over >= 2
+    prefix-cache hit fractions with cache on AND off, measured on streams
+    verified identical with and without the cache."""
+    path = os.path.join(BENCH_DIR, "BENCH_traffic.json")
+    with open(path) as f:
+        rec = json.load(f)
+    assert rec["config"]["streams_identical_with_cache"] is True
+    assert len(rec["config"]["hit_fracs"]) >= 2
+    assert {c["cache"] for c in rec["series"]} == {True, False}
+    assert len({c["hit_frac"] for c in rec["series"]}) >= 2
+    for cell in rec["series"]:
+        for key in ("ttft_mean_s", "ttft_p95_s", "token_gap_mean_s",
+                    "queue_depth_mean", "slot_occupancy_mean", "cache_hits"):
+            assert key in cell, f"series cell missing {key!r}"
+        assert cell["ttft_mean_s"] > 0
+    # a cache-on cell at a nonzero hit fraction must actually hit
+    assert any(c["cache"] and c["hit_frac"] > 0 and c["cache_hits"] > 0
+               for c in rec["series"])
 
 
 def test_sharded_bench_covers_multiple_device_counts():

@@ -1,0 +1,416 @@
+"""Serving frontend: traffic scheduler, streaming delivery, prefix-state
+cache, latency telemetry — plus the pow2 admission-prefill buckets.
+
+The exactness bars:
+
+* prefix-cache-hit streams are BITWISE identical to cold-prefill streams
+  (LCSM and GLA, per-step and chunked) — a hit restores the exact rows
+  the cold prefill would have written, and the server's rng schedule is
+  split identically on both paths;
+* restoring rows into a slot disturbs no other in-flight stream;
+* the scheduler is deterministic on its virtual clock: same trace, same
+  config -> same admissions, streams, and step-based metrics;
+* admission prefill buckets prompt lengths to pow2, so the prefill jit
+  cache holds O(log prompt_max) programs over a mixed-length workload.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.hyena import HyenaLCSM
+from repro.serving import Request, make_server
+from repro.serving import generic_backend
+from repro.serving.frontend import (PrefixCache, ServingMetrics,
+                                    TrafficRequest, TrafficScheduler,
+                                    poisson_trace, prefix_key)
+from repro.serving.lcsm_backend import isolated_decode
+
+PROMPT_MAX, GEN_MAX = 8, 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("hyena").smoke(), name="hyena-fe",
+                              n_layers=4, d_model=32, d_ff=64, vocab=128)
+    params = HyenaLCSM(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def gla_setup():
+    from repro.models.gla import GLALM
+
+    cfg = dataclasses.replace(get_config("gla").smoke(), name="gla-fe",
+                              n_layers=2, d_model=32, d_ff=64, vocab=128,
+                              gla_dk=8, gla_dv=32)
+    params = GLALM(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _server(cfg, params, n_slots=2, **kw):
+    return make_server(cfg, params, n_slots=n_slots, prompt_max=PROMPT_MAX,
+                       gen_max=GEN_MAX, **kw)
+
+
+def _trace(vocab, n=7, hit_frac=0.6, seed=3, rate=0.7, gen_max=10):
+    return poisson_trace(vocab, n, rate=rate, prompt_max=PROMPT_MAX,
+                         gen_max=gen_max, hit_frac=hit_frac, seed=seed)
+
+
+def _streams(trace):
+    return {tr.req.uid: tuple(tr.req.out) for tr in trace}
+
+
+# ------------------------------------------------ prefix-cache bitwise bars
+@pytest.mark.parametrize("family,chunk", [
+    ("lcsm", None), ("lcsm", 4), ("gla", None), ("gla", 4)])
+def test_cache_hit_streams_bitwise_identical_to_cold(setup, gla_setup,
+                                                     family, chunk):
+    """Same trace served twice — prefix cache off vs on — must emit
+    identical token streams for every request, per-step and chunked, in
+    both engine families.  The cached path skips prefill entirely (hits
+    observed below), so identity means the restored rows + replayed first
+    token are bitwise the cold admission."""
+    cfg, params = setup if family == "lcsm" else gla_setup
+
+    def run(cache):
+        sched = TrafficScheduler(
+            _server(cfg, params), chunk=chunk,
+            prefix_cache=PrefixCache() if cache else None)
+        trace = _trace(cfg.vocab)
+        rep = sched.run(trace)
+        return _streams(trace), rep
+
+    cold, _ = run(False)
+    hot, rep = run(True)
+    assert rep.cache["hits"] >= 1, "trace must actually exercise a hit"
+    assert hot == cold
+
+
+def test_cache_hit_matches_isolated_decode(setup):
+    """Cache-hit streams must equal the per-request isolated batch-1
+    reference — the same bar continuous batching is held to."""
+    cfg, params = setup
+    sched = TrafficScheduler(_server(cfg, params), prefix_cache=PrefixCache())
+    trace = _trace(cfg.vocab)
+    rep = sched.run(trace)
+    assert rep.cache["hits"] >= 1
+    for tr in trace:
+        ref = isolated_decode(cfg, params, tr.req.prompt, len(tr.req.out),
+                              prompt_max=PROMPT_MAX, gen_max=GEN_MAX)
+        assert tr.req.out == ref, f"req {tr.req.uid}"
+
+
+def test_no_cross_slot_contamination_after_restore(setup):
+    """A cache-hit restore into one slot must not perturb the other slots'
+    in-flight streams: serve a trace where a shared-prompt request lands
+    mid-flight next to unique-prompt requests, and check every stream
+    against its isolated reference."""
+    cfg, params = setup
+    rng = np.random.RandomState(7)
+    shared = rng.randint(0, cfg.vocab, (5,)).astype(np.int32)
+    uniq = [rng.randint(0, cfg.vocab, (int(rng.randint(1, PROMPT_MAX + 1)),)
+                        ).astype(np.int32) for _ in range(3)]
+    trace = [
+        TrafficRequest(Request(uid=0, prompt=shared, max_new=4), arrival=0),
+        TrafficRequest(Request(uid=1, prompt=uniq[0], max_new=12), arrival=0),
+        # arrives while uid=1 is mid-flight; restores into uid=0's old slot
+        TrafficRequest(Request(uid=2, prompt=shared, max_new=9), arrival=1),
+        TrafficRequest(Request(uid=3, prompt=uniq[1], max_new=6), arrival=2),
+        TrafficRequest(Request(uid=4, prompt=uniq[2], max_new=8), arrival=3),
+    ]
+    sched = TrafficScheduler(_server(cfg, params), prefix_cache=PrefixCache())
+    rep = sched.run(trace)
+    assert rep.cache["hits"] == 1  # uid=2 restored from uid=0's snapshot
+    for tr in trace:
+        ref = isolated_decode(cfg, params, tr.req.prompt, len(tr.req.out),
+                              prompt_max=PROMPT_MAX, gen_max=GEN_MAX)
+        assert tr.req.out == ref, f"req {tr.req.uid}"
+
+
+def test_cache_eviction_under_tight_byte_budget(setup):
+    """A budget sized for ~one entry must evict LRU: serving three distinct
+    prompts A, B, A keeps at most one resident entry, counts evictions,
+    and still produces correct streams (misses just prefill)."""
+    cfg, params = setup
+    rng = np.random.RandomState(1)
+    pa = rng.randint(0, cfg.vocab, (4,)).astype(np.int32)
+    pb = rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
+    srv = _server(cfg, params, n_slots=1)
+    one_entry = sum(leaf.nbytes for leaf in jax.tree.leaves(
+        srv.engine.init_state())) // srv.B  # bytes of one slot's rows
+    cache = PrefixCache(byte_budget=int(one_entry * 1.5))
+    trace = [TrafficRequest(Request(uid=i, prompt=p, max_new=3), arrival=i)
+             for i, p in enumerate([pa, pb, pa])]
+    sched = TrafficScheduler(srv, prefix_cache=cache)
+    rep = sched.run(trace)
+    assert rep.cache["evictions"] >= 1
+    assert len(cache) == 1
+    assert rep.cache["hits"] == 0  # A was evicted by B before its reuse
+    for tr in trace:
+        ref = isolated_decode(cfg, params, tr.req.prompt, len(tr.req.out),
+                              prompt_max=PROMPT_MAX, gen_max=GEN_MAX)
+        assert tr.req.out == ref
+
+
+def test_oversized_entry_not_stored():
+    cache = PrefixCache(byte_budget=8)
+    ok = cache.insert(prefix_key([1, 2], 16), {"x": np.zeros(64)}, 0, 2)
+    assert not ok and len(cache) == 0
+
+
+# ----------------------------------------------- scheduler traffic behavior
+def test_scheduler_deterministic_virtual_clock(setup):
+    """Two runs of the same trace: identical streams AND identical
+    step-based metrics (wall-clock fields may differ)."""
+    cfg, params = setup
+
+    def run():
+        sched = TrafficScheduler(_server(cfg, params),
+                                 prefix_cache=PrefixCache())
+        trace = _trace(cfg.vocab, seed=11)
+        rep = sched.run(trace)
+        return _streams(trace), rep.metrics
+
+    s1, m1 = run()
+    s2, m2 = run()
+    assert s1 == s2
+    assert m1["ttft_steps"] == m2["ttft_steps"]
+    assert m1["queue_depth"] == m2["queue_depth"]
+    assert m1["slot_occupancy"] == m2["slot_occupancy"]
+    assert m1["steps"] == m2["steps"]
+
+
+def test_streaming_delivery_tokens_and_callbacks(setup):
+    """serve() yields every token exactly once, in order, with monotone
+    delivery steps; on_token callbacks observe the same stream; chunked
+    delivery arrives in bursts but concatenates to the same stream."""
+    cfg, params = setup
+    got: dict[int, list[int]] = {}
+    trace = _trace(cfg.vocab, n=5, seed=4)
+    for tr in trace:
+        tr.on_token = (lambda uid: lambda tok, i: got.setdefault(
+            uid, []).append(tok))(tr.req.uid)
+    sched = TrafficScheduler(_server(cfg, params))
+    events = list(sched.serve(trace))
+    by_uid: dict[int, list] = {}
+    for ev in events:
+        by_uid.setdefault(ev.uid, []).append(ev)
+    for tr in trace:
+        evs = by_uid[tr.req.uid]
+        assert [e.token for e in evs] == tr.req.out == got[tr.req.uid]
+        assert [e.index for e in evs] == list(range(len(tr.req.out)))
+        assert all(a.step <= b.step for a, b in zip(evs, evs[1:]))
+        assert [e.done for e in evs] == [False] * (len(evs) - 1) + [True]
+    # chunked: same streams, delivered in >1-token bursts at chunk steps
+    trace2 = _trace(cfg.vocab, n=5, seed=4)
+    events2 = list(TrafficScheduler(
+        _server(cfg, params), chunk=4).serve(trace2))
+    assert _streams(trace2) == _streams(trace)
+    steps_per_uid = {}
+    for ev in events2:
+        steps_per_uid.setdefault(ev.uid, []).append(ev.step)
+    assert any(len(set(s)) < len(s) for s in steps_per_uid.values()), \
+        "chunked delivery should batch several tokens per step"
+
+
+def test_policy_spf_admits_shortest_prompt_first(setup):
+    """Simultaneous arrivals against one slot: FCFS admits in arrival
+    order, SPF admits the shortest prompt first — visible in admission
+    steps and unchanged per-request streams."""
+    cfg, params = setup
+    rng = np.random.RandomState(5)
+    long_p = rng.randint(0, cfg.vocab, (8,)).astype(np.int32)
+    short_p = rng.randint(0, cfg.vocab, (2,)).astype(np.int32)
+
+    def admit_order(policy):
+        trace = [
+            TrafficRequest(Request(uid=0, prompt=long_p, max_new=4),
+                           arrival=0),
+            TrafficRequest(Request(uid=1, prompt=short_p, max_new=4),
+                           arrival=0),
+        ]
+        sched = TrafficScheduler(_server(cfg, params, n_slots=1),
+                                 policy=policy)
+        rep = sched.run(trace)
+        per = {r["uid"]: r for r in rep.metrics["per_request"]}
+        order = sorted(per, key=lambda u: per[u]["admit_step"])
+        for tr in trace:  # streams themselves must not depend on policy
+            ref = isolated_decode(cfg, params, tr.req.prompt, len(tr.req.out),
+                                  prompt_max=PROMPT_MAX, gen_max=GEN_MAX)
+            assert tr.req.out == ref
+        return order
+
+    assert admit_order("fcfs") == [0, 1]
+    assert admit_order("spf") == [1, 0]
+
+
+def test_queue_limit_backpressure(setup):
+    """queue_limit=1 against a 1-slot server: a burst of 4 simultaneous
+    arrivals fills the slot (1) and the queue (1); the 2 overflow requests
+    are rejected (no tokens), the rest are served to completion.  An
+    arrival may always take a free slot — the bound applies to what must
+    WAIT — so even queue_limit=0 serves exactly the slot count."""
+    cfg, params = setup
+    rng = np.random.RandomState(6)
+
+    def burst():
+        return [TrafficRequest(
+            Request(uid=i,
+                    prompt=rng.randint(0, cfg.vocab, (3,)).astype(np.int32),
+                    max_new=6), arrival=0.0) for i in range(4)]
+
+    trace = burst()
+    rep = TrafficScheduler(_server(cfg, params, n_slots=1),
+                           queue_limit=1).run(trace)
+    assert rep.metrics["requests"]["rejected"] == 2
+    assert rep.metrics["requests"]["completed"] == 2
+    assert len(rep.rejected_uids) == 2
+    for tr in trace:
+        if tr.rejected:
+            assert tr.req.out == []
+        else:
+            assert len(tr.req.out) == tr.req.max_new
+
+    trace0 = burst()
+    rep0 = TrafficScheduler(_server(cfg, params, n_slots=1),
+                            queue_limit=0).run(trace0)
+    assert rep0.metrics["requests"]["completed"] == 1  # serve-or-reject-now
+    assert rep0.metrics["requests"]["rejected"] == 3
+
+
+def test_metrics_snapshot_structure(setup):
+    cfg, params = setup
+    met = ServingMetrics()
+    sched = TrafficScheduler(_server(cfg, params), metrics=met,
+                             prefix_cache=PrefixCache())
+    rep = sched.run(_trace(cfg.vocab, n=4, seed=9))
+    m = rep.metrics
+    assert set(m) >= {"requests", "ttft_s", "ttft_steps", "token_gap_s",
+                      "throughput", "queue_depth", "slot_occupancy", "steps"}
+    r = m["requests"]
+    assert r["submitted"] == 4 and r["completed"] == 4
+    assert r["cache_hits"] + r["cache_misses"] == r["admitted"]
+    assert m["throughput"]["tokens"] == sum(
+        t["n_tokens"] for t in m["per_request"])
+    assert m["throughput"]["tok_s"] > 0
+    assert m["ttft_s"]["n"] == 4 and m["ttft_s"]["mean"] > 0
+    assert 0 < m["slot_occupancy"]["mean"] <= 1
+
+
+def test_frontend_works_with_transformer_backend():
+    """The scheduler runs the transformer ServingEngine too (no prefix
+    cache there — growing KV rows aren't sliceable snapshots)."""
+    import jax.numpy as jnp
+
+    from repro.models.lm import LM
+    from repro.serving import ServingEngine
+
+    cfg = get_config("qwen2.5-3b").smoke()
+    params = LM(cfg).init(jax.random.PRNGKey(0))
+    srv = make_server(cfg, params, n_slots=2, max_seq=32,
+                      cache_dtype=jnp.float32)
+    assert isinstance(srv, ServingEngine)
+    rng = np.random.RandomState(0)
+    trace = [TrafficRequest(
+        Request(uid=i, prompt=rng.randint(0, cfg.vocab, (3,)).astype(np.int32),
+                max_new=4), arrival=float(i)) for i in range(3)]
+    rep = TrafficScheduler(srv).run(trace)
+    assert all(len(tr.req.out) == 4 for tr in trace)
+    assert rep.metrics["requests"]["completed"] == 3
+    with pytest.raises(AssertionError):
+        TrafficScheduler(srv, prefix_cache=PrefixCache())
+    # done-at-admission honors max_new on the submit()/run() path too
+    # (regression: the seed _admit skipped the check and emitted 2 tokens)
+    r1 = Request(uid=9, prompt=rng.randint(0, cfg.vocab, (3,)
+                                           ).astype(np.int32), max_new=1)
+    srv.submit(r1)
+    done = srv.run()
+    assert r1 in done and r1.done and len(r1.out) == 1
+
+
+def test_make_server_builds_frontend(setup):
+    cfg, params = setup
+    sched = _server(cfg, params, frontend=dict(policy="spf",
+                                               prefix_cache=True))
+    assert isinstance(sched, TrafficScheduler)
+    assert sched.policy == "spf" and sched.cache is not None
+    assert sched.server.B == 2
+
+
+# ----------------------------------------- engine-level export/import rows
+@pytest.mark.parametrize("family", ["lcsm", "gla"])
+def test_export_import_roundtrip_across_servers(setup, gla_setup, family):
+    """Rows exported from one server's slot, imported into a DIFFERENT
+    slot of a fresh server, continue the stream exactly (the snapshot is
+    the whole per-slot inference state)."""
+    cfg, params = setup if family == "lcsm" else gla_setup
+    rng = np.random.RandomState(2)
+    prompt = rng.randint(0, cfg.vocab, (5,)).astype(np.int32)
+
+    srv1 = _server(cfg, params, n_slots=2)
+    fin: list[Request] = []
+    r1 = Request(uid=0, prompt=prompt, max_new=GEN_MAX)
+    slot = srv1.admit(r1, finished=fin)
+    rows = srv1.export_slot(slot)
+    rows = jax.device_get(rows)  # survive srv1's donations
+
+    srv1.run()  # finish stream 1 (donates/overwrites srv1 state freely)
+
+    srv2 = _server(cfg, params, n_slots=3)
+    # occupy slot 0 with an unrelated request so the restore lands in a
+    # genuinely different slot index than the snapshot came from
+    other = Request(uid=9, prompt=rng.randint(0, cfg.vocab, (3,)
+                                              ).astype(np.int32),
+                    max_new=GEN_MAX)
+    assert srv2.admit(other) == 0
+    r2 = Request(uid=1, prompt=prompt, max_new=GEN_MAX)
+    slot2 = srv2.admit(r2, rows=rows, first_token=r1.out[0])
+    assert slot2 == 1 != slot
+    srv2.run()
+    assert r2.out == r1.out
+
+
+def test_admit_done_at_admission_keeps_slot_free(setup):
+    cfg, params = setup
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(0, cfg.vocab, (4,)).astype(np.int32)
+    srv = _server(cfg, params, n_slots=1)
+    fin: list[Request] = []
+    r = Request(uid=0, prompt=prompt, max_new=1)
+    slot = srv.admit(r, finished=fin)
+    assert slot == 0 and r.done and fin == [r]
+    assert srv.slots[0] is None  # slot still free, rows still exportable
+    assert srv.export_slot(0) is not None
+
+
+# ------------------------------------------------- pow2 prefill bucketing
+@pytest.mark.parametrize("family", ["lcsm", "gla"])
+def test_admission_prefill_jit_cache_is_log_bounded(setup, gla_setup, family):
+    """Admitting every prompt length 1..PROMPT_MAX must compile at most
+    log2(ceil_pow2(PROMPT_MAX)) + 1 prefill programs (the pow2 buckets),
+    not PROMPT_MAX of them — and the streams must still match their
+    isolated references."""
+    cfg, params = setup if family == "lcsm" else gla_setup
+    srv = _server(cfg, params, n_slots=2)
+    iso = (isolated_decode if family == "lcsm"
+           else generic_backend.isolated_decode)
+    reqs = []
+    rng = np.random.RandomState(0)
+    for P in range(1, PROMPT_MAX + 1):
+        reqs.append(Request(
+            uid=P, prompt=rng.randint(0, cfg.vocab, (P,)).astype(np.int32),
+            max_new=3))
+        srv.submit(reqs[-1])
+    srv.run()
+    bound = PROMPT_MAX.bit_length()  # log2(ceil_pow2(8)) + 1 = 4
+    assert srv.engine._jit_prefill_slot._cache_size() <= bound, (
+        srv.engine._jit_prefill_slot._cache_size(), bound)
+    for r in reqs:
+        ref = iso(cfg, params, r.prompt, len(r.out),
+                  prompt_max=PROMPT_MAX, gen_max=GEN_MAX)
+        assert r.out == ref, f"P={r.uid}"
