@@ -338,13 +338,21 @@ class FlashEngine(ScheduleWalker):
         """Per-slot contribution of a[b, p_b-U+1 .. p_b] to
         b[b, p_b+1 .. p_b+U] (tile side U, static).  Levels batched per
         conv-width group (Algorithm 3); slots with the same unlocked tile
-        side share one τ evaluation.  ``mask`` (B,) bool selects which
-        slots the tile applies to — masked-out rows are left untouched
-        (their τ output is zeroed before the add), which is what lets the
-        continuous-batching server dispatch tiles per (slot, tile-side)
-        while other slots sit at different schedule points.  ``params`` is
-        the walker-threaded model pytree — unused here (LCSM tiles read
-        only the precomputed filters/DFTs, host constants by design)."""
+        side share one τ evaluation.
+
+        GATHERED-ROW-SET body (ScheduleWalker's batched-dispatch contract):
+        ``_slice_rows(a[l], start, ...)`` *gathers* each slot's U input
+        rows with per-slot clamped dynamic slices (masked-out slots may
+        sit anywhere — the clamp makes their gather well-defined junk), τ
+        runs unconditionally on the gathered (B, U, C) sub-batch, and the
+        result *scatters* back through a masked add: ``mask`` (B,) bool
+        zeroes the τ output of deselected slots before the scatter-add,
+        so they are left untouched — bitwise, except that adding +0.0
+        turns a stored -0.0 into +0.0.  No data-dependent control flow
+        anywhere: that is what lets the server apply every possible tile
+        side per step and select by mask.  ``params`` is the
+        walker-threaded model pytree — unused here (LCSM tiles read only
+        the precomputed filters/DFTs, host constants by design)."""
         del params
         a = state.a
         b = list(state.b)
@@ -479,6 +487,7 @@ class FlashEngine(ScheduleWalker):
         plen = a0_prompt.shape[1]
         if bucket:
             a0_prompt, plen = self._bucket_prompt(a0_prompt)
+        self.dispatch_count += 1
         a, b, token = self._jit_prefill(
             self.params, a0_prompt, jnp.asarray(plen, jnp.int32), rng)
         # full prefill builds fresh buffers from a replicated prompt, so the
@@ -506,6 +515,7 @@ class FlashEngine(ScheduleWalker):
         plen = a0_prompt.shape[1]
         if bucket:
             a0_prompt, plen = self._bucket_prompt(a0_prompt)
+        self.dispatch_count += 1
         return self._jit_prefill_slot(
             self.params, state, jnp.asarray(slot, jnp.int32), a0_prompt,
             jnp.asarray(plen, jnp.int32), rng)

@@ -229,13 +229,19 @@ class GenericFlashEngine(ScheduleWalker):
     def _gray_tile(self, params, state: GenericState, p, mask, *, U: int):
         """Per-slot range-algorithm call: contributions of a[b, p_b-U+1 .. p_b]
         to states at positions p_b+1 .. p_b+U (tile side U, static).
-        ``mask`` (B,) bool selects which slots the tile applies to —
-        masked-out rows are left untouched, which is what lets the
-        continuous-batching server dispatch tiles per (slot, tile-side)
-        while other slots sit at different schedule points.  ``params`` is
-        traced (walker-threaded): the mixer weights stay jit arguments
-        instead of being baked into every cached tile/chunk program as
-        constants."""
+
+        GATHERED-ROW-SET body (ScheduleWalker's batched-dispatch contract):
+        ``slice_rows`` *gathers* each slot's U input rows with per-slot
+        clamped dynamic slices, the range algorithm runs unconditionally
+        on the gathered (B, U, D) sub-batch, and ``_apply_tile``
+        *scatters* the contributions back through a clamped window +
+        select under ``mask`` (B,) bool — deselected rows keep their old
+        value EXACTLY (a select, not an add: a generic ``agg`` has no
+        absorbing zero), so an all-False-mask call is a fully bitwise
+        no-op and the batched server dispatch can apply every possible
+        side per step.  ``params`` is traced (walker-threaded): the mixer
+        weights stay jit arguments instead of being baked into every
+        cached tile/chunk program as constants."""
         m = self.model
         s = list(state.s)
         start = p - U + 1  # (B,); >= 0 for any live slot (U | rel step)
@@ -318,6 +324,7 @@ class GenericFlashEngine(ScheduleWalker):
         plen = a0_prompt.shape[1]
         if bucket:
             a0_prompt, plen = self._bucket_prompt(a0_prompt)
+        self.dispatch_count += 1
         a, s, token = self._jit_prefill(
             self.params, a0_prompt, jnp.asarray(plen, jnp.int32), rng)
         return GenericState(a=tuple(a), s=tuple(s)), token
@@ -341,6 +348,7 @@ class GenericFlashEngine(ScheduleWalker):
         plen = a0_prompt.shape[1]
         if bucket:
             a0_prompt, plen = self._bucket_prompt(a0_prompt)
+        self.dispatch_count += 1
         return self._jit_prefill_slot(
             self.params, state, jnp.asarray(slot, jnp.int32), a0_prompt,
             jnp.asarray(plen, jnp.int32), rng)

@@ -19,8 +19,12 @@ half:
   sides static at trace time) into ONE donated XLA computation, cached
   per segment (O(log L) distinct programs for aligned pow2 chunks);
 * **per-slot fused serving chunks** — ``server_chunk`` steps all slots K
-  tokens with one dispatch, branching per possible tile side through
-  masked ``lax.cond``s, deferring the token readback to the chunk end.
+  tokens with one dispatch, applying every possible tile side through a
+  BATCHED gather/scatter formulation (compute-both-outcomes, select by
+  mask — never data-dependent control flow), deferring the token readback
+  to the chunk end.  The retired per-side ``lax.cond`` ladder survives as
+  ``dispatch="reference"`` so the batched path stays pinned against it
+  (tests/test_server_dispatch.py).
 
 An engine subclasses :class:`ScheduleWalker` and provides:
 
@@ -39,7 +43,17 @@ An engine subclasses :class:`ScheduleWalker` and provides:
         slots selected by ``mask`` (B,) bool.  ``params`` is threaded
         (traced) so engines whose tiles read model parameters don't bake
         them into every cached program as constants; engines whose tiles
-        only use derived host constants (the LCSM filters) ignore it
+        only use derived host constants (the LCSM filters) ignore it.
+        GATHERED-ROW-SET CONTRACT (what the batched server dispatch
+        leans on): the body must (a) *gather* each slot's U input rows
+        with clamped per-slot dynamic slices — rows of masked-out slots
+        may sit at arbitrary positions, the slice just clamps — (b)
+        compute contributions for the whole gathered sub-batch
+        unconditionally, and (c) merge them back by masked scatter /
+        select, so a call whose mask is all-False is a (bitwise, up to
+        the sign of a scatter-added zero) no-op.  No body may branch on
+        data — that is what lets the walker retire the per-side
+        ``lax.cond`` ladder
 
   optional methods
     ``_lazy_fill(state, p)`` / ``_eager_push(state, p)``
@@ -156,6 +170,10 @@ class ScheduleWalker:
     Lbuf: int
     strategy: str
     chunk_size: int
+    # server-tile dispatch mode: "batched" (gather/scatter mask-select, the
+    # hot path) or "reference" (the retired per-side lax.cond ladder, kept
+    # so the batched path can be pinned bitwise against it).
+    server_dispatch: str = "batched"
 
     def _init_schedule_dispatch(self) -> None:
         """Build the jitted dispatch caches.  Every step function donates
@@ -168,11 +186,21 @@ class ScheduleWalker:
         if hasattr(self, "_eager_push"):
             self._jit_eager = jax.jit(self._eager_push, donate_argnums=(0,))
         # Fused-chunk caches: decode_chunk per schedule segment (lockstep),
-        # server_chunk per K (per-slot traced schedules).
+        # server_chunk per (K, dispatch mode) (per-slot traced schedules).
         self._jit_chunk: dict[tuple[int, ...], Callable] = {}
-        self._jit_server_chunk: dict[int, Callable] = {}
+        self._jit_server_chunk: dict[tuple[int, str], Callable] = {}
+        # One fused per-step server-tile program: every possible side,
+        # mask-selected, in ONE dispatch (the per-step analogue of the
+        # batched server chunk; LCSMServer.step drives it).
+        self._jit_tiles = jax.jit(self._server_tiles_batched,
+                                  donate_argnums=(1,))
         self._jit_import = jax.jit(self._import_slot_rows_impl,
                                    donate_argnums=(0,))
+        # Host-visible dispatch accounting: one count per XLA execution
+        # launched through the step/chunk surface below (benchmarks report
+        # dispatches per token/chunk — the quantity the batched-dispatch
+        # refactor exists to shrink).
+        self.dispatch_count = 0
 
     def _shard_state(self, state):
         """Pin a sharding on a TRACED state (default: identity).  Mesh-aware
@@ -296,69 +324,135 @@ class ScheduleWalker:
                 functools.partial(self._decode_chunk_impl, sides=sides),
                 donate_argnums=(1,))
             self._jit_chunk[sides] = fn
+        self.dispatch_count += 1
         return fn(self.params, state, as_pos_vec(p0, self.batch), rng)
 
-    def _server_chunk_impl(self, params, state, p0, origin, live, rng, *,
-                           K: int):
-        """K fused continuous-batching steps with PER-SLOT schedules.
-
-        Unlike ``_decode_chunk_impl`` the tile side is data-dependent here —
-        each slot sits at its own point of its own schedule — so every step
-        branches over the log2(L) possible sides: for each side U a masked
-        ``lax.cond`` applies the side-U tile to exactly the slots whose
-        relative step unlocks U this step (and skips the computation
-        entirely when no slot does, preserving the Algorithm-2 work bound).
-        Slots are stepped blindly for K tokens; the host truncates at
-        EOS/max_new after readback — overshoot steps only touch the
-        overshooting slot's own rows, which the next admission prefill
-        rewrites wholesale.  p0/origin: (B,) int32; live: (B,) bool.
-
-        Branch list: sides with 2U <= Lbuf — every tile a *live* slot can
-        unlock (its relative step stays < gen_max, so U <= ceil_pow2(gen_max)/2
-        and the buffer holds rho[0..2U-1]).  A blind overshoot step past
-        retirement may compute a larger lowbit; no branch matches and the
+    # ------------------------------------------------ server tile dispatch
+    def _server_sides(self) -> list[int]:
+        """Every tile side a *live* slot can unlock: sides with 2U <= Lbuf
+        (its relative step stays < gen_max, so U <= ceil_pow2(gen_max)/2 and
+        the buffer holds rho[0..2U-1]).  A blind overshoot step past
+        retirement may compute a larger lowbit; no side matches and the
         junk tile is simply skipped."""
         sides = []
         u = 1
         while 2 * u <= self.Lbuf:
             sides.append(u)
             u *= 2
+        return sides
 
-        def masked_tiles(state, pv):
-            rel = pv + 1 - origin          # 1-based schedule step done
-            low = rel & (-rel)             # per-slot unlocked tile side
-            writable = pv + 1 < self.Lbuf  # full-spill guard (clip
-            for U in sides:                # handles partial spill)
-                m = live & writable & (low == U)
-                state = jax.lax.cond(
-                    jnp.any(m),
-                    functools.partial(self._gray_tile, params,
-                                      p=pv, mask=m, U=U),
-                    lambda st: st,
-                    state)
-            return state
+    def _side_masks(self, pv, origin, live):
+        """Per-slot unlocked tile side + the slots allowed to apply one."""
+        rel = pv + 1 - origin          # 1-based schedule step done
+        low = rel & (-rel)             # per-slot unlocked tile side
+        writable = pv + 1 < self.Lbuf  # full-spill guard (clip
+        return low, live & writable    # handles partial spill)
 
+    def _server_tiles_batched(self, params, state, pv, origin, live):
+        """BATCHED gather/scatter tile dispatch — the serving hot path.
+
+        Each live slot unlocks exactly one side per step, so the batch
+        partitions across the log2(L) possible sides.  For every side U the
+        side-U tile body runs UNCONDITIONALLY on the whole batch: it
+        gathers each slot's U input rows (per-slot clamped dynamic slices —
+        the gather), computes contributions for the gathered sub-batch in
+        one call, and scatters them back under the side's slot mask
+        (masked scatter-add / select — the scatter).  Compute both
+        outcomes, select by mask: NO data-dependent control flow, so no
+        ``lax.cond`` predicate has to be computed, replicated across the
+        mesh, and branched on before any tile work can start — under
+        GSPMD every cond predicate is a cross-device sync, which is
+        exactly what made the sharded server anti-scale.
+
+        Identity contract vs the reference ladder: a side whose mask is
+        all-False adds a zeroed contribution instead of skipping, which is
+        bitwise invisible except that scatter-adding +0.0 maps a stored
+        -0.0 to +0.0 (token streams are unaffected; states compare equal
+        under IEEE ==).  tests/test_server_dispatch.py pins both."""
+        low, ok = self._side_masks(pv, origin, live)
+        for U in self._server_sides():
+            state = self._gray_tile(params, state, pv, ok & (low == U), U=U)
+        return state
+
+    def _server_tiles_reference(self, params, state, pv, origin, live):
+        """The RETIRED per-side ``lax.cond`` ladder (PR 2–5 hot loop), kept
+        verbatim as the exactness reference for the batched dispatch: for
+        each side U a masked ``lax.cond`` applies the side-U tile to
+        exactly the slots whose relative step unlocks U this step, and
+        skips the computation entirely when no slot does.  Correct, but a
+        log2(L) chain of data-dependent branches per step — every
+        predicate is a host/mesh sync point — which is why it anti-scaled
+        with device count (BENCH_sharded) and was replaced."""
+        low, ok = self._side_masks(pv, origin, live)
+        for U in self._server_sides():
+            m = ok & (low == U)
+            state = jax.lax.cond(
+                jnp.any(m),
+                functools.partial(self._gray_tile, params,
+                                  p=pv, mask=m, U=U),
+                lambda st: st,
+                state)
+        return state
+
+    def _server_tiles(self, params, state, pv, origin, live, *,
+                      dispatch: str):
+        assert dispatch in ("batched", "reference"), dispatch
+        fn = (self._server_tiles_batched if dispatch == "batched"
+              else self._server_tiles_reference)
+        return fn(params, state, pv, origin, live)
+
+    def tiles_step(self, state, p, origin, live):
+        """Apply every tile the slots' schedules unlock at per-slot
+        positions ``p`` in ONE fused dispatch (batched mask-select over all
+        sides) — the per-step server path's replacement for dispatching
+        each side group separately.  ``origin``/``live`` as in
+        ``server_chunk``.  The input state is donated."""
+        self.dispatch_count += 1
+        return self._jit_tiles(
+            self.params, state, as_pos_vec(p, self.batch),
+            as_pos_vec(origin, self.batch), jnp.asarray(live, bool))
+
+    def _server_chunk_impl(self, params, state, p0, origin, live, rng, *,
+                           K: int, dispatch: str):
+        """K fused continuous-batching steps with PER-SLOT schedules.
+
+        Unlike ``_decode_chunk_impl`` the tile side is data-dependent here —
+        each slot sits at its own point of its own schedule — so every step
+        applies all log2(L) possible sides through the batched
+        gather/scatter dispatch (``dispatch="batched"``; the retired cond
+        ladder under ``"reference"``).  Slots are stepped blindly for K
+        tokens; the host truncates at EOS/max_new after readback —
+        overshoot steps only touch the overshooting slot's own rows, which
+        the next admission prefill rewrites wholesale.  p0/origin: (B,)
+        int32; live: (B,) bool."""
         toks = []
         for i in range(K):
             pv = p0 + i
             tile = None
             if self.strategy == "flash":
-                tile = lambda st, pv=pv: masked_tiles(st, pv)
+                tile = lambda st, pv=pv: self._server_tiles(
+                    params, st, pv, origin, live, dispatch=dispatch)
             state, tok, rng = self._schedule_step(
                 params, state, pv, rng, tile, jitted=False)
             toks.append(tok)
         return state, jnp.stack(toks, axis=1), rng
 
-    def server_chunk(self, state, p0, origin, live, rng, K: int):
+    def server_chunk(self, state, p0, origin, live, rng, K: int,
+                     dispatch: str | None = None):
         """Fused K-step advance for the continuous-batching server: per-slot
         positions/origins, one dispatch, one deferred token readback.
-        Returns (state, tokens (B, K), advanced rng); state is donated."""
-        fn = self._jit_server_chunk.get(K)
+        ``dispatch`` picks the tile formulation (default: the engine's
+        ``server_dispatch``, normally "batched").  Returns (state, tokens
+        (B, K), advanced rng); state is donated."""
+        dispatch = self.server_dispatch if dispatch is None else dispatch
+        fn = self._jit_server_chunk.get((K, dispatch))
         if fn is None:
             fn = jax.jit(
-                functools.partial(self._server_chunk_impl, K=K),
+                functools.partial(self._server_chunk_impl, K=K,
+                                  dispatch=dispatch),
                 donate_argnums=(1,))
-            self._jit_server_chunk[K] = fn
+            self._jit_server_chunk[(K, dispatch)] = fn
+        self.dispatch_count += 1
         return fn(self.params, state, as_pos_vec(p0, self.batch),
                   as_pos_vec(origin, self.batch),
                   jnp.asarray(live, bool), rng)
@@ -412,6 +506,7 @@ class ScheduleWalker:
         ``prefill_slot`` reproduces that admission BITWISE: the restored
         slot is indistinguishable from one that just ran the prefill.
         The input state is donated.  Returns the new state."""
+        self.dispatch_count += 1
         return self._jit_import(state, jnp.asarray(slot, jnp.int32), rows)
 
     def _import_slot_rows_impl(self, state, slot, rows):
@@ -429,12 +524,15 @@ class ScheduleWalker:
     def red_step(self, state, p, rng):
         """Finalize per-slot positions p ((B,) or scalar) and sample every
         slot; returns (state, tokens (B,))."""
+        self.dispatch_count += 1
         return self._jit_red(self.params, state, as_pos_vec(p, self.batch), rng)
 
     def lazy_step(self, state, p):
+        self.dispatch_count += 1
         return self._jit_lazy(state, as_pos_vec(p, self.batch))
 
     def eager_step(self, state, p):
+        self.dispatch_count += 1
         return self._jit_eager(state, as_pos_vec(p, self.batch))
 
     def gray_step(self, state, p, mask, U: int):
@@ -448,4 +546,5 @@ class ScheduleWalker:
             self._jit_gray[U] = fn
         mask = (jnp.ones((self.batch,), bool) if mask is None
                 else jnp.asarray(mask))
+        self.dispatch_count += 1
         return fn(self.params, state, as_pos_vec(p, self.batch), mask)

@@ -66,6 +66,10 @@ def main():
                     help="shard slots over a 'data' mesh axis of this size")
     ap.add_argument("--mesh-model", type=int, default=1,
                     help="shard channels over a 'model' mesh axis")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="run N independent per-device engine replicas with "
+                         "frontend request routing (data parallelism, no "
+                         "collectives); mutually exclusive with --mesh-*")
     ap.add_argument("--traffic", action="store_true",
                     help="serve via the frontend scheduler (timed arrivals, "
                          "streaming, telemetry) instead of submit-then-run")
@@ -87,6 +91,20 @@ def main():
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
+
+    if args.replicas > 1 and (args.mesh_data or args.mesh_model > 1):
+        raise ValueError(
+            f"--replicas {args.replicas} cannot be combined with "
+            f"--mesh-data/--mesh-model (got data={args.mesh_data}, "
+            f"model={args.mesh_model}): replica mode runs N independent "
+            "single-device engines — there is no mesh to shard over.  "
+            "Pick ONE multi-device layout: --replicas N (frontend data "
+            "parallelism) or --mesh-data/--mesh-model (one sharded engine).")
+    if args.replicas > len(jax.devices()):
+        raise ValueError(
+            f"--replicas {args.replicas} exceeds the {len(jax.devices())} "
+            "visible device(s); on a CPU host force more with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N")
 
     mesh = None
     if args.mesh_data or args.mesh_model > 1:
@@ -111,7 +129,13 @@ def main():
         extra = {"cache_dtype": jnp.float32}
     srv = make_server(cfg, params, n_slots=args.slots, max_seq=args.max_seq,
                       prompt_max=args.prompt_len, gen_max=args.max_new,
-                      mesh=mesh, **extra)
+                      mesh=mesh,
+                      replicas=args.replicas if args.replicas > 1 else None,
+                      **extra)
+    if args.replicas > 1:
+        print(f"{args.replicas} engine replicas over "
+              f"{jax.devices()[0].platform} devices "
+              f"({args.slots} slots each)")
 
     if args.traffic:
         import json
@@ -133,8 +157,11 @@ def main():
         for ev in sched.serve(trace):  # streaming consumption
             print(f"  t={ev.step:6.1f} req {ev.uid} tok[{ev.index}]="
                   f"{ev.token}{'  <done>' if ev.done else ''}")
-        snap = sched.metrics.snapshot()
-        snap.pop("per_request")
+        if hasattr(sched, "metrics"):
+            snap = sched.metrics.snapshot()
+            snap.pop("per_request")
+        else:  # replica-routing scheduler: merged per-replica snapshots
+            snap = sched.metrics_snapshot()
         if cache is not None:
             snap["prefix_cache"] = cache.stats()
         print(json.dumps(snap, indent=1, default=float))

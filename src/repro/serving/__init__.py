@@ -25,7 +25,8 @@ from repro.serving.lcsm_backend import LCSMServer  # noqa: F401
 
 def make_server(cfg: ModelConfig, params: Any, *, n_slots: int,
                 max_seq: int = 64, prompt_max: int = 16,
-                gen_max: int = 32, frontend: dict | None = None, **kw):
+                gen_max: int = 32, frontend: dict | None = None,
+                replicas: int | None = None, **kw):
     """Build the serving backend for ``cfg``.
 
     ``max_seq`` sizes transformer caches; ``prompt_max``/``gen_max`` size
@@ -37,16 +38,28 @@ def make_server(cfg: ModelConfig, params: Any, *, n_slots: int,
     mesh's 'data' axis and channels/decode state over 'model' — see
     launch/mesh.make_serving_mesh and README "Multi-device serving".
 
+    ``replicas=N`` (> 1) returns a
+    :class:`~repro.serving.frontend.replicas.ReplicaSet` instead: N
+    independent single-device servers (one per visible device, ``n_slots``
+    slots EACH) with frontend-level request routing — data parallelism
+    with no collectives.  Mutually exclusive with ``mesh=``.
+
     ``frontend=`` (a kwargs dict for
     ``repro.serving.frontend.make_frontend``: ``policy=``,
     ``queue_limit=``, ``prefix_cache=``/``prefix_cache_bytes=``,
     ``chunk=``) wraps the backend in a traffic-serving
-    :class:`~repro.serving.frontend.TrafficScheduler` — timed arrivals,
-    streaming token delivery, prefix-state caching (LCSM/GLA only), and
-    latency telemetry — and returns the scheduler (the raw server stays
-    reachable as ``scheduler.server``).  See README "Serving frontend".
+    :class:`~repro.serving.frontend.TrafficScheduler` (or the replica-
+    routing scheduler for a ReplicaSet) — timed arrivals, streaming token
+    delivery, prefix-state caching (LCSM/GLA only), and latency telemetry
+    — and returns the scheduler (the raw server stays reachable as
+    ``scheduler.server``).  See README "Serving frontend".
     """
-    if cfg.family == "lcsm":
+    if replicas is not None and replicas > 1:
+        from repro.serving.frontend.replicas import ReplicaSet
+        srv = ReplicaSet(cfg, params, replicas=replicas, n_slots=n_slots,
+                         max_seq=max_seq, prompt_max=prompt_max,
+                         gen_max=gen_max, **kw)
+    elif cfg.family == "lcsm":
         srv = LCSMServer(cfg, params, n_slots=n_slots,
                          prompt_max=prompt_max, gen_max=gen_max, **kw)
     elif cfg.family == "gla":

@@ -32,15 +32,26 @@ def make_frontend(server, *, policy: str = "fcfs",
                   queue_limit: int | None = None,
                   prefix_cache_bytes: int | None = None,
                   prefix_cache: bool = False,
-                  chunk: int | None = None) -> TrafficScheduler:
-    """Wrap a slot server in a TrafficScheduler.
+                  prefix_cache_spill_bytes: int | None = None,
+                  chunk: int | None = None):
+    """Wrap a slot server in a TrafficScheduler — or a ReplicaSet in the
+    replica-routing :class:`~repro.serving.frontend.replicas.ReplicaScheduler`
+    (same ``serve()/run()`` surface, per-replica admission).
 
     ``prefix_cache=True`` (or a non-None ``prefix_cache_bytes`` byte
-    budget) attaches a :class:`PrefixCache` — LCSM/GLA backends only.
-    ``chunk`` overrides the decode granularity (K-token fused chunks where
-    the backend supports them)."""
+    budget) attaches a :class:`PrefixCache` — LCSM/GLA backends only;
+    entries stay device-resident, ``prefix_cache_spill_bytes`` adds the
+    host spill tier for evictions.  ``chunk`` overrides the decode
+    granularity (K-token fused chunks where the backend supports them)."""
     cache = None
-    if prefix_cache or prefix_cache_bytes is not None:
-        cache = PrefixCache(byte_budget=prefix_cache_bytes)
+    if (prefix_cache or prefix_cache_bytes is not None
+            or prefix_cache_spill_bytes is not None):
+        cache = PrefixCache(byte_budget=prefix_cache_bytes,
+                            spill_budget=prefix_cache_spill_bytes)
+    from repro.serving.frontend.replicas import ReplicaScheduler, ReplicaSet
+    if isinstance(server, ReplicaSet):
+        return ReplicaScheduler(server, policy=policy,
+                                queue_limit=queue_limit,
+                                prefix_cache=cache, chunk=chunk)
     return TrafficScheduler(server, policy=policy, queue_limit=queue_limit,
                             prefix_cache=cache, chunk=chunk)

@@ -18,9 +18,16 @@ restoring a *proper* prefix and re-ingesting the suffix would need an
 incremental prefill whose rounding differs from the one-shot FFT path,
 breaking the bitwise guarantee this cache exists to keep.
 
-Eviction is LRU under a byte budget over the stored rows (host copies —
-``jax.device_get`` — so entries survive the engine donating its state
-buffers in place).
+Storage is DEVICE-RESIDENT: ``export_slot_rows`` already returns fresh
+buffers (a gather, not a view), so the snapshot survives the engine
+donating its state in place WITHOUT a host copy — the per-miss
+``jax.device_get`` an earlier revision paid here serialized every
+admission on a device sync and made the cache a 2.7× slowdown at 0% hit
+rate (BENCH_traffic).  Eviction is LRU under a byte budget over the
+stored rows.  An optional second tier (``spill_budget``) catches evicted
+entries on the HOST — ``device_get`` happens only when eviction forces
+the spill, never on the admission path — and host-tier hits transfer
+back on restore.
 
 Caveat (same as chunked serving's rng note): the cached first token and
 rows replay exactly for greedy models, whose ``advance`` ignores its rng.
@@ -51,7 +58,8 @@ def prefix_key(tokens, horizon: int) -> str:
 
 @dataclass
 class CacheEntry:
-    rows: Any          # batch-1 state pytree, host (numpy) leaves
+    rows: Any          # batch-1 state pytree: device arrays (device tier)
+                       # or numpy (host spill tier)
     first_token: int   # the prefill-advance token to replay
     plen: int          # prefix length (bookkeeping/debug)
     nbytes: int
@@ -60,44 +68,70 @@ class CacheEntry:
 class PrefixCache:
     """LRU map: content address -> post-prefill slot rows + first token.
 
-    ``byte_budget`` bounds the total stored row bytes (None = unbounded).
-    An entry larger than the whole budget is simply not stored.  Hit/miss/
-    eviction counters feed the frontend's metrics snapshot.
+    Entries stay DEVICE-RESIDENT (the exported rows are stored as-is: no
+    host copy, no device sync on the admission path).  ``byte_budget``
+    bounds the total stored row bytes (None = unbounded); an entry larger
+    than the whole budget is simply not stored.  ``spill_budget`` (None =
+    no spill tier) adds a host-memory second tier: entries evicted from
+    the device tier are ``jax.device_get``-spilled instead of dropped —
+    the ONLY place this cache ever syncs — and a spill-tier hit restores
+    through the ordinary import path (jax puts the host rows back on
+    device).  Hit/miss/eviction/spill counters feed the frontend's
+    metrics snapshot.
     """
 
-    def __init__(self, byte_budget: int | None = None):
+    def __init__(self, byte_budget: int | None = None,
+                 spill_budget: int | None = None):
         self.byte_budget = byte_budget
+        self.spill_budget = spill_budget
         self._entries: OrderedDict[str, CacheEntry] = OrderedDict()
+        self._spill: OrderedDict[str, CacheEntry] = OrderedDict()
         self.nbytes = 0
+        self.spill_nbytes = 0
         self.hits = 0
+        self.spill_hits = 0
         self.misses = 0
         self.insertions = 0
         self.evictions = 0
+        self.spills = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def __contains__(self, key: str) -> bool:
-        return key in self._entries
+        return key in self._entries or key in self._spill
 
     def lookup(self, key: str) -> CacheEntry | None:
-        """LRU-touching lookup; counts a hit or miss."""
+        """LRU-touching lookup; counts a hit or miss.  Checks the device
+        tier first, then the host spill tier (a spill hit stays in its
+        tier, bumped to most-recently-used — the import path moves the
+        rows back to device where they are needed)."""
         e = self._entries.get(key)
-        if e is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.hits += 1
-        return e
+        if e is not None:
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return e
+        e = self._spill.get(key)
+        if e is not None:
+            self._spill.move_to_end(key)
+            self.hits += 1
+            self.spill_hits += 1
+            return e
+        self.misses += 1
+        return None
 
     def insert(self, key: str, rows, first_token: int, plen: int) -> bool:
-        """Store exported slot rows under ``key`` (host copies), evicting
-        LRU entries past the byte budget.  Returns False when the entry
-        alone exceeds the budget (nothing stored)."""
-        if key in self._entries:  # refresh recency, keep the existing copy
-            self._entries.move_to_end(key)
+        """Store exported slot rows under ``key`` AS-IS (device-resident:
+        ``export_slot_rows`` returns fresh buffers, so there is no
+        donation hazard and no host sync on this path), evicting LRU
+        entries past the byte budget.  Evictions spill to the host tier
+        when ``spill_budget`` is set, else drop.  Returns False when the
+        entry alone exceeds the budget (nothing stored)."""
+        if key in self._entries or key in self._spill:
+            # refresh recency, keep the existing copy
+            (self._entries if key in self._entries
+             else self._spill).move_to_end(key)
             return True
-        rows = jax.device_get(rows)  # host copy: donation-proof, countable
         nbytes = sum(leaf.nbytes for leaf in jax.tree.leaves(rows))
         if self.byte_budget is not None and nbytes > self.byte_budget:
             return False
@@ -107,12 +141,33 @@ class PrefixCache:
         self.insertions += 1
         while (self.byte_budget is not None
                and self.nbytes > self.byte_budget and len(self._entries) > 1):
-            _, old = self._entries.popitem(last=False)
+            old_key, old = self._entries.popitem(last=False)
             self.nbytes -= old.nbytes
             self.evictions += 1
+            if self.spill_budget is not None:
+                self._spill_entry(old_key, old)
         return True
+
+    def _spill_entry(self, key: str, e: CacheEntry) -> None:
+        """Evicted from the device tier: materialize on host (the one
+        forced ``device_get``) and LRU-bound the spill tier by its own
+        byte budget."""
+        host = CacheEntry(rows=jax.device_get(e.rows),
+                          first_token=e.first_token, plen=e.plen,
+                          nbytes=e.nbytes)
+        if host.nbytes > self.spill_budget:
+            return
+        self._spill[key] = host
+        self.spill_nbytes += host.nbytes
+        self.spills += 1
+        while self.spill_nbytes > self.spill_budget and len(self._spill) > 1:
+            _, old = self._spill.popitem(last=False)
+            self.spill_nbytes -= old.nbytes
 
     def stats(self) -> dict:
         return {"entries": len(self._entries), "bytes": self.nbytes,
-                "hits": self.hits, "misses": self.misses,
-                "insertions": self.insertions, "evictions": self.evictions}
+                "spill_entries": len(self._spill),
+                "spill_bytes": self.spill_nbytes,
+                "hits": self.hits, "spill_hits": self.spill_hits,
+                "misses": self.misses, "insertions": self.insertions,
+                "evictions": self.evictions, "spills": self.spills}

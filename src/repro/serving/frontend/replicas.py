@@ -1,0 +1,244 @@
+"""Replica-parallel serving: data parallelism at the frontend, no
+collectives.
+
+The sharded server (``mesh=``) splits ONE engine's slots across devices —
+every dispatch involves every device, so each program's launch latency is
+paid by the whole fleet and any cross-device sync gates all slots.  The
+replica mode here is the other end of the design space, and it cannot
+lose: ``--replicas N`` builds N fully INDEPENDENT single-device servers
+(params replicated by ``jax.device_put`` onto each device, every jitted
+program compiled for and resident on its own device), and requests are
+routed across them at the frontend.  No collectives, no shared state, no
+cross-device predicates: each replica is exactly the single-device server,
+so per-request greedy streams are bitwise identical to serving the same
+request on one device — replication can only add throughput.
+
+Two driving surfaces:
+
+* :class:`ReplicaSet` — the backend-shaped half: ``submit()`` routes each
+  request to the least-loaded replica (deterministic: ties break by
+  replica index) and ``run()`` drains all replicas with DISPATCH-AHEAD
+  interleaving — every replica's next fused chunk is dispatched (jax
+  async dispatch) before ANY replica's previous chunk is read back, so
+  all devices compute while the host does one round of readbacks.
+
+* :class:`ReplicaScheduler` — the traffic-frontend half (what
+  ``make_frontend`` returns for a ReplicaSet): the trace is split
+  round-robin in arrival order across per-replica
+  :class:`~repro.serving.frontend.scheduler.TrafficScheduler` instances
+  whose ``serve()`` generators are interleaved one virtual-clock tick at
+  a time — streaming delivery, per-replica admission/backpressure, and a
+  merged report.  An optional shared :class:`PrefixCache` is wrapped per
+  replica so a prefix prefilled on replica A restores on replica B (the
+  rows are ``jax.device_put`` across at lookup — the only cross-device
+  traffic in the whole mode).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterator
+
+import jax
+
+from repro.serving.engine import Request
+from repro.serving.frontend.prefix_cache import CacheEntry, PrefixCache
+
+
+class ReplicaSet:
+    """N independent per-device servers behind one ``submit()/run()``
+    surface (module doc).  ``n_slots`` is PER REPLICA (total concurrency
+    is ``replicas * n_slots``); every other kwarg is forwarded to each
+    member's backend constructor."""
+
+    def __init__(self, cfg, params: Any, *, replicas: int,
+                 devices=None, **server_kw):
+        if server_kw.get("mesh") is not None:
+            raise ValueError(
+                "replicas=N and mesh= are mutually exclusive: replica mode "
+                "IS the data-parallel layout (independent per-device "
+                "engines); use one or the other")
+        server_kw.pop("mesh", None)
+        if devices is None:
+            devices = jax.devices()
+        if replicas < 1 or replicas > len(devices):
+            raise ValueError(
+                f"replicas={replicas} needs 1..{len(devices)} of the "
+                f"visible {len(devices)} device(s)")
+        from repro.serving import make_server  # lazy: avoids import cycle
+
+        self.cfg = cfg
+        self.devices = list(devices[:replicas])
+        self.members = []
+        for dev in self.devices:
+            # Commit the (shared, host-built) params onto this replica's
+            # device and construct under default_device so every buffer
+            # and compiled program the member ever creates lives there.
+            p = jax.device_put(params, dev)
+            with jax.default_device(dev):
+                self.members.append(make_server(cfg, p, **server_kw))
+
+    # ------------------------------------------------------------- routing
+    def _load(self, m) -> int:
+        return len(m.queue) + sum(1 for s in m.slots if s is not None)
+
+    def submit(self, req: Request) -> int:
+        """Route to the least-loaded replica (ties: lowest index —
+        deterministic for a fixed submission order).  Returns the replica
+        index chosen."""
+        i = min(range(len(self.members)),
+                key=lambda j: (self._load(self.members[j]), j))
+        self.members[i].submit(req)
+        return i
+
+    # ------------------------------------------------------------- serving
+    @property
+    def chunk(self):
+        return self.members[0].chunk
+
+    @property
+    def dispatch_count(self) -> int:
+        return sum(m.engine.dispatch_count for m in self.members)
+
+    def run(self, chunk: int | None = None, *,
+            pipeline: bool = True) -> list[Request]:
+        """Drain every replica.  Chunked runs interleave DISPATCH-AHEAD
+        across replicas: one round dispatches the next fused chunk on
+        every replica that has work (async — the host does not wait), the
+        next loop iteration collects each replica's PREVIOUS chunk, so all
+        N devices decode concurrently while the host sweeps readbacks.
+        Per-step runs interleave ``step()`` round-robin."""
+        K = self.chunk if chunk is None else chunk
+        done: list[Request] = []
+        if K is None or K <= 1 or not pipeline:
+            # round-robin per-step (or strictly alternating chunk) drain
+            busy = True
+            while busy:
+                busy = False
+                for m in self.members:
+                    if m.queue or any(s is not None for s in m.slots):
+                        done.extend(m.step() if K is None or K <= 1
+                                    else m.step_chunk(K))
+                        busy = True
+            return done
+        pends: list[tuple | None] = [None] * len(self.members)
+        while True:
+            nxts: list[tuple | None] = []
+            for m in self.members:           # dispatch round: all async
+                fin, nxt = m.dispatch_chunk(K)
+                done.extend(fin)
+                nxts.append(nxt)
+            for m, pend in zip(self.members, pends):  # collect round
+                if pend is not None:
+                    done.extend(m.collect_chunk(pend))
+            pends = nxts
+            if all(p is None for p in pends):
+                return done
+
+
+class _ReplicaCacheView:
+    """One replica's view of a shared :class:`PrefixCache`: lookups whose
+    rows live on another replica's device are ``jax.device_put`` across
+    before the member imports them (mixed committed devices would
+    otherwise fault inside the jitted row splice).  Inserts pass through —
+    the stored rows stay resident wherever the exporting replica put
+    them."""
+
+    def __init__(self, cache: PrefixCache, device):
+        self._cache = cache
+        self._device = device
+
+    def lookup(self, key: str) -> CacheEntry | None:
+        e = self._cache.lookup(key)
+        if e is None:
+            return None
+        leaves = jax.tree.leaves(e.rows)
+        if leaves and all(hasattr(leaf, "devices")
+                          and leaf.devices() == {self._device}
+                          for leaf in leaves):
+            return e  # already resident here (the common same-replica hit)
+        return CacheEntry(rows=jax.device_put(e.rows, self._device),
+                          first_token=e.first_token, plen=e.plen,
+                          nbytes=e.nbytes)
+
+    def insert(self, key: str, rows, first_token: int, plen: int) -> bool:
+        return self._cache.insert(key, rows, first_token, plen)
+
+    def stats(self) -> dict:
+        return self._cache.stats()
+
+
+class ReplicaScheduler:
+    """Traffic frontend over a :class:`ReplicaSet` (module doc): the same
+    ``serve()/run()`` surface as TrafficScheduler, implemented by routing
+    the trace round-robin (in arrival order) across one per-replica
+    TrafficScheduler and interleaving their event streams one scheduler
+    tick at a time.  ``queue_limit`` applies per replica."""
+
+    def __init__(self, replica_set: ReplicaSet, *, policy: str = "fcfs",
+                 queue_limit: int | None = None,
+                 prefix_cache: PrefixCache | None = None,
+                 chunk: int | None = None):
+        from repro.serving.frontend.scheduler import TrafficScheduler
+
+        self.server = replica_set
+        self.cache = prefix_cache
+        self.members = [
+            TrafficScheduler(
+                m, policy=policy, queue_limit=queue_limit,
+                prefix_cache=(None if prefix_cache is None else
+                              _ReplicaCacheView(prefix_cache, dev)),
+                chunk=chunk)
+            for m, dev in zip(replica_set.members, replica_set.devices)]
+
+    def _shard_trace(self, trace):
+        order = sorted(range(len(trace)),
+                       key=lambda i: (trace[i].arrival, i))
+        shards = [[] for _ in self.members]
+        for k, i in enumerate(order):
+            shards[k % len(self.members)].append(trace[i])
+        return shards
+
+    def serve(self, trace) -> Iterator:
+        """Round-robin interleaving of the per-replica ``serve()``
+        generators: each turn advances one replica by one event.  Requests
+        are pre-routed round-robin in arrival order — deterministic for a
+        fixed trace, independent of decode timing."""
+        gens = [m.serve(shard)
+                for m, shard in zip(self.members, self._shard_trace(trace))]
+        active = list(gens)
+        while active:
+            still = []
+            for g in active:
+                try:
+                    yield next(g)
+                    still.append(g)
+                except StopIteration:
+                    pass
+            active = still
+
+    def metrics_snapshot(self) -> dict:
+        """Per-replica metric snapshots plus fleet totals (JSON-ready)."""
+        snaps = [m.metrics.snapshot() for m in self.members]
+        for s in snaps:
+            s.pop("per_request", None)
+        tokens = sum(s["throughput"]["tokens"] for s in snaps)
+        wall = max((s["throughput"]["wall_s"] for s in snaps), default=0.0)
+        return {
+            "replicas": snaps,
+            "n_replicas": len(self.members),
+            "throughput": {"tokens": tokens, "wall_s": wall,
+                           "tok_s": tokens / wall if wall > 0 else 0.0},
+        }
+
+    def run(self, trace):
+        """Drain ``trace``; returns a TrafficReport whose metrics dict
+        carries per-replica snapshots plus fleet totals."""
+        from repro.serving.frontend.scheduler import TrafficReport
+
+        for _ in self.serve(trace):
+            pass
+        return TrafficReport(
+            trace=trace,
+            metrics=self.metrics_snapshot(),
+            cache=self.cache.stats() if self.cache is not None else None,
+            rejected_uids=[tr.req.uid for tr in trace if tr.rejected])

@@ -6,9 +6,12 @@ the same ``submit()/step()/run()`` surface as the transformer-family
 ServingEngine.  The engine's tile schedule is **per-slot**: each slot
 carries its own ``origin`` (prompt length) and ``pos``, the red pass
 advances all live slots in one jitted call with per-slot positions, and
-gray tiles are dispatched per (slot, tile-side) through the engine's
-per-size jit cache — slots whose schedules happen to unlock the same tile
-side this step share one τ evaluation.
+the gray tiles every slot's schedule unlocks this step go out as ONE
+batched mask-select dispatch (``ScheduleWalker.tiles_step``: every
+possible side computed on the gathered per-slot rows, merged by mask —
+no data-dependent branching, no per-side host round-trips).  The retired
+per-(slot, tile-side) host grouping survives behind
+``engine.server_dispatch = "reference"`` as the exactness reference.
 
 Admission is vLLM-style slot refill: a finished slot (EOS or max_new) is
 immediately refilled from the queue by a single-slot prefill (static FFT
@@ -16,19 +19,27 @@ path, Massaroli Lemma 2.1) that rewrites the slot's full a/b buffer rows
 (``FlashEngine.prefill_slot``) — no other slot is disturbed, no recompile
 (tile-side and prompt-length specializations are cached).
 
-Two decode granularities share the bookkeeping:
+Decode granularities sharing the bookkeeping:
 
-* ``step()``       — one token per host round-trip (red pass, then gray
-  tiles grouped per side), reading tokens back every step.
+* ``step()``       — one token per host round-trip (red pass + one batched
+  tile dispatch), reading tokens back every step.
 * ``step_chunk(K)``— DEVICE-RESIDENT: one fused, donated XLA computation
   advances every slot K tokens (``FlashEngine.server_chunk`` drives each
-  slot's own schedule with masked per-tile-side branches), and the token
+  slot's own schedule through the batched tile dispatch), and the token
   readback is deferred to the chunk end — host syncs drop from O(n_tokens)
   to O(n_tokens/K).  Slots are stepped blindly through the chunk; the host
   truncates each stream at EOS/max_new afterwards, so greedy streams are
   exactly the per-step ones (overshoot work only touches rows the refill
   prefill rewrites; see step_chunk's rng caveat for sampling models).
   Retirement/admission happen at chunk boundaries.
+* ``dispatch_chunk(K)`` / ``collect_chunk`` — the two halves of
+  ``step_chunk`` split apart so ``run()`` can DISPATCH-AHEAD: chunk N+1
+  is dispatched (jax async dispatch, donated state future) BEFORE chunk
+  N's tokens are read back, overlapping host scheduling with device
+  compute.  Retirement and admission lag one chunk behind the device;
+  the extra blind chunk a retired slot receives only touches its own
+  rows, which the refill prefill rewrites wholesale, so greedy streams
+  stay exactly the per-step ones.
 
 ``generate()`` keeps the historical lockstep batch-at-once path (all rows
 share one schedule position) for benchmarks and exactness tests.
@@ -243,7 +254,8 @@ class LCSMServer:
         if self.strategy == "eager":
             self.state = eng.eager_step(self.state, p_vec)
         toks = np.asarray(toks)
-        tiles: dict[int, list[tuple[int, int]]] = {}  # U -> [(slot, p)]
+        mask = np.zeros((self.B,), bool)
+        pv = np.zeros((self.B,), np.int32)
         for s in live:
             req = self.slots[s]
             tok = int(toks[s])
@@ -255,20 +267,42 @@ class LCSMServer:
                 finished.append(req)
                 self.slots[s] = None  # retire; no tile — its outputs would
                 continue              # only feed positions never generated.
-            if self.strategy == "flash":
-                # red steps since origin = this slot's 1-based schedule step
-                U = largest_pow2_divisor(self.pos[s] - self.origin[s])
-                if p + 1 < eng.Lbuf:  # per-slot horizon guard (partial
-                    tiles.setdefault(U, []).append((s, p))  # tiles clip)
-        for U, group in sorted(tiles.items()):
-            mask = np.zeros((self.B,), bool)
-            pv = np.zeros((self.B,), np.int32)
-            for s, p in group:
-                mask[s] = True
-                pv[s] = p
-            self.state = eng.gray_step(
-                self.state, jnp.asarray(pv), jnp.asarray(mask), U)
+            mask[s] = True
+            pv[s] = p
+        if self.strategy == "flash" and mask.any():
+            if eng.server_dispatch == "reference":
+                self._step_tiles_reference(mask, pv)
+            else:
+                # ONE batched dispatch applies every unlocked tile: the
+                # engine derives each slot's side from pos/origin and
+                # mask-selects (tiles_step) — no per-side host grouping.
+                self.state = eng.tiles_step(
+                    self.state, jnp.asarray(pv),
+                    jnp.asarray(self.origin, np.int32), jnp.asarray(mask))
         return finished
+
+    def _step_tiles_reference(self, mask: np.ndarray, pv: np.ndarray) -> None:
+        """The RETIRED per-(slot, tile-side) host grouping (PR 2–5 step
+        path), kept as the exactness reference for the batched per-step
+        dispatch: group live slots by the side their schedule unlocks,
+        dispatch one masked ``gray_step`` per non-empty group — log2(L)
+        host round-trips per token in the worst case."""
+        eng = self.engine
+        tiles: dict[int, list[tuple[int, int]]] = {}  # U -> [(slot, p)]
+        for s in np.nonzero(mask)[0]:
+            s = int(s)
+            # red steps since origin = this slot's 1-based schedule step
+            U = largest_pow2_divisor(self.pos[s] - self.origin[s])
+            if pv[s] + 1 < eng.Lbuf:  # per-slot horizon guard (partial
+                tiles.setdefault(U, []).append((s, int(pv[s])))  # tiles clip)
+        for U, group in sorted(tiles.items()):
+            gmask = np.zeros((self.B,), bool)
+            gpv = np.zeros((self.B,), np.int32)
+            for s, p in group:
+                gmask[s] = True
+                gpv[s] = p
+            self.state = eng.gray_step(
+                self.state, jnp.asarray(gpv), jnp.asarray(gmask), U)
 
     def step_chunk(self, K: int) -> list[Request]:
         """Admit queued requests into free slots, then advance every live
@@ -288,32 +322,73 @@ class LCSMServer:
         bit-replay of the per-step one."""
         if K <= 1:
             return self.step()
+        finished, pend = self.dispatch_chunk(K)
+        if pend is not None:
+            finished.extend(self.collect_chunk(pend))
+        return finished
+
+    def dispatch_chunk(self, K: int) -> tuple[list[Request], tuple | None]:
+        """The DISPATCH half of ``step_chunk``: admit queued requests into
+        free slots, launch one fused K-step ``server_chunk`` (jax async
+        dispatch — returns immediately with a donated state future and a
+        token future), and advance the host position bookkeeping by K,
+        WITHOUT reading the tokens back.  Returns
+        ``(finished_at_admission, pending)`` where ``pending`` is an opaque
+        handle for :meth:`collect_chunk` — or None when no slot is live
+        (nothing was dispatched).
+
+        The split is what lets ``run()`` dispatch chunk N+1 before syncing
+        on chunk N: retirement/admission then lag the device by one chunk,
+        and a slot whose request retired in chunk N is stepped blindly
+        through chunk N+1 — its overshoot tokens are dropped by
+        ``collect_chunk`` (the record's request is already done) and its
+        rows are rewritten wholesale by the refill prefill, so every
+        delivered greedy stream is exactly the per-step one."""
         finished: list[Request] = []
         self._fill_free_slots(finished)
         live_slots = [s for s in range(self.B) if self.slots[s] is not None]
         if not live_slots:
-            return finished
+            return finished, None
         # free slots idle at position 0 with live=False: the red pass still
         # computes their rows (pure per-row ops), no tiles run for them, and
         # their buffers are fully rewritten by prefill_slot on reuse.
         # Deliberately NO dynamic cap at the remaining token budget: each
         # distinct K compiles its own fused program (seconds), while the
         # blind-overshoot steps a fixed K wastes on short tails are a few
-        # already-compiled red passes — truncation below keeps streams exact
-        # either way.
+        # already-compiled red passes — truncation in collect_chunk keeps
+        # streams exact either way.
         p0 = np.asarray([self.pos[s] if self.slots[s] is not None else 0
                          for s in range(self.B)], np.int32)
         origin = np.asarray(self.origin, np.int32)
         live = np.asarray([r is not None for r in self.slots], bool)
         self.state, toks, self._rng = self.engine.server_chunk(
             self.state, p0, origin, live, self._rng, K)
-        toks = np.asarray(toks)  # the chunk's single host sync
+        # Positions advance blindly by K at dispatch time (the device did
+        # step every live slot K times).  A slot retiring mid-chunk leaves
+        # a too-large pos behind — harmless: pos is only read for live
+        # slots, and admission rewrites it.
+        records = [(s, self.slots[s]) for s in live_slots]
         for s in live_slots:
-            req = self.slots[s]
+            self.pos[s] += K
+        return finished, (toks, records, K)
+
+    def collect_chunk(self, pending: tuple) -> list[Request]:
+        """The COLLECT half of ``step_chunk``: sync on a dispatched chunk's
+        token future (``np.asarray`` — the chunk's single host sync),
+        append each live record's tokens truncated at EOS/max_new, and
+        retire finished slots.  Records whose request already finished in
+        an earlier chunk (possible under dispatch-ahead: the slot was
+        stepped blindly once more before its retirement was observed) are
+        skipped — their tokens are pure overshoot."""
+        toks, records, K = pending
+        toks = np.asarray(toks)
+        finished: list[Request] = []
+        for s, req in records:
+            if req.done:
+                continue  # blind overshoot chunk of an already-retired slot
             for i in range(K):
                 tok = int(toks[s, i])
                 req.out.append(tok)
-                self.pos[s] += 1
                 if tok == req.eos_id or len(req.out) >= req.max_new:
                     req.done = True
                     finished.append(req)
@@ -321,16 +396,43 @@ class LCSMServer:
                     break                 # blind chunk's overshoot: dropped.
         return finished
 
-    def run(self, chunk: int | None = None) -> list[Request]:
+    def run(self, chunk: int | None = None, *,
+            pipeline: bool = True) -> list[Request]:
         """Drain queue + slots to completion.  ``chunk`` (default: the
         constructor's ``chunk``) > 1 advances slots in fused K-token chunks
-        (one host sync per chunk) instead of token-by-token."""
+        (one host sync per chunk) instead of token-by-token.
+
+        Chunked runs DISPATCH-AHEAD by default: chunk N+1 is dispatched
+        before chunk N's tokens are read back, so the host-side readback +
+        bookkeeping of chunk N overlaps the device computing chunk N+1
+        (``pipeline=False`` restores the strictly alternating
+        dispatch-sync loop).  Greedy streams are identical either way;
+        for a sampling model the pipelined admission points shift by one
+        chunk, so its rng-key schedule differs — the same caveat class as
+        chunked vs per-step serving (see step_chunk)."""
         K = self.chunk if chunk is None else chunk
         done: list[Request] = []
-        while self.queue or any(s is not None for s in self.slots):
-            done.extend(self.step() if K is None or K <= 1
-                        else self.step_chunk(K))
-        return done
+        if K is None or K <= 1:
+            while self.queue or any(s is not None for s in self.slots):
+                done.extend(self.step())
+            return done
+        if not pipeline:
+            while self.queue or any(s is not None for s in self.slots):
+                done.extend(self.step_chunk(K))
+            return done
+        pend = None
+        while True:
+            fin, nxt = self.dispatch_chunk(K)
+            done.extend(fin)
+            if pend is not None:
+                done.extend(self.collect_chunk(pend))
+            pend = nxt
+            if nxt is None:
+                # No live slots at dispatch time ⟹ nothing left in flight
+                # (an uncollected chunk would have kept its slots live, so
+                # the collect above already drained the last one) and an
+                # empty queue (admission moved every waiter into a slot).
+                return done
 
     # ------------------------------------------------ lockstep (batch) path
     def generate(self, prompts: np.ndarray | None, n_tokens: int,

@@ -157,6 +157,41 @@ def test_cache_eviction_under_tight_byte_budget(setup):
         assert tr.req.out == ref
 
 
+def test_eviction_spills_to_host_tier_and_restores(setup):
+    """With ``spill_budget`` set, the A, B, A pattern's eviction of A lands
+    in the host spill tier instead of being dropped: the A reuse is a
+    (spill) hit that skips prefill and still emits the bitwise cold
+    stream.  Tier residency is part of the contract: the device tier
+    stores exported rows AS-IS (live device arrays — no ``device_get`` on
+    the admission path), only the forced spill materializes on host."""
+    cfg, params = setup
+    rng = np.random.RandomState(2)
+    pa = rng.randint(0, cfg.vocab, (4,)).astype(np.int32)
+    pb = rng.randint(0, cfg.vocab, (6,)).astype(np.int32)
+    srv = _server(cfg, params, n_slots=1)
+    one_entry = sum(leaf.nbytes for leaf in jax.tree.leaves(
+        srv.engine.init_state())) // srv.B
+    cache = PrefixCache(byte_budget=int(one_entry * 1.5),
+                        spill_budget=4 * one_entry)
+    trace = [TrafficRequest(Request(uid=i, prompt=p, max_new=3), arrival=i)
+             for i, p in enumerate([pa, pb, pa])]
+    sched = TrafficScheduler(srv, prefix_cache=cache)
+    rep = sched.run(trace)
+    assert rep.cache["evictions"] >= 1 and rep.cache["spills"] >= 1
+    assert rep.cache["spill_hits"] >= 1 and rep.cache["hits"] >= 1
+    assert len(cache) == 1  # device tier: B only; A lives in the spill tier
+    for e in cache._entries.values():
+        assert all(isinstance(leaf, jax.Array)
+                   for leaf in jax.tree.leaves(e.rows))
+    for e in cache._spill.values():
+        assert all(isinstance(leaf, np.ndarray)
+                   for leaf in jax.tree.leaves(e.rows))
+    for tr in trace:
+        ref = isolated_decode(cfg, params, tr.req.prompt, len(tr.req.out),
+                              prompt_max=PROMPT_MAX, gen_max=GEN_MAX)
+        assert tr.req.out == ref
+
+
 def test_oversized_entry_not_stored():
     cache = PrefixCache(byte_budget=8)
     ok = cache.insert(prefix_key([1, 2], 16), {"x": np.zeros(64)}, 0, 2)

@@ -1,0 +1,267 @@
+"""Batched gather/scatter server dispatch vs the retired cond ladder.
+
+PR 6 replaced the serving hot loop's per-side ``lax.cond`` ladder (and the
+server-step path's per-(slot, side) host grouping) with ONE batched
+mask-select dispatch: every possible tile side computed unconditionally on
+gathered per-slot rows, merged by mask (``ScheduleWalker.
+_server_tiles_batched``).  The ladder survives as ``dispatch="reference"``
+precisely so this module can pin the new path against it:
+
+* **tile-dispatch property** — for RANDOMIZED states, per-slot positions,
+  origins, and live masks, one batched tile pass equals one reference
+  ladder pass, for both engines (LCSM FlashEngine + generic
+  GenericFlashEngine).
+* **fused-chunk property** — ``server_chunk(dispatch="batched")`` vs
+  ``"reference"`` across randomized chunk sizes and per-slot schedules:
+  token streams BITWISE identical, final states equal.
+* **server-level** — LCSMServer / GenericServer running whole mixed
+  traces under ``engine.server_dispatch = "reference"`` emit exactly the
+  batched server's streams, per-step and chunked.
+
+Exactness grain: token streams (int32) are compared bitwise everywhere.
+Generic-engine states are compared bitwise too (``_apply_tile`` merges by
+select, so a masked-out row keeps its old value exactly).  LCSM states
+are compared under IEEE == (``np.array_equal``): the batched path's
+masked scatter-ADD contributes +0.0 where the ladder skips, which maps a
+stored -0.0 to +0.0 in the b accumulators — numerically invisible, and
+tokens never differ (see ``_server_tiles_batched``'s docstring).
+
+Everything here is single-device math, so the module runs unchanged under
+the forced-4-device CI leg (``XLA_FLAGS=
+--xla_force_host_platform_device_count=4``); the one mesh-gated test
+additionally pins batched == reference THROUGH a data-sharded server —
+the configuration whose cond-predicate syncs motivated the refactor.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.engine import FlashEngine
+from repro.models.synthetic_lcsm import SyntheticLCSM
+
+B = 6  # slots: enough to populate several side groups at once
+
+
+# ----------------------------------------------------------- shared helpers
+def _rand_state(eng, seed: int):
+    """A fresh state pytree with every float leaf filled from seeded
+    normals (int leaves, if any, kept).  The dispatch equivalence is a
+    pure-function property, so arbitrary buffer contents are fair game —
+    wider than any reachable serving state."""
+    leaves, treedef = jax.tree.flatten(eng.init_state())
+    keys = jax.random.split(jax.random.PRNGKey(seed), max(len(leaves), 1))
+    out = []
+    for leaf, k in zip(leaves, keys):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(jax.random.normal(k, leaf.shape, jnp.float32)
+                       .astype(leaf.dtype))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
+def _rand_schedule(eng, seed: int, overshoot: int = 2):
+    """Random per-slot (pv, origin, live): origins in [0, prompt_max],
+    positions from origin (rel step >= 1) up to slightly PAST the horizon
+    — the blind-overshoot region dispatch_chunk steps retired slots
+    through — and a ~70% live mask (occasionally all-False: every side's
+    group empty, the ladder skips everything)."""
+    rng = np.random.RandomState(seed)
+    pmax = 4  # both engine fixtures are built with prompt_max=4
+    origin = rng.randint(0, pmax + 1, B).astype(np.int32)
+    pv = np.asarray(
+        [int(rng.randint(o, eng.Lbuf + overshoot)) for o in origin],
+        np.int32)
+    live = rng.rand(B) < 0.7
+    return (jnp.asarray(pv), jnp.asarray(origin), jnp.asarray(live))
+
+
+def _assert_states_equal(ref, got, *, bitwise: bool, msg: str):
+    rl, _ = jax.tree.flatten(ref)
+    gl, _ = jax.tree.flatten(got)
+    assert len(rl) == len(gl)
+    for i, (r, g) in enumerate(zip(rl, gl)):
+        r, g = np.asarray(r), np.asarray(g)
+        if bitwise:
+            assert r.tobytes() == g.tobytes(), f"leaf {i} differs ({msg})"
+        else:
+            np.testing.assert_array_equal(r, g,
+                                          err_msg=f"leaf {i} ({msg})")
+
+
+# ------------------------------------------------------------ LCSM fixtures
+@functools.lru_cache(maxsize=None)
+def _lcsm_engine():
+    model = SyntheticLCSM(n_levels=2, d_model=8)
+    params = model.init(jax.random.PRNGKey(0))
+    return FlashEngine(model, params, batch=B, gen_max=16, prompt_max=4)
+
+
+@functools.lru_cache(maxsize=None)
+def _gla_engine():
+    from repro.configs import get_config
+    from repro.core.generic import GenericFlashEngine
+    from repro.models.gla import GLALM
+
+    cfg = dataclasses.replace(
+        get_config("gla").smoke(), name="gla-dispatch",
+        n_layers=2, d_model=16, d_ff=32, vocab=64, gla_dk=4, gla_dv=8)
+    model = GLALM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return GenericFlashEngine(model, params, batch=B, gen_max=16,
+                              prompt_max=4)
+
+
+_ENGINES = {"lcsm": (_lcsm_engine, False),  # (factory, bitwise states)
+            "gla": (_gla_engine, True)}
+
+
+# ----------------------------------------------- tile-dispatch equivalence
+@functools.lru_cache(maxsize=None)
+def _jit_tiles(engine_name: str, dispatch: str):
+    """COMPILED tile pass — the form every serving path actually runs
+    (tiles_step / server_chunk are jitted).  Comparing the compiled
+    programs is the contract; eager op-by-op execution rounds the same
+    arithmetic differently than XLA's fused codegen (1-ulp FMA effects),
+    for the reference ladder just as for the batched path."""
+    factory, _ = _ENGINES[engine_name]
+    eng = factory()
+    return jax.jit(functools.partial(eng._server_tiles, dispatch=dispatch))
+
+
+@given(
+    st.sampled_from(["lcsm", "gla"]),
+    st.integers(min_value=0, max_value=10**6),   # schedule/state seed
+)
+@settings(max_examples=10, deadline=None)
+def test_tiles_batched_matches_reference(engine_name, seed):
+    """One batched mask-select tile pass == one reference cond-ladder pass
+    over randomized states, per-slot positions, origins, and live masks."""
+    eng, bitwise = _ENGINES[engine_name]
+    eng = eng()
+    pv, origin, live = _rand_schedule(eng, seed)
+    ref = _jit_tiles(engine_name, "reference")(
+        eng.params, _rand_state(eng, seed), pv, origin, live)
+    got = _jit_tiles(engine_name, "batched")(
+        eng.params, _rand_state(eng, seed), pv, origin, live)
+    _assert_states_equal(
+        ref, got, bitwise=bitwise,
+        msg=f"{engine_name} seed={seed} pv={np.asarray(pv)} "
+            f"origin={np.asarray(origin)} live={np.asarray(live)}")
+
+
+# --------------------------------------------- fused-chunk equivalence
+@given(
+    st.sampled_from(["lcsm", "gla"]),
+    st.sampled_from([1, 2, 4]),                  # chunk size K
+    st.integers(min_value=0, max_value=10**6),   # schedule/state seed
+)
+@settings(max_examples=8, deadline=None)
+def test_server_chunk_batched_matches_reference(engine_name, K, seed):
+    """``server_chunk`` (red passes + tiles + advances, K fused per-slot
+    steps, jitted + donated) under both dispatch modes: bitwise-identical
+    token streams, equal final states, identical rng advance."""
+    eng, bitwise = _ENGINES[engine_name]
+    eng = eng()
+    # chunk starts inside the buffer so the red passes stay meaningful;
+    # overshoot past the horizon still happens when p0 + K > Lbuf.
+    pv, origin, live = _rand_schedule(eng, seed, overshoot=0)
+    pv = jnp.minimum(pv, eng.Lbuf - 1)
+    rng = jax.random.PRNGKey(seed)
+
+    s_ref, t_ref, r_ref = eng.server_chunk(
+        _rand_state(eng, seed), pv, origin, live, rng, K,
+        dispatch="reference")
+    s_bat, t_bat, r_bat = eng.server_chunk(
+        _rand_state(eng, seed), pv, origin, live, rng, K,
+        dispatch="batched")
+
+    msg = (f"{engine_name} K={K} seed={seed} pv={np.asarray(pv)} "
+           f"origin={np.asarray(origin)} live={np.asarray(live)}")
+    np.testing.assert_array_equal(np.asarray(t_ref), np.asarray(t_bat),
+                                  err_msg=f"tokens ({msg})")
+    np.testing.assert_array_equal(np.asarray(r_ref), np.asarray(r_bat),
+                                  err_msg=f"rng ({msg})")
+    _assert_states_equal(s_ref, s_bat, bitwise=bitwise, msg=msg)
+
+
+# -------------------------------------------------- server-level streams
+def _hyena_cfg():
+    from repro.configs import get_config
+    return dataclasses.replace(get_config("hyena").smoke(),
+                               name="hyena-dispatch", n_layers=2,
+                               d_model=16, d_ff=32, vocab=64)
+
+
+def _mixed_trace(vocab, pmax, gmax, n=10, seed=0):
+    from repro.serving import Request
+    rng = np.random.RandomState(seed)
+    return [Request(uid=i,
+                    prompt=rng.randint(0, vocab, (
+                        int(rng.randint(1, pmax + 1)),)).astype(np.int32),
+                    max_new=int(rng.randint(2, gmax + 1)))
+            for i in range(n)]
+
+
+def _serve(cfg, params, *, family, dispatch, chunk, mesh=None):
+    from repro.serving import make_server
+    srv = make_server(cfg, params, n_slots=4, prompt_max=4, gen_max=8,
+                      **({"mesh": mesh} if family == "lcsm" else {}))
+    srv.engine.server_dispatch = dispatch
+    reqs = _mixed_trace(cfg.vocab, 4, 8)
+    for r in reqs:
+        srv.submit(r)
+    srv.run(chunk=chunk)
+    return {r.uid: tuple(r.out) for r in reqs}
+
+
+@pytest.mark.parametrize("family", ["lcsm", "gla"])
+@pytest.mark.parametrize("chunk", [None, 4])
+def test_server_streams_batched_match_reference(family, chunk):
+    """Whole mixed continuous-batching traces through LCSMServer /
+    GenericServer: the batched dispatch emits exactly the reference
+    ladder's greedy streams, per-step (step()'s tiles_step vs the per-
+    (slot, side) host grouping) and chunked (server_chunk both modes)."""
+    if family == "lcsm":
+        from repro.models.hyena import HyenaLCSM
+        cfg = _hyena_cfg()
+        params = HyenaLCSM(cfg).init(jax.random.PRNGKey(0))
+    else:
+        from repro.configs import get_config
+        from repro.models.gla import GLALM
+        cfg = get_config("gla").smoke()
+        params = GLALM(cfg).init(jax.random.PRNGKey(0))
+    ref = _serve(cfg, params, family=family, dispatch="reference",
+                 chunk=chunk)
+    got = _serve(cfg, params, family=family, dispatch="batched", chunk=chunk)
+    assert got == ref
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4): the "
+           "forced-4-device CI leg pins batched == reference THROUGH a "
+           "data-sharded server")
+@pytest.mark.parametrize("chunk", [None, 4])
+def test_sharded_server_streams_batched_match_reference(chunk):
+    """The motivating configuration: under a 4-way data mesh (where every
+    cond predicate was a cross-device sync) the batched dispatch must
+    still emit exactly the reference ladder's streams."""
+    from repro.launch.mesh import make_serving_mesh
+    from repro.models.hyena import HyenaLCSM
+
+    cfg = _hyena_cfg()
+    params = HyenaLCSM(cfg).init(jax.random.PRNGKey(0))
+    mesh = make_serving_mesh(data=4)
+    ref = _serve(cfg, params, family="lcsm", dispatch="reference",
+                 chunk=chunk, mesh=mesh)
+    got = _serve(cfg, params, family="lcsm", dispatch="batched",
+                 chunk=chunk, mesh=mesh)
+    assert got == ref
