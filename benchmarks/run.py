@@ -1,7 +1,17 @@
 """Benchmark orchestrator: one entry per paper table/figure + the roofline
-report over whatever dry-run artifacts exist.
+report over whatever dry-run artifacts exist, fronted by the flashcheck
+static-contract gate (python -m repro.staticcheck) so a tree that violates
+the donation / dispatch / cache invariants never gets timed — its numbers
+would not be comparable to the committed sweeps.
 
     PYTHONPATH=src python -m benchmarks.run [--fast]
+
+flashcheck's machine-readable report lands in
+experiments/staticcheck/report.json (same artifact convention as the
+BENCH_*.json records); run it standalone with
+
+    PYTHONPATH=src python -m repro.staticcheck src tests benchmarks \
+        --fail-on-warn --json experiments/staticcheck/report.json
 """
 
 from __future__ import annotations
@@ -10,6 +20,35 @@ import argparse
 import sys
 import time
 import traceback
+
+
+def _staticcheck_gate() -> None:
+    """Run the AST contract rules over the tree and drop the JSON report
+    next to the benchmark artifacts.  Raises on any unsuppressed finding."""
+    import json
+    import os
+
+    from repro.staticcheck import analyze, load_config
+
+    root = os.path.join(os.path.dirname(__file__), "..")
+    cwd = os.getcwd()
+    os.chdir(root)
+    try:
+        report = analyze(["src", "tests", "benchmarks"],
+                         load_config("staticcheck.toml"), jaxpr=False)
+        out_dir = os.path.join("experiments", "staticcheck")
+        os.makedirs(out_dir, exist_ok=True)
+        out = os.path.join(out_dir, "report.json")
+        with open(out, "w") as fh:
+            json.dump(report.to_dict(), fh, indent=2, sort_keys=True)
+        print(f"flashcheck: {report.files_scanned} files, "
+              f"{len(report.live())} live finding(s) -> {out}")
+        if report.failed(fail_on_warn=True):
+            raise RuntimeError(
+                "static contract violations:\n" +
+                "\n".join(f.render() for f in report.live()))
+    finally:
+        os.chdir(cwd)
 
 
 def main() -> None:
@@ -23,6 +62,7 @@ def main() -> None:
                             bench_tokentime, bench_traffic, roofline_report)
 
     jobs = [
+        ("flashcheck static contracts (gate)", _staticcheck_gate),
         ("serving throughput (continuous batching)",
          lambda: bench_serving.main(smoke=args.fast)),
         ("traffic frontend (open-loop arrivals + prefix-cache sweep)",

@@ -8,7 +8,10 @@ semantics, no Mosaic.  The flag is resolved once per process.
 
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.short_conv import short_conv as _short_conv
@@ -29,12 +32,10 @@ def tile_conv(y, rho2u, *, interpret: bool | None = None):
     return _tile_conv(y, rho2u, interpret=itp)
 
 
-import functools
-
-import jax.numpy as jnp
-
-
-@functools.lru_cache(maxsize=None)
+# Bounded (FC005): block_t in principle follows the caller's sequence
+# length, so an uncapped memo would grow one custom_vjp wrapper per
+# distinct length a workload happens to contain.
+@functools.lru_cache(maxsize=32)
 def _short_conv_diffable(block_t: int, itp: bool):
     """custom_vjp wrapper: forward = Pallas kernel; backward = the exact
     transpose (an anti-causal FIR = time-flipped forward kernel + K small

@@ -13,7 +13,6 @@ reduce-scatter / all-to-all / collective-permute / ragged-all-to-all op
 
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import asdict, dataclass
 

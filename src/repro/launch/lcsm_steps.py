@@ -34,7 +34,6 @@ channel sharding keeps every read local.
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +41,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import tau as tau_mod
 from repro.models import components as C
-from repro.models.hyena import HyenaLCSM, compose_filters, materialize_filters
+from repro.models.hyena import HyenaLCSM
 
 _F32 = jnp.float32
 

@@ -17,8 +17,7 @@ No real arrays are built for the full configs: params come from
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax

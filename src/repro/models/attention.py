@@ -86,7 +86,10 @@ def _block_mask(ci, chunk, S, T, causal, window):
     return valid
 
 
-@functools.lru_cache(maxsize=None)
+# Bounded (FC005): scale varies with head_dim and window with config, so
+# an uncapped memo holds one compiled closure per attention configuration
+# ever constructed; 32 covers any realistic process.
+@functools.lru_cache(maxsize=32)
 def _flash_fn(n_kv: int, causal: bool, window, chunk: int, scale):
     """Flash attention with a flash *backward*: the VJP re-runs the KV-block
     scan, recomputing each block's probabilities from (q, k, saved row

@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import contextlib as _contextlib
 import math
 
 import jax
@@ -97,8 +98,6 @@ def causal_shortconv_from_window(win: jnp.ndarray, weights: jnp.ndarray,
 # Activation-sharding constraint hook.  GSPMD sometimes drops the batch
 # sharding of intermediates inside scanned/looped stacks; the launcher pins
 # the batch axis explicitly via this context (CPU tests leave it unset).
-import contextlib as _contextlib
-
 _ACT_SPEC = None
 _ACT_MESH = None
 

@@ -30,7 +30,6 @@ Engine activation layout (D = d_model):
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import Any, Sequence
 

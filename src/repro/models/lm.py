@@ -21,7 +21,7 @@ repro/serving/lcsm_backend.py.
 from __future__ import annotations
 
 import functools
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -308,7 +308,9 @@ def _ce_from_hidden(w: jnp.ndarray, hidden: jnp.ndarray, targets: jnp.ndarray,
 
 
 # ----------------------------------------------------------------- builders
-@functools.lru_cache(maxsize=None)
+# Bounded (FC005): hashable configs are unbounded in principle (tests
+# build many dataclasses.replace variants), so cap the memo.
+@functools.lru_cache(maxsize=32)
 def build(name_or_cfg) -> LM:
     from repro.configs.base import get_config
 

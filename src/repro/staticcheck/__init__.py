@@ -1,0 +1,26 @@
+"""flashcheck — AST+jaxpr contract analyzer for the Flash-Inference repo.
+
+Enforces the serving-stack invariants that shipped PRs learned the hard
+way (see README "Static contracts" and each rule's docstring in
+:mod:`repro.staticcheck.rules`):
+
+  FC001 use-after-donate            FC004 lax.cond in hot dispatch
+  FC002 mixed-dtype slice starts    FC005 unbounded jit caches
+  FC003 dot/einsum in mixer path    FC006 import-scope config toggles
+
+plus a jaxpr pass (:mod:`repro.staticcheck.jaxpr_pass`) that traces the
+registered hot entry points and verifies donation aliasing, cond-free
+batched dispatch, and one-rng-split-per-step from the traced program.
+
+Run: ``python -m repro.staticcheck [src tests benchmarks]``.
+"""
+
+from .cli import analyze, main
+from .config import Config, Suppression, load_config
+from .findings import ERROR, WARN, Finding, Report
+from .rules import Module, run_rules
+
+__all__ = [
+    "ERROR", "WARN", "Config", "Finding", "Module", "Report",
+    "Suppression", "analyze", "load_config", "main", "run_rules",
+]

@@ -1,0 +1,302 @@
+"""Shared AST machinery for the flashcheck rules.
+
+Nothing here imports jax: the AST pass must stay runnable (and fast) in
+any environment, including pre-commit hooks and docs builds.  The
+heuristics are deliberately repo-shaped — they encode how THIS codebase
+writes traced code (per-slot position vectors, ``starts()`` helpers,
+``self._jit_*`` dispatch tables), not a general-purpose type system.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+
+# --------------------------------------------------------------- dotted names
+def dotted_name(node: ast.AST) -> str | None:
+    """"x", "self.state", "eng.engine.state" for Name/Attribute chains
+    (None for anything else — calls, subscripts, literals)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_segment(name: str | None) -> str | None:
+    return None if name is None else name.rsplit(".", 1)[-1]
+
+
+def callee_names(call: ast.Call) -> list[str]:
+    """Candidate dotted callee names of a call.  Ternary callees — the
+    repo's ``(self._jit_red if jitted else self._red_pass)(...)`` idiom —
+    contribute both branches."""
+    def of(expr: ast.AST) -> list[str]:
+        if isinstance(expr, ast.IfExp):
+            return of(expr.body) + of(expr.orelse)
+        d = dotted_name(expr)
+        return [d] if d else []
+    return of(call.func)
+
+
+def assigned_names(stmt: ast.stmt) -> set[str]:
+    """Dotted names bound by an assignment-like statement (tuple targets
+    flattened; starred/subscript targets contribute their base name)."""
+    targets: list[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign, ast.NamedExpr)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        targets = [stmt.target]
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        targets = [i.optional_vars for i in stmt.items if i.optional_vars]
+    out: set[str] = set()
+
+    def add(t: ast.expr) -> None:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                add(e)
+        elif isinstance(t, ast.Starred):
+            add(t.value)
+        elif isinstance(t, ast.Subscript):
+            d = dotted_name(t.value)
+            if d:
+                out.add(d)
+        else:
+            d = dotted_name(t)
+            if d:
+                out.add(d)
+    for t in targets:
+        add(t)
+    return out
+
+
+# ------------------------------------------------------------ function index
+@dataclass
+class FuncInfo:
+    name: str
+    qualname: str          # Class.method for methods
+    node: ast.AST          # FunctionDef | AsyncFunctionDef
+    path: str              # repo-relative file
+
+
+def index_functions(tree: ast.Module, path: str) -> list[FuncInfo]:
+    out: list[FuncInfo] = []
+
+    def walk(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}" if prefix else child.name
+                out.append(FuncInfo(child.name, qual, child, path))
+                walk(child, qual + ".")
+            elif isinstance(child, ast.ClassDef):
+                walk(child, (f"{prefix}{child.name}" if prefix
+                             else child.name) + ".")
+            else:
+                walk(child, prefix)
+    walk(tree, "")
+    return out
+
+
+def enclosing_stmt(func: ast.AST, target: ast.AST) -> ast.stmt | None:
+    """Smallest statement of ``func``'s body tree containing ``target``."""
+    best: ast.stmt | None = None
+
+    def walk(node: ast.AST) -> bool:
+        found = node is target
+        for child in ast.iter_child_nodes(node):
+            found = walk(child) or found
+        if found and isinstance(node, ast.stmt):
+            nonlocal best
+            if best is None:
+                best = node
+        return found
+    walk(func)
+    return best
+
+
+def enclosing_loops(func: ast.AST, stmt: ast.stmt) -> list[ast.stmt]:
+    """Innermost-first For/While statements of ``func`` containing ``stmt``."""
+    chain: list[ast.stmt] = []
+
+    def walk(node: ast.AST, loops: list[ast.stmt]) -> None:
+        for child in ast.iter_child_nodes(node):
+            nxt = loops + [child] if isinstance(
+                child, (ast.For, ast.While, ast.AsyncFor)) else loops
+            if child is stmt:
+                nonlocal chain
+                chain = list(reversed(nxt))
+                return
+            walk(child, nxt)
+    walk(func, [])
+    return chain
+
+
+def loads_of(func: ast.AST, name: str) -> list[ast.AST]:
+    """Load-context reads of dotted ``name`` (or a deeper attribute of it)
+    anywhere in ``func``, including lambdas/comprehensions."""
+    hits: list[ast.AST] = []
+    for node in ast.walk(func):
+        if isinstance(node, (ast.Name, ast.Attribute)) and isinstance(
+                getattr(node, "ctx", None), ast.Load):
+            d = dotted_name(node)
+            if d and (d == name or d.startswith(name + ".")):
+                hits.append(node)
+    # Drop reads nested inside a larger matching chain (state.a reports once)
+    spans = {(h.lineno, h.col_offset) for h in hits}
+    return [h for h in hits
+            if not any((h.lineno, c) in spans
+                       for c in range(h.col_offset - 64, h.col_offset))
+            or True]  # keep all; duplicates are collapsed at finding level
+
+
+# --------------------------------------------------------- taint-lite (FC002)
+_HOST_CALLS = {"int", "len", "range", "min", "max", "enumerate", "zip",
+               "ceil_pow2", "largest_pow2_divisor"}
+_HOST_ANNOT = {"int", "bool", "str", "float"}
+
+
+class TaintLite:
+    """Which local names in a function MAY hold traced values.
+
+    Seeds: every parameter not annotated as a Python scalar (self/cls and
+    ``int``/``str``-annotated params are host).  Propagation: a name
+    assigned from an expression mentioning a suspect becomes suspect;
+    ``.shape`` unpacking, ``int()``/``len()``/``range()`` results, and
+    loop indices over ``range()`` are host.  Two linear passes make
+    simple forward chains converge; this is a heuristic, not an
+    inference engine — fixture tests pin exactly what it must catch.
+    """
+
+    def __init__(self, func: ast.AST):
+        self.suspect: set[str] = set()
+        args = getattr(func, "args", None)
+        if args is not None:
+            all_args = (list(args.posonlyargs) + list(args.args)
+                        + list(args.kwonlyargs))
+            for i, a in enumerate(all_args):
+                if i == 0 and a.arg in ("self", "cls"):
+                    continue
+                ann = a.annotation
+                ann_name = last_segment(dotted_name(ann)) if ann else None
+                if isinstance(ann, ast.Constant):
+                    ann_name = str(ann.value)
+                if ann_name in _HOST_ANNOT:
+                    continue
+                self.suspect.add(a.arg)
+        for _ in range(2):
+            for node in ast.walk(func):
+                if isinstance(node, ast.Assign) and len(node.targets) >= 1:
+                    tainted = self.expr_suspect(node.value)
+                    for t in node.targets:
+                        self._mark(t, tainted, node.value)
+                elif isinstance(node, (ast.For, ast.AsyncFor)):
+                    tainted = self.expr_suspect(node.iter)
+                    self._mark(node.target, tainted, node.iter)
+
+    def _mark(self, target: ast.expr, tainted: bool, value: ast.expr) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            # ``B, P, _ = x.shape`` unpacks host ints even from traced x
+            if self._is_shape(value):
+                tainted = False
+            for e in target.elts:
+                self._mark(e, tainted, value)
+            return
+        d = dotted_name(target)
+        if d is None or "." in d:
+            return  # attribute targets don't shadow locals
+        if tainted:
+            self.suspect.add(d)
+        else:
+            self.suspect.discard(d)
+
+    @staticmethod
+    def _is_shape(value: ast.expr) -> bool:
+        return (isinstance(value, ast.Attribute) and value.attr == "shape")
+
+    def expr_suspect(self, expr: ast.expr | None) -> bool:
+        """MAY this expression be traced?  Casts/host calls launder."""
+        if expr is None or isinstance(expr, ast.Constant):
+            return False
+        if isinstance(expr, ast.Call):
+            fn = last_segment(dotted_name(expr.func))
+            if fn in _HOST_CALLS:
+                return False
+            if fn in ("asarray", "astype", "full", "array", "int32", "int64"):
+                # an explicit jnp cast is the FC002 FIX idiom — not a mix
+                return True  # still traced, but see literal-mix logic below
+            return False  # unknown calls: host by default (low-FP bias)
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in ("shape", "ndim", "size", "dtype"):
+                return False
+            return False  # self.x / spec.y are host scalars in this repo
+        if isinstance(expr, ast.Name):
+            return expr.id in self.suspect
+        if isinstance(expr, ast.Subscript):
+            if self._is_shape(expr.value):
+                return False
+            return self.expr_suspect(expr.value)
+        if isinstance(expr, ast.BinOp):
+            return (self.expr_suspect(expr.left)
+                    or self.expr_suspect(expr.right))
+        if isinstance(expr, ast.UnaryOp):
+            return self.expr_suspect(expr.operand)
+        if isinstance(expr, ast.IfExp):
+            return (self.expr_suspect(expr.body)
+                    or self.expr_suspect(expr.orelse))
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            return any(self.expr_suspect(e) for e in expr.elts)
+        return False
+
+
+# ---------------------------------------------------------------- call graph
+@dataclass
+class CallGraph:
+    """Name-based reachability over every function defined in the scanned
+    file set.  An edge A -> B exists when A's body mentions (Load) a name
+    whose last segment is B's simple name — this over-approximates calls
+    (covers ternaries, functools.partial, callables passed as values),
+    which is the right bias for a reachability *ban*."""
+
+    funcs: dict[str, list[FuncInfo]] = field(default_factory=dict)
+    edges: dict[str, set[str]] = field(default_factory=dict)
+
+    @classmethod
+    def build(cls, modules: list[tuple[str, ast.Module]]) -> "CallGraph":
+        g = cls()
+        infos: list[FuncInfo] = []
+        for path, tree in modules:
+            infos.extend(index_functions(tree, path))
+        for fi in infos:
+            g.funcs.setdefault(fi.name, []).append(fi)
+        names = set(g.funcs)
+        for fi in infos:
+            refs: set[str] = set()
+            for node in ast.walk(fi.node):
+                if isinstance(node, (ast.Name, ast.Attribute)) and isinstance(
+                        getattr(node, "ctx", None), ast.Load):
+                    seg = last_segment(dotted_name(node))
+                    if seg in names and seg != fi.name:
+                        refs.add(seg)
+            g.edges.setdefault(fi.name, set()).update(refs)
+        return g
+
+    def reach(self, roots: list[str], blocked: set[str]) -> dict[str, list[str]]:
+        """name -> call chain (root..name) for every function reachable from
+        ``roots`` without entering ``blocked`` nodes."""
+        out: dict[str, list[str]] = {}
+        stack = [(r, [r]) for r in roots if r in self.funcs]
+        while stack:
+            name, chain = stack.pop()
+            if name in out or name in blocked:
+                continue
+            out[name] = chain
+            for nxt in sorted(self.edges.get(name, ())):
+                if nxt not in out and nxt not in blocked:
+                    stack.append((nxt, chain + [nxt]))
+        return out

@@ -1,0 +1,124 @@
+"""flashcheck CLI — ``python -m repro.staticcheck [paths...]``.
+
+    python -m repro.staticcheck src tests benchmarks         # AST rules
+    python -m repro.staticcheck --fail-on-warn --jaxpr ...   # CI lint leg
+    python -m repro.staticcheck --jaxpr-only                 # variants leg
+    python -m repro.staticcheck --json report.json ...       # BENCH artifact
+
+Exit code 0 = clean (modulo staticcheck.toml suppressions), 1 = findings
+(or any jaxpr contract failure), 2 = usage/config error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import sys
+from pathlib import Path
+
+from .config import load_config
+from .findings import ERROR, Finding, Report
+from .rules import Module, run_rules
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+
+
+def discover(paths, config) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_file() and path.suffix == ".py":
+            files.append(path)
+        elif path.is_dir():
+            files.extend(sorted(path.rglob("*.py")))
+    out = []
+    for f in files:
+        rel = f.as_posix()
+        if not config.is_excluded(rel):
+            out.append(f)
+    return out
+
+
+def analyze(paths, config, *, jaxpr: bool, ast_rules: bool = True) -> Report:
+    report = Report()
+    if ast_rules:
+        modules: list[Module] = []
+        for f in discover(paths, config):
+            rel = f.as_posix()
+            try:
+                tree = ast.parse(f.read_text(), filename=rel)
+            except SyntaxError as e:
+                report.findings.append(Finding(
+                    rule="PARSE", path=rel, line=e.lineno or 1,
+                    message=f"syntax error: {e.msg}", severity=ERROR))
+                continue
+            modules.append(Module(path=rel, tree=tree))
+        report.files_scanned = len(modules)
+        report.findings.extend(run_rules(modules, config))
+    if jaxpr:
+        from .jaxpr_pass import run_jaxpr_pass
+        report.jaxpr = run_jaxpr_pass()
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.staticcheck",
+        description="flashcheck: AST+jaxpr contract analyzer for the "
+                    "Flash-Inference serving invariants (FC001-FC006)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to scan (default: {DEFAULT_PATHS})")
+    ap.add_argument("--baseline", default="staticcheck.toml",
+                    help="suppression file (default: ./staticcheck.toml)")
+    ap.add_argument("--fail-on-warn", action="store_true",
+                    help="exit 1 on WARN findings too (CI mode)")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH", help="write the JSON report to PATH "
+                    "('-' or no value = stdout)")
+    ap.add_argument("--jaxpr", action="store_true",
+                    help="also trace the registered hot entry points and "
+                    "verify donation / cond-free / rng-split contracts")
+    ap.add_argument("--jaxpr-only", action="store_true",
+                    help="run only the jaxpr pass (forced-device CI legs)")
+    args = ap.parse_args(argv)
+
+    try:
+        config = load_config(args.baseline)
+    except (ValueError, KeyError) as e:
+        print(f"staticcheck: config error: {e}", file=sys.stderr)
+        return 2
+
+    paths = args.paths or list(DEFAULT_PATHS)
+    report = analyze(paths, config,
+                     jaxpr=args.jaxpr or args.jaxpr_only,
+                     ast_rules=not args.jaxpr_only)
+
+    for f in report.findings:
+        print(f.render())
+    for entry in report.jaxpr:
+        status = "ok" if entry["ok"] else "FAIL"
+        mesh = f" mesh={entry['mesh']}" if entry["mesh"] else ""
+        print(f"jaxpr {status}: {entry['entry']} "
+              f"[{entry['devices']} device(s){mesh}]")
+        for c in entry["checks"]:
+            if not c["ok"]:
+                print(f"    {c['name']}: expected {c['expected']!r}, "
+                      f"got {c['actual']!r}")
+
+    counts = report.counts()
+    print(f"flashcheck: {report.files_scanned} files, "
+          f"{counts['findings']} finding(s), "
+          f"{counts['suppressed']} suppressed, "
+          f"{counts['jaxpr_entry_points']} jaxpr entry point(s), "
+          f"{counts['jaxpr_failures']} jaxpr failure(s)")
+
+    if args.json is not None:
+        payload = json.dumps(report.to_dict(), indent=2, sort_keys=True)
+        if args.json == "-":
+            print(payload)
+        else:
+            Path(args.json).write_text(payload + "\n")
+            print(f"flashcheck: JSON report -> {args.json}")
+
+    return 1 if report.failed(args.fail_on_warn) else 0

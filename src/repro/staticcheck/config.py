@@ -1,0 +1,86 @@
+"""staticcheck.toml — baseline/suppression file for flashcheck.
+
+Suppressions are DOCUMENTED exceptions, matched by (rule, path, symbol)
+rather than line numbers so they survive unrelated edits:
+
+    [[suppress]]
+    rule   = "FC003"
+    path   = "src/repro/models/gla.py"
+    symbol = "logits"          # enclosing function; "*" = whole file
+    reason = "why this site is exempt (required)"
+
+``[analyzer]`` holds run options:
+
+    [analyzer]
+    exclude = ["tests/fixtures/staticcheck"]   # path prefixes to skip
+
+Every suppression must carry a non-empty ``reason`` — an empty reason is
+itself a config error (the point of the file is the justification).
+"""
+
+from __future__ import annotations
+
+import fnmatch
+from dataclasses import dataclass, field
+from pathlib import Path
+
+try:  # Python 3.11+
+    import tomllib as _toml
+except ImportError:  # pragma: no cover — 3.10 container
+    import tomli as _toml  # type: ignore[no-redef]
+
+
+@dataclass(frozen=True)
+class Suppression:
+    rule: str
+    path: str      # repo-relative posix path or glob
+    symbol: str    # enclosing function name, "*" matches any
+    reason: str
+
+    def matches(self, rule: str, path: str, symbol: str) -> bool:
+        if self.rule != rule:
+            return False
+        if not (path == self.path or fnmatch.fnmatch(path, self.path)):
+            return False
+        return self.symbol == "*" or self.symbol == symbol
+
+
+@dataclass
+class Config:
+    suppressions: list[Suppression] = field(default_factory=list)
+    exclude: list[str] = field(default_factory=list)
+
+    def suppression_for(self, rule: str, path: str, symbol: str) -> str:
+        """Reason string of the first matching suppression, else ''."""
+        for s in self.suppressions:
+            if s.matches(rule, path, symbol):
+                return s.reason
+        return ""
+
+    def is_excluded(self, rel_path: str) -> bool:
+        return any(rel_path == e or rel_path.startswith(e.rstrip("/") + "/")
+                   or fnmatch.fnmatch(rel_path, e) for e in self.exclude)
+
+
+def load_config(path: str | Path | None) -> Config:
+    """Load staticcheck.toml (missing file = empty config)."""
+    if path is None:
+        return Config()
+    p = Path(path)
+    if not p.exists():
+        return Config()
+    with open(p, "rb") as fh:
+        raw = _toml.load(fh)
+    sups = []
+    for ent in raw.get("suppress", []):
+        reason = ent.get("reason", "").strip()
+        if not reason:
+            raise ValueError(
+                f"staticcheck.toml suppression for {ent.get('rule')} at "
+                f"{ent.get('path')} has no reason — document the exception")
+        sups.append(Suppression(
+            rule=ent["rule"], path=ent["path"],
+            symbol=ent.get("symbol", "*"), reason=reason))
+    analyzer = raw.get("analyzer", {})
+    return Config(suppressions=sups,
+                  exclude=list(analyzer.get("exclude", [])))

@@ -1,0 +1,90 @@
+"""Structured findings for the flashcheck contract analyzer.
+
+A finding pins one violation of a repo contract to a (file, line) and
+carries the rule id, a one-line message, and a fix hint — enough for a
+developer to act without re-deriving the contract from CHANGES.md.  The
+same records serialize to the ``--json`` report so finding counts can be
+pinned like BENCH artifacts.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+# Severities: "error" findings fail the run; "warn" findings fail only
+# under --fail-on-warn (the CI lint leg runs with it, so the distinction
+# only matters for local incremental runs).
+ERROR = "error"
+WARN = "warn"
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str            # "FC001" .. "FC006" or "JX..." for jaxpr checks
+    path: str            # repo-relative posix path
+    line: int            # 1-based
+    message: str
+    hint: str = ""
+    symbol: str = ""     # enclosing function/method name ("" = module scope)
+    severity: str = ERROR
+    suppressed_by: str = ""  # reason from staticcheck.toml, "" = live
+
+    @property
+    def suppressed(self) -> bool:
+        return bool(self.suppressed_by)
+
+    def render(self) -> str:
+        where = f"{self.path}:{self.line}"
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        sup = f"  (suppressed: {self.suppressed_by})" if self.suppressed else ""
+        hint = f"\n    hint: {self.hint}" if self.hint and not self.suppressed else ""
+        return f"{where}: {self.rule} {self.severity}{sym}: {self.message}{sup}{hint}"
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule, "path": self.path, "line": self.line,
+            "symbol": self.symbol, "severity": self.severity,
+            "message": self.message, "hint": self.hint,
+            "suppressed": self.suppressed, "suppressed_by": self.suppressed_by,
+        }
+
+
+@dataclass
+class Report:
+    """One analyzer run: AST findings + jaxpr entry-point verdicts."""
+
+    findings: list[Finding] = field(default_factory=list)
+    jaxpr: list[dict] = field(default_factory=list)  # per-entry-point verdicts
+    files_scanned: int = 0
+
+    def live(self) -> list[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    def failed(self, fail_on_warn: bool) -> bool:
+        sev = {ERROR} if not fail_on_warn else {ERROR, WARN}
+        if any(f.severity in sev for f in self.live()):
+            return True
+        return any(not e["ok"] for e in self.jaxpr)
+
+    def counts(self) -> dict:
+        by_rule: dict[str, int] = {}
+        for f in self.live():
+            by_rule[f.rule] = by_rule.get(f.rule, 0) + 1
+        return {
+            "files_scanned": self.files_scanned,
+            "findings": len(self.live()),
+            "suppressed": sum(1 for f in self.findings if f.suppressed),
+            "by_rule": dict(sorted(by_rule.items())),
+            "jaxpr_entry_points": len(self.jaxpr),
+            "jaxpr_failures": sum(1 for e in self.jaxpr if not e["ok"]),
+        }
+
+    def to_dict(self) -> dict:
+        return {
+            "tool": "flashcheck",
+            "counts": self.counts(),
+            "findings": [f.to_dict() for f in sorted(
+                self.findings, key=lambda f: (f.path, f.line, f.rule))],
+            "jaxpr": self.jaxpr,
+        }

@@ -1,0 +1,218 @@
+"""Jaxpr-level contract verification of the registered hot entry points.
+
+The AST rules catch the *source* shape of a violation; this pass checks
+the contracts where they actually bind — in the traced program:
+
+  * **donation aliasing** — every donated state leaf must alias an output
+    buffer in the lowered StableHLO (``tf.aliasing_output``).  Donation
+    silently degrades to a copy when output shardings or shapes drift
+    from the input, so counting the attrs is the only reliable check.
+  * **cond-free batched dispatch** — no ``cond`` primitive anywhere in
+    the jaxpr of a batched-dispatch chunk (the retired reference ladder
+    must remain the ONLY source of ``cond``; it is traced here too, as a
+    positive control that the counter sees conds at all).
+  * **one rng split per emitted step** — a K-step chunk must contain
+    exactly K ``random_split`` equations: a missing split reuses a key
+    across steps (correlated sampling), an extra one desyncs the
+    chunked path from the per-step reference stream.
+
+Entry points registered (the serving hot surface):
+
+  FlashEngine.decode_chunk         (lockstep fused chunk)
+  FlashEngine.server_chunk         (per-slot fused chunk, batched)
+  FlashEngine.prefill_slot         (admission prefill)
+  GenericFlashEngine.server_chunk  (generic "and Beyond" serving chunk)
+  GenericFlashEngine.prefill_slot
+
+Each entry is traced with tiny-model abstract inputs under the current
+device config; with >= 4 devices the LCSM engine is additionally built on
+a 4-way data mesh (donation and cond behavior are mesh-sensitive — the
+whole point of the batched dispatch refactor).
+"""
+
+from __future__ import annotations
+
+import functools
+
+K_STEPS = 4          # fused steps per traced chunk
+_SIDES = (1, 2, 1, 0)  # a valid lockstep segment: lowbit tiles + final step
+
+
+def _count_primitives(jaxpr, names: set[str]) -> dict[str, int]:
+    """Recursive primitive census over a (Closed)Jaxpr, descending into
+    every sub-jaxpr carried in eqn params (pjit bodies, cond branches,
+    scan/while carries)."""
+    counts = {n: 0 for n in names}
+
+    def visit(jx) -> None:
+        inner = getattr(jx, "jaxpr", jx)  # ClosedJaxpr -> Jaxpr
+        for eq in inner.eqns:
+            name = eq.primitive.name
+            if name in counts:
+                counts[name] += 1
+            for val in eq.params.values():
+                for sub in _subjaxprs(val):
+                    visit(sub)
+    visit(jaxpr)
+    return counts
+
+
+def _subjaxprs(val):
+    import jax.core as core
+    if isinstance(val, (core.ClosedJaxpr, core.Jaxpr)):
+        yield val
+    elif isinstance(val, (tuple, list)):
+        for v in val:
+            yield from _subjaxprs(v)
+
+
+def _check(name: str, expected, actual) -> dict:
+    return {"name": name, "expected": expected, "actual": actual,
+            "ok": expected == actual}
+
+
+def _verdict(entry: str, fn, args, *, n_donated: int, splits: int,
+             mesh: str | None, extra_checks=()) -> dict:
+    """Trace + lower ``fn`` on ``args`` and evaluate the three contracts."""
+    import jax
+
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    prims = _count_primitives(jaxpr, {"cond", "random_split"})
+    txt = fn.lower(*args).as_text()
+    # Unsharded lowerings resolve donation to input/output aliases
+    # (tf.aliasing_output); sharded lowerings defer the pairing to the
+    # compiler and mark donors instead (jax.buffer_donor).  Either way
+    # every donated state leaf must carry exactly one marker.
+    checks = [
+        _check("donation_aliasing", n_donated,
+               txt.count("tf.aliasing_output")
+               + txt.count("jax.buffer_donor")),
+        _check("cond_free", 0, prims["cond"]),
+        _check("one_split_per_step", splits, prims["random_split"]),
+    ]
+    checks.extend(extra_checks)
+    return {"entry": entry, "devices": jax.device_count(), "mesh": mesh,
+            "checks": checks, "ok": all(c["ok"] for c in checks)}
+
+
+def _tiny_flash_engine(mesh=None):
+    import jax
+
+    from repro.core.engine import FlashEngine
+    from repro.models.synthetic_lcsm import SyntheticLCSM
+
+    model = SyntheticLCSM(n_levels=2, d_model=8)
+    params = model.init(jax.random.PRNGKey(0))
+    kw = {"mesh": mesh} if mesh is not None else {}
+    return FlashEngine(model, params, batch=4, gen_max=16, prompt_max=4,
+                       **kw)
+
+
+def _tiny_generic_engine():
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.generic import GenericFlashEngine
+    from repro.models.gla import GLALM
+
+    cfg = dataclasses.replace(
+        get_config("gla").smoke(), name="gla-staticcheck",
+        n_layers=2, d_model=16, d_ff=32, vocab=64, gla_dk=4, gla_dv=8)
+    model = GLALM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return GenericFlashEngine(model, params, batch=4, gen_max=16,
+                              prompt_max=4)
+
+
+def _entry_args(eng):
+    """(state, pv, origin, live, rng, prompt) argument pack for tracing."""
+    import jax
+    import jax.numpy as jnp
+
+    state = eng.init_state()
+    pv = jnp.zeros((eng.batch,), jnp.int32)
+    live = jnp.ones((eng.batch,), bool)
+    rng = jax.random.PRNGKey(0)
+    # prefill takes the EMBEDDED prompt (1, P, D) — mirror the serving
+    # backends' admission path (model.embed_tokens where the model has a
+    # token embedding; the synthetic LCSM feeds activations directly).
+    if hasattr(eng.model, "embed_tokens"):
+        prompt = eng.model.embed_tokens(eng.params,
+                                        jnp.zeros((1, 4), jnp.int32))
+    else:
+        prompt = jnp.zeros((1, 4, eng.model.d), jnp.float32)
+    return state, pv, live, rng, prompt
+
+
+def _run_engine_entries(eng, prefix: str, mesh_name: str | None,
+                        include_decode: bool) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+
+    out = []
+    state, pv, live, rng, prompt = _entry_args(eng)
+    n_leaves = len(jax.tree.leaves(state))
+
+    if include_decode:
+        # Populate the segment-keyed cache through the public surface, then
+        # verify the cached program — proves the REGISTERED donate spec.
+        st = eng.init_state()
+        donated_ref = jax.tree.leaves(st)
+        eng.decode_chunk(st, 0, rng, _SIDES)
+        fn = eng._jit_chunk[_SIDES]
+        # Runtime proof on top of the lowering attrs: the concrete call
+        # above must actually have freed the donated input buffers.
+        extra = [_check("donated_buffer_deleted", True,
+                        all(leaf.is_deleted() for leaf in donated_ref))]
+        out.append(_verdict(
+            f"{prefix}.decode_chunk", fn, (eng.params, state, pv, rng),
+            n_donated=n_leaves, splits=len(_SIDES), mesh=mesh_name,
+            extra_checks=extra))
+
+    eng.server_chunk(eng.init_state(), pv, pv, live, rng, K_STEPS,
+                     dispatch="batched")
+    fn = eng._jit_server_chunk[(K_STEPS, "batched")]
+    extra = []
+    if prefix == "FlashEngine":
+        # Positive control: the retired ladder must still SHOW conds, or
+        # the cond counter proves nothing.
+        ref = jax.jit(functools.partial(eng._server_chunk_impl, K=K_STEPS,
+                                        dispatch="reference"))
+        ref_jaxpr = jax.make_jaxpr(ref)(
+            eng.params, state, pv, pv, live, rng)
+        n_cond = _count_primitives(ref_jaxpr, {"cond"})["cond"]
+        extra.append(_check("reference_ladder_has_conds", True, n_cond > 0))
+    out.append(_verdict(
+        f"{prefix}.server_chunk[batched]", fn,
+        (eng.params, state, pv, pv, live, rng),
+        n_donated=n_leaves, splits=K_STEPS, mesh=mesh_name,
+        extra_checks=extra))
+
+    plen = jnp.asarray(4, jnp.int32)
+    slot = jnp.asarray(0, jnp.int32)
+    out.append(_verdict(
+        f"{prefix}.prefill_slot", eng._jit_prefill_slot,
+        (eng.params, state, slot, prompt, plen, rng),
+        n_donated=n_leaves, splits=0, mesh=mesh_name))
+    return out
+
+
+def run_jaxpr_pass() -> list[dict]:
+    """Trace every registered entry point under the current device config.
+    Returns one verdict dict per (entry, mesh config)."""
+    import jax
+
+    out: list[dict] = []
+    out += _run_engine_entries(_tiny_flash_engine(), "FlashEngine",
+                               None, include_decode=True)
+    out += _run_engine_entries(_tiny_generic_engine(), "GenericFlashEngine",
+                               None, include_decode=False)
+    if jax.device_count() >= 4:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(data=4)
+        out += _run_engine_entries(_tiny_flash_engine(mesh=mesh),
+                                   "FlashEngine", "data4",
+                                   include_decode=True)
+    return out

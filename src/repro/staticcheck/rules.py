@@ -1,0 +1,453 @@
+"""FC001–FC006: the AST-level contracts flashcheck enforces.
+
+Each rule encodes an invariant a shipped PR learned the hard way
+(CHANGES.md is the provenance trail):
+
+  FC001  use-after-donate              (PR 2: bench_tokentime donation)
+  FC002  mixed-dtype dynamic_slice starts (PR 3: x64 int32/int64 mixes)
+  FC003  dot/einsum/@ in mul+sum-pinned mixer modules (PR 4: GLA bit-identity)
+  FC004  lax.cond reachable from hot dispatch (PR 6: cond-ladder retirement)
+  FC005  unbounded dict-keyed jit caches (PR 5: prompt-length retrace blowup)
+  FC006  global config toggles at test import scope (PR 3: x64 leak)
+
+Rules favor a LOW false-positive bias: an unresolvable expression is
+skipped, not flagged — the fixture corpus in tests/fixtures/staticcheck
+pins exactly what each rule must and must not catch.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+
+from .astutil import (
+    CallGraph,
+    FuncInfo,
+    TaintLite,
+    assigned_names,
+    callee_names,
+    dotted_name,
+    enclosing_loops,
+    enclosing_stmt,
+    index_functions,
+    last_segment,
+    loads_of,
+)
+from .config import Config
+from .findings import ERROR, WARN, Finding
+
+# --- FC001: engine/walker methods that donate their call-arg-0 state.
+# Matched on ATTRIBUTE calls only (eng.decode_chunk(...)) — the launch/
+# lcsm_steps pure functions reuse some of these names without donating.
+DONATING_METHODS = {
+    "decode_chunk", "server_chunk", "prefill_slot", "tiles_step",
+    "red_step", "lazy_step", "eager_step", "gray_step", "import_slot_rows",
+}
+# _schedule_step(params, state, pv, rng, ...) threads state into the
+# donated per-piece jits — its state arg is consumed just the same.
+DONATING_METHOD_ARGS = {name: (0,) for name in DONATING_METHODS}
+DONATING_METHOD_ARGS["_schedule_step"] = (1,)
+
+# --- FC002: lax slicing family -> positional index of the starts tuple.
+SLICE_STARTS_ARG = {"dynamic_slice": 1, "dynamic_update_slice": 2}
+
+# --- FC003: modules whose contractions are pinned to mul+sum.
+MIXER_PINNED = ("src/repro/models/gla.py", "src/repro/core/generic.py")
+CONTRACTION_CALLS = {"einsum", "dot", "dot_general", "matmul",
+                     "tensordot", "vdot"}
+
+# --- FC004 roots / whitelist.
+FC004_ROOTS = ["server_chunk", "decode_chunk",
+               "_server_chunk_impl", "_decode_chunk_impl"]
+FC004_WHITELIST = {"_server_tiles_reference"}
+
+# --- FC005: cache-dict naming + key normalizers that prove boundedness.
+CACHE_NAME_RE = re.compile(r"^_jit|cache", re.IGNORECASE)
+BOUNDED_KEY_CALLS = {"tuple", "int", "bool", "str", "min", "max", "len",
+                     "frozenset", "ceil_pow2", "largest_pow2_divisor",
+                     "schedule_segment"}
+
+
+@dataclass
+class Module:
+    path: str          # repo-relative posix path
+    tree: ast.Module
+
+
+def own_nodes(root: ast.AST):
+    """Descendants of ``root`` without entering nested def/class scopes
+    (lambdas and comprehensions stay — they share the enclosing frame)."""
+    stack = list(ast.iter_child_nodes(root))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _scopes(mod: Module) -> list[FuncInfo]:
+    """Every function plus a pseudo-scope for module-level statements."""
+    return index_functions(mod.tree, mod.path) + [
+        FuncInfo("", "<module>", mod.tree, mod.path)]
+
+
+def _own_assigns(scope: ast.AST) -> dict[str, ast.expr]:
+    """name -> last assigned value expr within the scope (one-hop lookup)."""
+    out: dict[str, ast.expr] = {}
+    for node in own_nodes(scope):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            out[node.targets[0].id] = node.value
+    return out
+
+
+def _jit_table(mod: Module) -> dict[str, tuple[int, ...]]:
+    """last-segment name -> donated arg indices, inferred from
+    ``X = jax.jit(fn, donate_argnums=(...))`` assignments (literal tuples
+    or single int literals only; dynamic donate specs are skipped)."""
+    table: dict[str, tuple[int, ...]] = {}
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        call = node.value
+        if not (isinstance(call, ast.Call)
+                and last_segment(dotted_name(call.func)) in ("jit", "pjit")):
+            continue
+        idxs: tuple[int, ...] = ()
+        for kw in call.keywords:
+            if kw.arg != "donate_argnums":
+                continue
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                idxs = (v.value,)
+            elif isinstance(v, (ast.Tuple, ast.List)) and all(
+                    isinstance(e, ast.Constant) and isinstance(e.value, int)
+                    for e in v.elts):
+                idxs = tuple(e.value for e in v.elts)
+        if not idxs:
+            continue
+        for tgt in node.targets:
+            seg = last_segment(dotted_name(tgt))
+            if seg:
+                table[seg] = idxs
+    return table
+
+
+class Checker:
+    """Runs the per-file rules over one module and FC004 over the set."""
+
+    def __init__(self, config: Config):
+        self.config = config
+        self.findings: list[Finding] = []
+
+    def emit(self, rule: str, mod_path: str, node: ast.AST, symbol: str,
+             message: str, hint: str, severity: str = ERROR) -> None:
+        reason = self.config.suppression_for(rule, mod_path, symbol or "*")
+        self.findings.append(Finding(
+            rule=rule, path=mod_path, line=getattr(node, "lineno", 1),
+            message=message, hint=hint, symbol=symbol, severity=severity,
+            suppressed_by=reason))
+
+    # ------------------------------------------------------------ FC001
+    def fc001(self, mod: Module) -> None:
+        jit_table = _jit_table(mod)
+        for fi in _scopes(mod):
+            for call in own_nodes(fi.node):
+                if not isinstance(call, ast.Call):
+                    continue
+                donated: set[int] = set()
+                callee = ""
+                for cand in callee_names(call):
+                    seg = last_segment(cand) or ""
+                    if seg in jit_table:
+                        donated.update(jit_table[seg])
+                        callee = callee or cand
+                    if "." in cand and seg in DONATING_METHOD_ARGS:
+                        donated.update(DONATING_METHOD_ARGS[seg])
+                        callee = callee or cand
+                if not donated:
+                    continue
+                stmt = enclosing_stmt(fi.node, call)
+                if stmt is None:
+                    continue
+                for idx in sorted(donated):
+                    if idx >= len(call.args):
+                        continue
+                    name = dotted_name(call.args[idx])
+                    if name is None or name == "self":
+                        continue
+                    self._check_donated_use(mod, fi, call, stmt, callee, name)
+
+    def _check_donated_use(self, mod: Module, fi: FuncInfo, call: ast.Call,
+                           stmt: ast.stmt, callee: str, name: str) -> None:
+        rebound = any(t == name or name.startswith(t + ".")
+                      for t in assigned_names(stmt))
+        if rebound:
+            return
+        call_end = stmt.end_lineno or stmt.lineno
+        binds = []
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.stmt) and node is not stmt:
+                if any(t == name or name.startswith(t + ".")
+                       for t in assigned_names(node)):
+                    binds.append(node.end_lineno or node.lineno)
+        loads = [n for n in loads_of(fi.node, name)
+                 if not (stmt.lineno <= n.lineno <= call_end)]
+        first_rebind = min((b for b in binds if b > call_end), default=None)
+        dangerous = [n for n in loads if n.lineno > call_end
+                     and (first_rebind is None or n.lineno < first_rebind)]
+        # Inside a loop the donation wraps around: a read ABOVE the call is
+        # next iteration's read of the deleted buffer unless some bind
+        # intervenes (after the call, or between loop top and the read).
+        for loop in enclosing_loops(fi.node, stmt):
+            lo, hi = loop.lineno, loop.end_lineno or loop.lineno
+            loop_binds = [b for b in binds if lo <= b <= hi]
+            for n in loads:
+                if lo <= n.lineno <= call_end and not any(
+                        b > call_end or b < n.lineno for b in loop_binds):
+                    dangerous.append(n)
+        if not dangerous:
+            return
+        worst = min(dangerous, key=lambda n: (n.lineno, n.col_offset))
+        self.emit(
+            "FC001", mod.path, worst, fi.name,
+            f"'{name}' is read after being donated to {callee}() — "
+            f"XLA deletes donated buffers, so this read sees freed memory",
+            f"rebind from the call result: `{name}, ... = {callee}(...)` "
+            f"(donation threads state linearly; CHANGES.md PR 2)")
+
+    # ------------------------------------------------------------ FC002
+    def fc002(self, mod: Module) -> None:
+        for fi in _scopes(mod):
+            taint = TaintLite(fi.node)
+            assigns = _own_assigns(fi.node)
+            for call in own_nodes(fi.node):
+                if not isinstance(call, ast.Call):
+                    continue
+                seg = last_segment(dotted_name(call.func))
+                if seg not in SLICE_STARTS_ARG:
+                    continue
+                pos = SLICE_STARTS_ARG[seg]
+                starts = None
+                if len(call.args) > pos:
+                    starts = call.args[pos]
+                else:
+                    for kw in call.keywords:
+                        if kw.arg == "start_indices":
+                            starts = kw.value
+                elems = _flatten_starts(starts, assigns)
+                if not elems or len(elems) < 2:
+                    continue
+                lits = [e for e in elems if isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)]
+                traced = [e for e in elems if taint.expr_suspect(e)]
+                if traced and (lits or len(traced) < len(elems)):
+                    self.emit(
+                        "FC002", mod.path, call, fi.name,
+                        f"{seg} start tuple mixes Python-int and traced-int "
+                        f"elements — JAX_ENABLE_X64 promotes the host ints "
+                        f"to int64 and lax rejects the int32/int64 mix",
+                        "route the tuple through a starts() helper that "
+                        "casts every element to the traced index dtype "
+                        "(core/schedule.py:starts, launch/lcsm_steps.py:"
+                        "_starts; CHANGES.md PR 3)")
+
+    # ------------------------------------------------------------ FC003
+    def fc003(self, mod: Module) -> None:
+        if mod.path not in MIXER_PINNED:
+            return
+        for fi in _scopes(mod):
+            for node in own_nodes(fi.node):
+                what = None
+                if (isinstance(node, ast.Call)
+                        and last_segment(dotted_name(node.func))
+                        in CONTRACTION_CALLS):
+                    what = last_segment(dotted_name(node.func))
+                elif isinstance(node, ast.BinOp) and isinstance(
+                        node.op, ast.MatMult):
+                    what = "@"
+                if what is None:
+                    continue
+                self.emit(
+                    "FC003", mod.path, node, fi.name,
+                    f"{what} contraction in a mul+sum-pinned mixer module — "
+                    f"XLA lowers small dots differently per fusion context, "
+                    f"breaking chunked-vs-stepwise bit-identity",
+                    "rewrite as an elementwise product + sum over the "
+                    "contracted axis: (a * b).sum(-1) (CHANGES.md PR 4)")
+
+    # ------------------------------------------------------------ FC004
+    def fc004(self, modules: list[Module]) -> None:
+        graph = CallGraph.build([(m.path, m.tree) for m in modules])
+        reach = graph.reach(FC004_ROOTS, FC004_WHITELIST)
+        seen: set[tuple[str, int]] = set()
+        for name in sorted(reach):
+            for fi in graph.funcs.get(name, []):
+                for node in ast.walk(fi.node):
+                    if not _is_lax_cond(node):
+                        continue
+                    key = (fi.path, node.lineno)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    chain = " -> ".join(reach[name])
+                    self.emit(
+                        "FC004", fi.path, node, fi.name,
+                        f"lax.cond reachable from hot dispatch ({chain}) — "
+                        f"data-dependent branching serializes the GSPMD "
+                        f"schedule and reintroduces the per-side ladder",
+                        "mask-select with jnp.where / batched gather-scatter "
+                        "(_server_tiles_batched); only the whitelisted "
+                        "_server_tiles_reference keeps a cond ladder "
+                        "(CHANGES.md PR 6)")
+
+    # ------------------------------------------------------------ FC005
+    def fc005(self, mod: Module) -> None:
+        for fi in _scopes(mod):
+            assigns = _own_assigns(fi.node)
+            for node in own_nodes(fi.node):
+                if not (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Subscript)):
+                    continue
+                base = last_segment(dotted_name(node.targets[0].value))
+                if base is None or not CACHE_NAME_RE.search(base):
+                    continue
+                if _key_bounded(node.targets[0].slice, assigns):
+                    continue
+                self.emit(
+                    "FC005", mod.path, node, fi.name,
+                    f"cache dict '{base}' written under a key not proven "
+                    f"bounded — per-key jit programs accumulate for the "
+                    f"process lifetime",
+                    "normalize the key to a bounded domain (pow2 bucket via "
+                    "ceil_pow2, canonical schedule_segment tuple) or add a "
+                    "documented staticcheck.toml suppression "
+                    "(CHANGES.md PR 5)", severity=WARN)
+        # The memoization-decorator arm only polices production code: an
+        # unbounded lru_cache on a 0-arg test fixture is trivially bounded.
+        if not mod.path.startswith("src/"):
+            return
+        for fi in index_functions(mod.tree, mod.path):
+            args = getattr(fi.node, "args", None)
+            if args is None or not (args.posonlyargs + args.args
+                                    + args.kwonlyargs):
+                continue
+            for dec in getattr(fi.node, "decorator_list", []):
+                if _is_unbounded_lru(dec):
+                    self.emit(
+                        "FC005", mod.path, dec, fi.name,
+                        "functools cache with maxsize=None memoizes an "
+                        "unbounded key domain",
+                        "bound the domain (or suppress with a reason "
+                        "documenting why the key set is finite)",
+                        severity=WARN)
+
+    # ------------------------------------------------------------ FC006
+    def fc006(self, mod: Module) -> None:
+        if not mod.path.startswith("tests/"):
+            return
+        for node in own_nodes(mod.tree):
+            bad = None
+            if isinstance(node, ast.Call):
+                dn = dotted_name(node.func) or ""
+                if dn.endswith("config.update"):
+                    bad = f"{dn}(...)"
+                elif (dn.endswith("environ.setdefault")
+                      and _env_key_is_jax(node.args[:1])):
+                    bad = f"{dn}(...)"
+            elif (isinstance(node, ast.Assign)
+                  and len(node.targets) == 1
+                  and isinstance(node.targets[0], ast.Subscript)
+                  and (dotted_name(node.targets[0].value) or ""
+                       ).endswith("environ")
+                  and _env_key_is_jax([node.targets[0].slice])):
+                bad = "os.environ[...] write"
+            if bad is None:
+                continue
+            self.emit(
+                "FC006", mod.path, node, "",
+                f"{bad} at module import scope in tests/ — the toggle leaks "
+                f"into every other collected test module (x64 flips flushed "
+                f"a whole-suite dtype break in PR 3)",
+                "scope it in a fixture with teardown, or run the variant in "
+                "a subprocess (tests/test_core_tiling.py pattern)")
+
+
+def _flatten_starts(expr, assigns: dict[str, ast.expr],
+                    depth: int = 0) -> list[ast.expr] | None:
+    """Element list of a starts tuple, through one Name hop and through
+    the ``(a, b) + (0,) * k`` concat/repeat idioms.  None = unresolvable
+    (skip — low-FP bias)."""
+    if expr is None or depth > 4:
+        return None
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return list(expr.elts)
+    if isinstance(expr, ast.Name) and expr.id in assigns:
+        return _flatten_starts(assigns[expr.id], assigns, depth + 1)
+    if isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Add):
+        left = _flatten_starts(expr.left, assigns, depth + 1)
+        right = _flatten_starts(expr.right, assigns, depth + 1)
+        if left is None or right is None:
+            return None
+        return left + right
+    if isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Mult):
+        return _flatten_starts(expr.left, assigns, depth + 1)
+    return None
+
+
+def _key_bounded(expr, assigns: dict[str, ast.expr], depth: int = 0) -> bool:
+    if depth > 3:
+        return False
+    if isinstance(expr, ast.Constant):
+        return True
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return all(_key_bounded(e, assigns, depth + 1) for e in expr.elts)
+    if isinstance(expr, ast.Call):
+        return last_segment(dotted_name(expr.func)) in BOUNDED_KEY_CALLS
+    if isinstance(expr, ast.Name) and expr.id in assigns:
+        return _key_bounded(assigns[expr.id], assigns, depth + 1)
+    return False
+
+
+def _is_lax_cond(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    return (isinstance(f, ast.Attribute) and f.attr == "cond"
+            and dotted_name(f.value) in ("lax", "jax.lax"))
+
+
+def _is_unbounded_lru(dec: ast.AST) -> bool:
+    if isinstance(dec, ast.Call):
+        seg = last_segment(dotted_name(dec.func))
+        if seg == "lru_cache":
+            for kw in dec.keywords:
+                if (kw.arg == "maxsize" and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is None):
+                    return True
+            return False
+    return last_segment(dotted_name(dec)) == "cache" and isinstance(
+        dec, ast.Attribute) and "functools" in (dotted_name(dec) or "")
+
+
+def _env_key_is_jax(exprs) -> bool:
+    for e in exprs:
+        if isinstance(e, ast.Constant) and isinstance(e.value, str):
+            return e.value.startswith(("JAX_", "XLA_"))
+    return False
+
+
+def run_rules(modules: list[Module], config: Config) -> list[Finding]:
+    chk = Checker(config)
+    for mod in modules:
+        chk.fc001(mod)
+        chk.fc002(mod)
+        chk.fc003(mod)
+        chk.fc005(mod)
+        chk.fc006(mod)
+    chk.fc004(modules)
+    chk.findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return chk.findings

@@ -9,7 +9,7 @@ ShapeDtypeStructs.  One function, three consumers — no divergence.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,22 @@
+"""FC001 use-after-donate: every marked line reads a donated buffer."""
+import jax
+
+
+def use_after_donate(eng, state, rng):
+    new_state, tok = eng.decode_chunk(state, 0, rng, (1, 2))
+    return state.a[0] + tok, new_state  # FC001
+
+
+def loop_wraparound(eng, state0, rng):
+    state = state0
+    total = None
+    for i in range(4):
+        total = state.pos + i  # FC001
+        eng.red_step(state, i, rng)
+    return total
+
+
+def jit_table_inferred(fn, params, state, rng):
+    step = jax.jit(fn, donate_argnums=(1,))
+    out = step(params, state, rng)
+    return out, state.b  # FC001

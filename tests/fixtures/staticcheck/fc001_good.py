@@ -1,0 +1,32 @@
+"""FC001 clean twins: donated state is always rebound before any read."""
+import jax
+
+
+def rebind(eng, state, rng):
+    state, tok = eng.decode_chunk(state, 0, rng, (1, 2))
+    return state.a[0] + tok
+
+
+def loop_threaded(eng, state, rng):
+    toks = []
+    for i in range(4):
+        state, tok = eng.red_step(state, i, rng)
+        toks.append(tok)
+    return state, toks
+
+
+def jit_rebound(fn, params, state, rng):
+    step = jax.jit(fn, donate_argnums=(1,))
+    state, out = step(params, state, rng)
+    return state.b + out
+
+
+def free_function_same_name(params, streams, b, pos, rho0):
+    # Plain-name call to a pure function reusing a registry method name
+    # (the launch/lcsm_steps idiom) — does NOT donate.
+    streams2, b2, tok = red_step(params, streams, b, pos, rho0)
+    return streams.shape, streams2, b2, tok
+
+
+def red_step(params, streams, b, pos, rho0):
+    return streams, b, 0

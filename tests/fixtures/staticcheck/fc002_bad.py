@@ -1,0 +1,15 @@
+"""FC002: dynamic_slice-family start tuples mixing host and traced ints."""
+import jax
+
+
+def mixed_literal_and_traced(x, pos):
+    return jax.lax.dynamic_slice(x, (0, pos), (1, 4))  # FC002
+
+
+def mixed_host_attr_and_traced(x, pos, spec):
+    start = (spec.conv_start, pos)
+    return jax.lax.dynamic_slice(x, start, (1, 4))  # FC002
+
+
+def update_concat_mixed(buf, val, q):
+    return jax.lax.dynamic_update_slice(buf, val, (0, q) + (0,) * 2)  # FC002

@@ -1,0 +1,25 @@
+"""FC002 clean twins: the hardened start-tuple idioms."""
+import jax
+import jax.numpy as jnp
+
+
+def _starts(pos, *parts):
+    dt = jnp.asarray(pos).dtype
+    return tuple(jnp.asarray(p, dt) for p in parts)
+
+
+def helper_routed(x, pos):
+    return jax.lax.dynamic_slice(x, _starts(pos, 0, pos), (1, 1, 4))
+
+
+def all_host(x, spec):
+    B, P, _ = x.shape
+    return jax.lax.dynamic_slice(x, (0, 0, spec.conv_start), (B, P, 4))
+
+
+def all_traced(x, p, q):
+    return jax.lax.dynamic_slice(x, (p, q), (1, 4))
+
+
+def annotated_host_scalar(big, one, slot: int):
+    return jax.lax.dynamic_update_slice(big, one, (0, slot) + (0,) * 2)

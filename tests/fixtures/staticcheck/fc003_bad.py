@@ -1,0 +1,15 @@
+"""FC003: contractions in a mul+sum-pinned mixer module (the test mounts
+this file at a pinned path)."""
+import jax.numpy as jnp
+
+
+def read(s, q):
+    return jnp.einsum("bkd,bk->bd", s, q)  # FC003
+
+
+def cont(a, b):
+    return a @ b  # FC003
+
+
+def agg(h, w):
+    return jnp.dot(h, w)  # FC003

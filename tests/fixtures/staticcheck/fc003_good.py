@@ -1,0 +1,9 @@
+"""FC003 clean twins: the pinned elementwise mul + sum contraction idiom."""
+
+
+def read(s, q):
+    return (s * q[..., None]).sum(axis=1)
+
+
+def cont(a, b):
+    return (a[..., None] * b[:, None, :]).sum(axis=-1)

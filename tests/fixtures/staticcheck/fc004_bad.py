@@ -1,0 +1,15 @@
+"""FC004: lax.cond reachable from a hot-dispatch root."""
+import jax
+
+
+class Walker:
+    def server_chunk(self, state, pv):
+        return self._impl(state, pv)
+
+    def _impl(self, state, pv):
+        for U in (1, 2, 4):
+            state = self._tile(state, pv, U)
+        return state
+
+    def _tile(self, state, pv, U):
+        return jax.lax.cond(pv.any(), lambda s: s + U, lambda s: s, state)  # FC004

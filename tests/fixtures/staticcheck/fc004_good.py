@@ -1,0 +1,25 @@
+"""FC004 clean twins: whitelisted reference ladder + unreachable cond."""
+import jax
+import jax.numpy as jnp
+
+
+class Walker:
+    def server_chunk(self, state, pv):
+        return self._impl(state, pv)
+
+    def _impl(self, state, pv):
+        for U in (1, 2, 4):
+            state = self._server_tiles_reference(state, pv, U)
+        return self._masked(state, pv, 1)
+
+    def _server_tiles_reference(self, state, pv, U):
+        # The whitelisted exactness reference — the ONE place cond lives.
+        return jax.lax.cond(pv.any(), lambda s: s + U, lambda s: s, state)
+
+    def _masked(self, state, pv, U):
+        return jnp.where(pv[:, None] > 0, state + U, state)
+
+
+def offline_tool(state, flag):
+    # cond in a function NOT reachable from any hot-dispatch root.
+    return jax.lax.cond(flag, lambda s: s, lambda s: s * 2, state)

@@ -1,0 +1,22 @@
+"""FC005: jit cache dicts keyed by unbounded values (the test mounts this
+file at a src/ path so the lru_cache arm applies)."""
+import functools
+
+
+class Engine:
+    def __init__(self):
+        self._jit_chunk = {}
+        self._program_cache = {}
+
+    def chunk(self, sides, fn):
+        self._jit_chunk[sides] = fn  # FC005
+        return fn
+
+    def lookup(self, key, fn):
+        self._program_cache[key] = fn  # FC005
+        return fn
+
+
+@functools.lru_cache(maxsize=None)  # FC005
+def compiled(block_t: int):
+    return block_t

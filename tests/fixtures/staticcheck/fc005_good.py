@@ -1,0 +1,26 @@
+"""FC005 clean twins: normalized segment keys, pow2 buckets, bounded memo."""
+import functools
+
+
+def ceil_pow2(x):
+    return 1 << (int(x) - 1).bit_length()
+
+
+class Engine:
+    def __init__(self):
+        self._jit_chunk = {}
+        self._jit_gray = {}
+
+    def chunk(self, sides, fn):
+        sides = tuple(int(u) for u in sides)
+        self._jit_chunk[sides] = fn
+        return fn
+
+    def gray(self, U, fn):
+        self._jit_gray[ceil_pow2(U)] = fn
+        return fn
+
+
+@functools.lru_cache(maxsize=32)
+def compiled(block_t: int):
+    return block_t

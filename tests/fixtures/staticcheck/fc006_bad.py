@@ -1,0 +1,11 @@
+"""FC006: global config toggles at test-module import scope."""
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # FC006
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"  # FC006
+
+
+def test_something():
+    assert True

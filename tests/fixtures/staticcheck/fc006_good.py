@@ -1,0 +1,14 @@
+"""FC006 clean twins: toggles scoped in fixtures, not at import scope."""
+import jax
+import pytest
+
+
+@pytest.fixture
+def x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+def test_uses(x64):
+    assert True

@@ -1,8 +1,8 @@
 """Appendix B (Algorithm 5): relaxed multiplication with BOTH sequences
 revealed online — coverage, causality and exactness."""
 
-import sys
 import os
+import sys
 
 import numpy as np
 

@@ -4,7 +4,6 @@ forward pass — the paper's central claim is *exact* inference, not an
 approximation (contrast with the Laughing-Hyena distillation, §2.3.2)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -2,12 +2,10 @@
 builder (host-mesh), analytic FLOPs."""
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import ASSIGNED, get_config
+from repro.configs import get_config
 from repro.launch import sharding as sh
 from repro.launch.analysis import (collective_bytes, cost_analysis_dict,
                                    count_params, model_flops_for)
@@ -83,9 +81,7 @@ def test_model_flops_train_formula():
 def test_case_builder_host_mesh_lowers(name):
     """Smoke-config cases lower+compile on the 1-device host mesh — the
     same builder path the 512-device dry-run uses."""
-    import dataclasses
-
-    from repro.launch.specs import SHAPES, Skip, build_case
+    from repro.launch.specs import Skip, build_case
 
     cfg = get_config(name).smoke()
     # shrink the shape table for CPU: monkeypatch via a tiny local copy

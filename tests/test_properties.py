@@ -1,7 +1,6 @@
 """Property-based tests (hypothesis) on system invariants beyond the core
 tiling sweeps in test_core_tiling.py."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

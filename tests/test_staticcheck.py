@@ -1,0 +1,175 @@
+"""flashcheck analyzer tests.
+
+Three layers:
+
+* **fixture corpus** — every rule FC001–FC006 has a bad fixture whose
+  violations are marked with a trailing ``# FC00x`` comment and a clean
+  twin exercising the hardened idioms.  The test derives the expected
+  (rule, line) set from the markers, so fixtures stay self-documenting,
+  and asserts zero findings on the twins (false-positive pin).
+* **self-run** — the live repo is clean modulo the committed
+  staticcheck.toml baseline, under ``--fail-on-warn`` semantics.
+* **jaxpr pass** — the registered hot entry points satisfy the
+  donation / cond-free / one-split-per-step contracts in-process, and
+  (subprocess) under the forced-4-device mesh config.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.staticcheck import Config, Module, analyze, load_config, run_rules
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "staticcheck"
+
+# fixture file -> (path to mount it at, rule under test).  FC003 only
+# applies to the pinned mixer modules and FC005's lru_cache arm / FC006
+# only to src/ / tests/, so fixtures are mounted at representative paths.
+CASES = {
+    "fc001": ("src/repro/fixture_fc001.py", "FC001"),
+    "fc002": ("src/repro/fixture_fc002.py", "FC002"),
+    "fc003": ("src/repro/models/gla.py", "FC003"),
+    "fc004": ("src/repro/fixture_fc004.py", "FC004"),
+    "fc005": ("src/repro/fixture_fc005.py", "FC005"),
+    "fc006": ("tests/fixture_fc006.py", "FC006"),
+}
+
+
+def _run_fixture(name: str, mount: str):
+    src = (FIXTURES / name).read_text()
+    mod = Module(path=mount, tree=ast.parse(src))
+    return src, run_rules([mod], Config())
+
+
+def _marked_lines(src: str, rule: str) -> set[int]:
+    return {i for i, line in enumerate(src.splitlines(), 1)
+            if f"# {rule}" in line}
+
+
+@pytest.mark.parametrize("stem", sorted(CASES))
+def test_bad_fixture_exact_hits(stem):
+    """Bad fixtures: the finding set is EXACTLY the marked (rule, line)s."""
+    mount, rule = CASES[stem]
+    src, findings = _run_fixture(f"{stem}_bad.py", mount)
+    got = {(f.rule, f.line) for f in findings}
+    want = {(rule, ln) for ln in _marked_lines(src, rule)}
+    assert want, f"{stem}_bad.py has no # {rule} markers"
+    assert got == want, f"{stem}: got {sorted(got)}, want {sorted(want)}"
+
+
+@pytest.mark.parametrize("stem", sorted(CASES))
+def test_good_fixture_zero_false_positives(stem):
+    mount, rule = CASES[stem]
+    _, findings = _run_fixture(f"{stem}_good.py", mount)
+    assert findings == [], [f.render() for f in findings]
+
+
+# ------------------------------------------------------------- suppressions
+def test_suppression_requires_reason(tmp_path):
+    p = tmp_path / "staticcheck.toml"
+    p.write_text('[[suppress]]\nrule = "FC003"\npath = "x.py"\n')
+    with pytest.raises(ValueError, match="reason"):
+        load_config(p)
+
+
+def test_suppression_matching(tmp_path):
+    p = tmp_path / "staticcheck.toml"
+    p.write_text(
+        '[[suppress]]\nrule = "FC003"\npath = "src/repro/models/gla.py"\n'
+        'symbol = "logits"\nreason = "documented"\n')
+    cfg = load_config(p)
+    assert cfg.suppression_for("FC003", "src/repro/models/gla.py",
+                               "logits") == "documented"
+    assert cfg.suppression_for("FC003", "src/repro/models/gla.py",
+                               "read") == ""
+    assert cfg.suppression_for("FC001", "src/repro/models/gla.py",
+                               "logits") == ""
+
+
+def test_suppressed_findings_dont_fail(tmp_path):
+    p = tmp_path / "staticcheck.toml"
+    p.write_text(
+        '[[suppress]]\nrule = "FC003"\npath = "src/repro/models/gla.py"\n'
+        'reason = "pinned elsewhere"\n')
+    cfg = load_config(p)
+    src = (FIXTURES / "fc003_bad.py").read_text()
+    mod = Module(path="src/repro/models/gla.py", tree=ast.parse(src))
+    findings = run_rules([mod], cfg)
+    assert findings and all(f.suppressed for f in findings)
+
+
+# ------------------------------------------------------------------ self-run
+def test_live_repo_clean_modulo_baseline(monkeypatch):
+    """`python -m repro.staticcheck src tests benchmarks --fail-on-warn`
+    semantics on the live tree: zero unsuppressed findings."""
+    monkeypatch.chdir(REPO)
+    report = analyze(["src", "tests", "benchmarks"],
+                     load_config(REPO / "staticcheck.toml"), jaxpr=False)
+    assert report.files_scanned > 50
+    assert report.live() == [], [f.render() for f in report.live()]
+    assert not report.failed(fail_on_warn=True)
+    # the committed baseline is neither empty nor stale: every suppression
+    # suppresses something that the analyzer still finds.
+    assert sum(1 for f in report.findings if f.suppressed) == len(
+        load_config(REPO / "staticcheck.toml").suppressions)
+
+
+def test_json_report_shape(monkeypatch):
+    monkeypatch.chdir(REPO)
+    report = analyze(["src/repro/staticcheck"],
+                     load_config(REPO / "staticcheck.toml"), jaxpr=False)
+    payload = json.loads(json.dumps(report.to_dict()))
+    assert payload["tool"] == "flashcheck"
+    assert set(payload["counts"]) >= {"files_scanned", "findings",
+                                      "suppressed", "by_rule"}
+
+
+# ---------------------------------------------------------------- jaxpr pass
+EXPECTED_ENTRIES = {
+    "FlashEngine.decode_chunk",
+    "FlashEngine.server_chunk[batched]",
+    "FlashEngine.prefill_slot",
+    "GenericFlashEngine.server_chunk[batched]",
+    "GenericFlashEngine.prefill_slot",
+}
+
+
+def test_jaxpr_pass_contracts():
+    """Donation aliasing + cond-free batched dispatch + one-split-per-step
+    hold on every registered hot entry point under the current devices."""
+    from repro.staticcheck.jaxpr_pass import run_jaxpr_pass
+
+    verdicts = run_jaxpr_pass()
+    by_entry = {}
+    for v in verdicts:
+        by_entry.setdefault(v["entry"], []).append(v)
+    assert set(by_entry) >= EXPECTED_ENTRIES
+    bad = [v for v in verdicts if not v["ok"]]
+    assert not bad, json.dumps(bad, indent=2, default=str)
+    # the positive control proves the cond counter sees conds at all
+    flash_server = by_entry["FlashEngine.server_chunk[batched]"][0]
+    names = {c["name"]: c for c in flash_server["checks"]}
+    assert names["reference_ladder_has_conds"]["ok"]
+
+
+def test_jaxpr_pass_forced_4dev_subprocess():
+    """The mesh-sensitive leg: under 4 forced host devices the LCSM engine
+    is additionally traced on a 4-way data mesh and donation must still
+    hold (buffer_donor markers + concrete deletion)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.staticcheck", "--jaxpr-only"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "mesh=data4" in proc.stdout
+    assert "FAIL" not in proc.stdout

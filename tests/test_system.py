@@ -5,7 +5,6 @@ across-layer parallel batching, and generic-framework instantiation."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
