@@ -1,49 +1,145 @@
 """τ-implementation Pareto frontier (paper Figure 3a/3b analogue).
 
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_tau [--smoke]
+
 Times each τ implementation (direct einsum, FFT with precomputed filter
 DFT, Pallas tile_conv in interpret mode) across tile sides U and reports
 the per-U winner — the measurement that feeds the Hybrid dispatcher's
-``direct_max`` crossover.  CPU wall-clock stands in for the paper's GPU
-timings; the Pareto *structure* (direct wins small U, FFT wins large U)
-is the hardware-independent claim.
+``direct_max`` crossover.  On top of the raw τ kernels it also times the
+engine-level gray-tile step both ways (``gray_impl="xla"`` gather/τ/
+scatter chain vs the fused Pallas ``gray_tile_apply``) so the fused
+dispatch heuristic's ``FUSED_MAX_U`` ceiling is measured, not guessed.
+
+CPU wall-clock stands in for the paper's GPU timings; the Pareto
+*structure* (direct wins small U, FFT wins large U) is the
+hardware-independent claim.
+
+Cells that a sweep point deliberately does not measure (tile_conv beyond
+its interpret-mode budget, fused gray beyond ``FUSED_MAX_U``) are emitted
+as the explicit marker ``skipped`` — never a NaN compared against itself.
 """
 
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import tau as tau_mod
+from repro.core.engine import FlashEngine
 from repro.kernels import ops as kops
+from repro.kernels.heuristic import FUSED_MAX_U
+from repro.models.synthetic_lcsm import SyntheticLCSM
 
-from benchmarks.common import timeit, write_csv
+from benchmarks.common import timeit, write_bench_json, write_csv
+
+SKIPPED = "skipped"  # explicit CSV marker for deliberately-unmeasured cells
+
+# tile_conv runs in Pallas interpret mode on CPU — the per-element python
+# dispatch makes large U pointlessly slow to time, so cap the sweep.
+_PALLAS_MAX_U = 64
 
 
-def main(D: int = 128, B: int = 4, M: int = 4) -> str:
+def _fmt_us(t: float | None) -> str:
+    return SKIPPED if t is None else f"{t * 1e6:.1f}"
+
+
+def _gray_engines(D: int, B: int, gen_max: int):
+    """One synthetic-LCSM engine per gray_impl, sharing params."""
+    model = SyntheticLCSM(n_levels=3, d_model=D)
+    params = model.init(jax.random.PRNGKey(0))
+    engs = {impl: FlashEngine(model, params, batch=B, gen_max=gen_max,
+                              gray_impl=impl)
+            for impl in ("xla", "pallas")}
+    return engs
+
+
+def _time_gray(eng, U: int) -> float:
+    state = eng.init_state()
+    key = jax.random.PRNGKey(U)
+    a = tuple(jax.random.normal(jax.random.fold_in(key, i), x.shape, x.dtype)
+              for i, x in enumerate(state.a))
+    state = state._replace(a=a)
+    p = jnp.full((eng.batch,), max(U - 1, eng.Lbuf // 2), jnp.int32)
+    mask = jnp.ones((eng.batch,), bool)
+    fn = jax.jit(lambda s, pp, mm: eng._gray_tile(None, s, pp, mm, U=U))
+    return timeit(fn, state, p, mask)
+
+
+def main(D: int = 128, B: int = 4, M: int = 4, smoke: bool = False) -> str:
     key = jax.random.PRNGKey(0)
+    qs = range(0, 3) if smoke else range(0, 11)
+    gray_gen_max = 16 if smoke else 256
+    engs = _gray_engines(D=32 if smoke else D, B=B, gen_max=gray_gen_max)
+    gray_max_u = engs["xla"].Lbuf // 2
+
     rows = []
-    for q in range(0, 11):
+    series: list[dict] = []
+
+    def record(U: int, impl: str, seconds: float | None):
+        if seconds is None:
+            return
+        tokens = M * B * U
+        series.append({"U": U, "impl": impl, "tokens": tokens,
+                       "seconds": seconds, "tok_s": tokens / seconds})
+
+    for q in qs:
         U = 1 << q
         y = jax.random.normal(key, (M, B, U, D), jnp.float32)
         rho = jax.random.normal(key, (M, 1, 2 * U, D), jnp.float32)
         rho_f = tau_mod.rho_dft(rho)
 
         t_direct = timeit(jax.jit(tau_mod.tau_direct), y, rho)
-        t_fft = timeit(jax.jit(lambda y, rf: tau_mod.tau_fft(y, rho_f=rf)), y, rho_f)
-        t_pallas = timeit(lambda y, r: kops.tile_conv(y, r), y, rho) \
-            if U <= 64 else float("nan")
+        t_fft = timeit(jax.jit(lambda y, rf: tau_mod.tau_fft(y, rho_f=rf)),
+                       y, rho_f)
+        t_pallas = (timeit(lambda y, r: kops.tile_conv(y, r), y, rho)
+                    if U <= _PALLAS_MAX_U else None)
+        t_gray_xla = _time_gray(engs["xla"], U) if U <= gray_max_u else None
+        t_gray_fused = (_time_gray(engs["pallas"], U)
+                        if U <= min(gray_max_u, FUSED_MAX_U) else None)
+
         best = min(("direct", t_direct), ("fft", t_fft),
                    key=lambda kv: kv[1])[0]
-        rows.append([U, f"{t_direct * 1e6:.1f}", f"{t_fft * 1e6:.1f}",
-                     f"{t_pallas * 1e6:.1f}" if t_pallas == t_pallas else "",
-                     best])
+        record(U, "direct", t_direct)
+        record(U, "fft", t_fft)
+        record(U, "pallas_interp", t_pallas)
+        record(U, "gray_xla", t_gray_xla)
+        record(U, "gray_fused_interp", t_gray_fused)
+        rows.append([U, _fmt_us(t_direct), _fmt_us(t_fft), _fmt_us(t_pallas),
+                     _fmt_us(t_gray_xla), _fmt_us(t_gray_fused), best])
         print(f"[bench_tau] U={U:5d}  direct {t_direct*1e6:9.1f}us  "
-              f"fft {t_fft*1e6:9.1f}us  -> {best}")
-    path = write_csv("tau_pareto", ["U", "direct_us", "fft_us",
-                                    "pallas_interp_us", "winner"], rows)
-    print(f"[bench_tau] wrote {path}")
-    return path
+              f"fft {t_fft*1e6:9.1f}us  gray_xla(us) {_fmt_us(t_gray_xla):>9}  "
+              f"gray_fused(us) {_fmt_us(t_gray_fused):>9}  -> {best}")
+
+    # Largest U such that direct wins at every sweep point <= U: the
+    # measured §5.3 crossover that ``direct_max`` should be set to.
+    crossover = 0
+    for row in rows:
+        if row[-1] != "direct":
+            break
+        crossover = row[0]
+
+    csv_path = write_csv(
+        "tau_pareto_smoke" if smoke else "tau_pareto",
+        ["U", "direct_us", "fft_us", "pallas_interp_us",
+         "gray_xla_us", "gray_fused_interp_us", "winner"], rows)
+    json_path = write_bench_json(
+        "tau",
+        {"D": D, "B": B, "M": M, "U_sweep": [1 << q for q in qs],
+         "fused_max_u": FUSED_MAX_U, "gray_gen_max": gray_gen_max,
+         "measured_direct_crossover": crossover,
+         "interpret_mode": jax.default_backend() != "tpu"},
+        series, smoke=smoke)
+    print(f"[bench_tau] direct/fft crossover at U={crossover}")
+    print(f"[bench_tau] wrote {csv_path}")
+    print(f"[bench_tau] wrote {json_path}")
+    return json_path
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI-sized run")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

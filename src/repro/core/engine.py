@@ -152,6 +152,7 @@ class FlashEngine(ScheduleWalker):
         direct_max: int = 32,
         parallel_levels: bool = True,
         use_pallas: bool = False,
+        gray_impl: str = "xla",
         chunk_size: int = 1,
         mesh=None,
         data_axis: str = "data",
@@ -159,6 +160,7 @@ class FlashEngine(ScheduleWalker):
     ):
         assert strategy in ("flash", "lazy", "eager")
         assert tau_impl in ("hybrid", "direct", "fft", "pallas")
+        assert gray_impl in ("xla", "pallas")
         assert chunk_size >= 1
         self.model = model
         self.params = params
@@ -172,6 +174,7 @@ class FlashEngine(ScheduleWalker):
         self.direct_max = direct_max
         self.parallel_levels = parallel_levels
         self.use_pallas = use_pallas
+        self.gray_impl = gray_impl
         self.chunk_size = chunk_size
         self.Lbuf = prompt_max + ceil_pow2(max(gen_max, 1))
         self.M = len(model.levels)
@@ -192,9 +195,16 @@ class FlashEngine(ScheduleWalker):
             (csize, tuple(ls), jnp.stack([self._rho[l] for l in ls]))
             for csize, ls in sorted(groups.items())
         ]
-        # Precomputed filter DFTs per tile size per group (App. C: 3->2 DFTs).
+        # Precomputed filter DFTs per tile size per group (App. C: 3->2 DFTs)
+        # and the matching time-domain prefixes rho[:2U], so the direct-regime
+        # dispatch never reconstructs the filter with an irfft inside a cached
+        # decode/server program (tau_hybrid's fallback is exactly that).
         self._rho_dfts = [
             tau_mod.make_rho_dfts(rho_g[:, None], self.Lbuf // 2)  # (G,1,2U,C)
+            for (_, _, rho_g) in self._groups
+        ]
+        self._rho_pres = [
+            tau_mod.make_rho_prefixes(rho_g[:, None], self.Lbuf // 2)
             for (_, _, rho_g) in self._groups
         ]
 
@@ -292,10 +302,19 @@ class FlashEngine(ScheduleWalker):
         m = self.model
         a = list(state.a)
         b = list(state.b)
+        fused_red = self.gray_impl == "pallas" and self.mesh is None
         for l, spec in enumerate(m.levels):
-            y_p = _slice_rows(a[l], p, spec.conv_start, 1, spec.conv_size)
-            b_p = _slice_rows(b[l], p, 0, 1, spec.conv_size)
-            b_p = b_p + y_p.astype(jnp.float32) * self._rho0[l]
+            if fused_red:
+                # Fused gather+FMA red cell (kernels/gray_tile.py) —
+                # bitwise vs the two dynamic slices + multiply-add below.
+                from repro.kernels import ops as kops
+
+                b_p = kops.red_pass_fma(a[l], b[l], self._rho0[l], p,
+                                        conv_start=spec.conv_start)
+            else:
+                y_p = _slice_rows(a[l], p, spec.conv_start, 1, spec.conv_size)
+                b_p = _slice_rows(b[l], p, 0, 1, spec.conv_size)
+                b_p = b_p + y_p.astype(jnp.float32) * self._rho0[l]
             acts = self._acts_windows(a, p, 1)
             out = m.block(params, l, b_p.astype(self.dtype), acts)  # (B,1,width)
             a[l + 1] = _update_rows(a[l + 1], p, out.astype(self.dtype))
@@ -316,6 +335,28 @@ class FlashEngine(ScheduleWalker):
         return self._shard_state(EngineState(a=tuple(a), b=tuple(b))), token
 
     # ------------------------------------------------------------- gray tiles
+    def _gray_plan(self, U: int, csize: int, a_widths):
+        """Trace-time fused-dispatch decision for one conv-width group, or
+        None when ``gray_impl`` keeps the XLA body.  The fused kernel
+        reproduces ``tau_direct``'s arithmetic bitwise, so only the
+        direct-regime dispatches of the plain τ impls route through it:
+        the tile_conv (``use_pallas``/``tau_impl="pallas"``) and FFT
+        bodies round differently.  Disabled under a mesh — the
+        interpret-mode pallas_call is not partition-aware (same guard as
+        kernels/ops.short_conv)."""
+        if self.gray_impl != "pallas" or self.mesh is not None:
+            return None
+        if self.tau_impl not in ("hybrid", "direct") or self.use_pallas:
+            return None
+        from repro.kernels.heuristic import gray_plan
+
+        dmax = self.direct_max if self.tau_impl == "hybrid" else self.Lbuf
+        # min_u=2: the U=1 lcsm tile is a bare multiply feeding the
+        # accumulate, which XLA's CPU fusion emitter may contract to an
+        # FMA depending on fusion context — unpinnable (heuristic.py).
+        return gray_plan(U=U, C=csize, batch=self.batch, widths=a_widths,
+                         Lbuf=self.Lbuf, direct_max=dmax, min_u=2)
+
     def _tau(self, y, rho2u, rho_f):
         impl = self.tau_impl
         if impl == "hybrid":
@@ -352,14 +393,37 @@ class FlashEngine(ScheduleWalker):
         anywhere: that is what lets the server apply every possible tile
         side per step and select by mask.  ``params`` is the
         walker-threaded model pytree — unused here (LCSM tiles read only
-        the precomputed filters/DFTs, host constants by design)."""
+        the precomputed filters/DFTs, host constants by design).
+
+        ``gray_impl="pallas"`` routes direct-regime groups through the
+        fused Pallas kernel (kernels/gray_tile.py: gather + τ + clipped
+        scatter-add in one program, bitwise vs this body); FFT-regime
+        tiles and non-direct τ impls keep the XLA chain, per-group, via
+        the kernels/heuristic.py plan."""
         del params
         a = state.a
         b = list(state.b)
         start = p - U + 1  # (B,); >= 0 for any live slot (U | rel step)
         for gi, (csize, level_ids, rho_g) in enumerate(self._groups):
-            rho2u = rho_g[:, None, : 2 * U]  # (G, 1, 2U, C)
+            rho2u = self._rho_pres[gi].get(U)  # (G, 1, 2U, C) cached prefix
+            if rho2u is None:
+                rho2u = rho_g[:, None, : 2 * U]
             rho_f = self._rho_dfts[gi].get(U)
+            plan = self._gray_plan(U, csize, [a[l].shape[-1]
+                                              for l in level_ids])
+            if plan is not None and plan.fused:
+                from repro.kernels import ops as kops
+
+                new_b = kops.gray_tile_apply(
+                    [a[l] for l in level_ids], [b[l] for l in level_ids],
+                    rho2u[:, 0], p, mask,
+                    conv_starts=[self.model.levels[l].conv_start
+                                 for l in level_ids],
+                    Lbuf=self.Lbuf, mode="lcsm",
+                    slot_block=plan.slot_block)
+                for l, nb in zip(level_ids, new_b):
+                    b[l] = nb
+                continue
             ins = []
             for l in level_ids:
                 spec = self.model.levels[l]

@@ -40,7 +40,9 @@ from typing import Any, NamedTuple, Protocol, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import tau as tau_mod
 from repro.core.schedule import (ScheduleWalker, ceil_pow2, slice_rows,
                                  tree_slice_rows, tree_update_rows,
                                  update_rows, write_next_rows,
@@ -153,6 +155,76 @@ def _apply_tile(mix: GenericMixer, s_l, p: jnp.ndarray, contrib, mask,
     return tree_update_rows(s_l, wstart, merged)
 
 
+class LongConvMixer:
+    """GenericMixer for one long-convolution (LCSM) level — the bridge
+    that runs FlashEngine's hot path through the generic framework:
+    state ``s_l`` is the (B, Lbuf, C) f32 contribution accumulator,
+    ``cont(y,i,j) = y_i · rho[j-i]``, ``agg`` is +, and ``read`` returns
+    the finalized accumulator row.  The range algorithm is τ with cached
+    time-domain filter prefixes AND DFTs per pow2 tile side (the same
+    §5.3/§5.4 dispatch FlashEngine uses — no per-trace irfft filter
+    reconstruction), a causal-FFT tail for the rectangular prefill
+    spill, and :func:`tau.tau_offsets` for anything else.
+
+    Contractions live in core/tau.py — this module is FC003-pinned to
+    mul+sum (GLA bit-identity)."""
+
+    def __init__(self, rho: jnp.ndarray, *, direct_max: int = 32):
+        self.rho = jnp.asarray(rho, jnp.float32)  # (L, C), L = Lbuf
+        self.direct_max = direct_max
+        max_tile = max(1, self.rho.shape[0] // 2)
+        self._rho_f = tau_mod.make_rho_dfts(self.rho, max_tile)
+        self._rho_pre = tau_mod.make_rho_prefixes(self.rho, max_tile)
+
+    @property
+    def conv_size(self) -> int:
+        return self.rho.shape[1]
+
+    def tile_filter(self, U: int) -> jnp.ndarray:
+        """Time-domain rho[:2U] (cached for pow2 U <= Lbuf/2)."""
+        pre = self._rho_pre.get(U)
+        return self.rho[: 2 * U] if pre is None else pre
+
+    def init_state(self, batch: int, length: int):
+        return jnp.zeros((batch, length, self.conv_size), jnp.float32)
+
+    def cont_diag(self, y_i, i):
+        del i  # translation-invariant: the diagonal lag is always 0
+        return y_i.astype(jnp.float32) * self.rho[0]
+
+    def range_alg(self, y_seg, in_lo, out_offsets):
+        del in_lo  # translation-invariant: only the lags matter
+        U = y_seg.shape[-2]
+        if not isinstance(out_offsets, jax.core.Tracer):
+            offs = np.asarray(out_offsets)
+            n = offs.shape[0]
+            if np.array_equal(offs, np.arange(1, n + 1)):
+                if n == U:
+                    # Square Alg.-2 gray tile: §5.3 hybrid dispatch with
+                    # the cached prefix/DFT pair.
+                    return tau_mod.tau_hybrid(
+                        y_seg, self.tile_filter(U), self._rho_f.get(U),
+                        direct_max=self.direct_max)
+                # Rectangular spill [i+1, i+n] (prefill): one causal FFT
+                # conv over the segment, future tail kept.
+                z = tau_mod.conv_causal_fft(
+                    y_seg.astype(jnp.float32), self.rho[None],
+                    out_len=U + n)
+                return z[..., U:, :].astype(y_seg.dtype)
+        return tau_mod.tau_offsets(y_seg, self.rho, out_offsets)
+
+    def agg(self, b, x):
+        return b + x
+
+    def read(self, b_i, y_i):
+        del y_i
+        return b_i
+
+    def prefill_states(self, ys):
+        return tau_mod.conv_causal_fft(ys.astype(jnp.float32),
+                                       self.rho[None])
+
+
 class GenericFlashEngine(ScheduleWalker):
     """Production Algorithm-4 engine: the generic mixer framework on the
     shared fractal-schedule machinery (core/schedule).
@@ -170,13 +242,15 @@ class GenericFlashEngine(ScheduleWalker):
 
     def __init__(self, model: GenericModel, params: Any, *, batch: int,
                  gen_max: int, prompt_max: int = 0, dtype=jnp.float32,
-                 chunk_size: int = 1):
+                 gray_impl: str = "xla", chunk_size: int = 1):
         assert chunk_size >= 1
+        assert gray_impl in ("xla", "pallas")
         self.model = model
         self.params = params
         self.batch = batch
         self.dtype = dtype
         self.strategy = "flash"  # the generic engine has no Ω(L²) baselines
+        self.gray_impl = gray_impl
         self.chunk_size = chunk_size
         self.Lbuf = prompt_max + ceil_pow2(max(gen_max, 1))
         self.M = model.n_levels
@@ -241,16 +315,45 @@ class GenericFlashEngine(ScheduleWalker):
         no-op and the batched server dispatch can apply every possible
         side per step.  ``params`` is traced (walker-threaded): the mixer
         weights stay jit arguments instead of being baked into every
-        cached tile/chunk program as constants."""
+        cached tile/chunk program as constants.
+
+        ``gray_impl="pallas"`` routes :class:`LongConvMixer` levels in
+        the direct τ regime through the fused select-mode Pallas kernel
+        (kernels/gray_tile.py) — gather + τ + clamped-window select
+        merge in one program, bitwise vs this body."""
         m = self.model
         s = list(state.s)
         start = p - U + 1  # (B,); >= 0 for any live slot (U | rel step)
         offs = jnp.arange(1, U + 1)
         for l, mix in enumerate(m.mixers(params)):
+            plan = self._gray_plan(mix, U, state.a[l].shape[-1])
+            if plan is not None and plan.fused:
+                from repro.kernels import ops as kops
+
+                s[l] = kops.gray_tile_apply(
+                    [state.a[l]], [s[l]], mix.tile_filter(U)[None], p,
+                    mask, conv_starts=[0], Lbuf=self.Lbuf, mode="select",
+                    slot_block=plan.slot_block)[0]
+                continue
             y_seg = slice_rows(state.a[l], start, 0, U, state.a[l].shape[-1])
             contrib = mix.range_alg(y_seg, start, offs)  # (B, U, ...)
             s[l] = _apply_tile(mix, s[l], p, contrib, mask, U, self.Lbuf)
         return self._shard_state(state._replace(s=tuple(s)))
+
+    def _gray_plan(self, mix, U: int, a_width: int):
+        """Fused-dispatch decision for one level (trace-time), or None.
+        Only LongConvMixer levels whose input plane IS the conv input
+        (full width, conv_start 0) qualify — and only in the direct τ
+        regime, where the fused kernel is bitwise vs ``range_alg``."""
+        if self.gray_impl != "pallas" or not isinstance(mix, LongConvMixer):
+            return None
+        if a_width != mix.conv_size:
+            return None
+        from repro.kernels.heuristic import gray_plan
+
+        return gray_plan(U=U, C=mix.conv_size, batch=self.batch,
+                         widths=[a_width], Lbuf=self.Lbuf,
+                         direct_max=mix.direct_max)
 
     # ---------------------------------------------------------------- prefill
     def _prefill_rows(self, params, a0_prompt: jnp.ndarray, plen, rng):

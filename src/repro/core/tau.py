@@ -95,6 +95,25 @@ def make_rho_dfts(rho: jnp.ndarray, max_tile: int) -> Mapping[int, jnp.ndarray]:
     return dfts
 
 
+def make_rho_prefixes(rho: jnp.ndarray, max_tile: int) -> Mapping[int, jnp.ndarray]:
+    """Precompute {U: rho[0..2U-1]} for U = 1, 2, 4, ..., max_tile — the
+    time-domain companion of :func:`make_rho_dfts`.
+
+    The direct/Pallas τ kernels need the time-domain filter; a caller that
+    cached only the DFTs forces ``tau_hybrid`` to reconstruct it with an
+    inverse FFT inside every traced program — one irfft per small-U tile
+    per step in the Alg.-2 hot loop.  Engines cache these prefixes
+    alongside the DFTs so no cached decode/server program contains that
+    reconstruction (tests/test_decode_chunk.py pins the fft-free jaxpr).
+    """
+    pres: dict[int, jnp.ndarray] = {}
+    U = 1
+    while U <= max_tile:
+        pres[U] = rho[..., : 2 * U, :]
+        U *= 2
+    return pres
+
+
 def tau_hybrid(
     y_tile: jnp.ndarray,
     rho2u: jnp.ndarray | None = None,
@@ -144,6 +163,24 @@ def tau_ranges(
     return jnp.einsum(
         "...tsc,...sc->...tc", rmat, yseg, preferred_element_type=_F32
     ).astype(y.dtype)
+
+
+def tau_offsets(
+    y_seg: jnp.ndarray, rho: jnp.ndarray, out_offsets: jnp.ndarray
+) -> jnp.ndarray:
+    """General Lemma-1 τ for translation-invariant filters: contributions
+    of the U inputs ending at some position i to the outputs at positions
+    ``i + off`` for each ``off`` in ``out_offsets`` (all >= 1, possibly
+    traced/non-contiguous).  y_seg: (..., U, C); rho: (L, C) with
+    L > max(off) + U - 1.  Returns (..., n_off, C).  Direct evaluation —
+    the generic engine's fallback when offsets aren't a recognizable
+    square/rectangular pattern."""
+    U = y_seg.shape[-2]
+    idx = out_offsets[:, None] + (U - 1) - jnp.arange(U)[None, :]
+    rmat = jnp.take(rho, idx, axis=-2)  # (n_off, U, C)
+    return jnp.einsum(
+        "...tsc,...sc->...tc", rmat, y_seg, preferred_element_type=_F32
+    ).astype(y_seg.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("out_len",))

@@ -1,0 +1,264 @@
+"""Fused Pallas kernels for the Algorithm-2 tile hot path.
+
+The XLA gray-tile body (``FlashEngine._gray_tile``) is a three-op chain
+per conv-width group: per-slot dynamic-slice *gather* of the U input
+rows, a τ tile conv, and a masked horizon-clipped ``.at[].add`` *scatter*
+into the ``b`` accumulators — three HBM round-trips over (B, Lbuf, C)
+planes for O(B·U·C) useful work.  ``gray_tile_apply`` fuses the chain
+into ONE kernel: each grid program holds a slot-block's a/b planes in
+VMEM, gathers the y window with an in-kernel dynamic row slice, runs the
+direct τ block, and accumulates into the b window in place
+(``input_output_aliases`` pins b input g to output g, so XLA can donate
+the accumulator buffers straight through).  ``red_pass_fma`` fuses the
+per-step red-cell gather + FMA (``b[p] + y[p]·rho_0``) the same way.
+
+Bitwise contract (pinned by tests/test_kernels.py + test_decode_chunk.py)
+-------------------------------------------------------------------------
+Both kernels are bitwise-identical in interpret mode to the XLA
+reference bodies they replace.  Two empirically-load-bearing details:
+
+* τ block form: jitted ``tau_direct`` (take + einsum with
+  ``preferred_element_type=f32``) is reproduced bitwise inside the
+  kernel by the same take+einsum for U == 1 and U >= 4, but at U == 2
+  XLA emits the tiny contraction as a REVERSE-order multiply-add chain —
+  so the kernel dispatches on U (measured over U ∈ {1..256} ×
+  C ∈ {3..200}; forward-order FMA is never bitwise for U >= 2).
+* accumulate form: XLA's CPU fusion emitter contracts adjacent mul+add
+  into one FMA — and neither ``optimization_barrier`` nor an
+  intervening ``select`` stops it (measured).  The reference gray body
+  is immune because its accumulate is a *scatter*, so the interpret
+  path mirrors its ``add_tile`` op-for-op (scatter-adds +0.0 into the
+  horizon-clamped row Lbuf-1 for spilled outputs, flipping a stored
+  -0.0 to +0.0; untouched rows are never written).  The Mosaic path —
+  where no contraction pass exists and scatter has no lowering — uses
+  the equivalent clamped-window + select form with an explicit
+  ``contrib + 0.0`` on the duplicated last row.  The red-cell FMA is
+  the mirror case: the reference's own mul+add DOES contract, so the
+  red kernel keeps the bare mul+add pattern.  One residual hole: at
+  U == 1 the lcsm τ degenerates to a bare multiply and XLA contracts
+  it into the accumulate *fusion-context-dependently* (some levels of
+  some groups, not others), so no fixed op shape can pin it —
+  ``heuristic.gray_plan(min_u=2)`` keeps U=1 lcsm tiles on the XLA
+  body.  Select mode is safe at U=1: the reference ``_apply_tile``
+  has the same take_along_axis between τ and add as the kernel, and
+  the gather blocks contraction symmetrically.
+
+Two accumulate modes mirror the two engines:
+
+* ``mode="lcsm"`` — ``FlashEngine._gray_tile``: mask pre-zeroes the τ
+  output, the scatter-add still touches valid/clamped rows of masked-out
+  slots (with zeros), horizon spill clips by zero-add at row Lbuf-1.
+* ``mode="select"`` — ``generic._apply_tile``: no absorbing zero; rows
+  outside ``(rel >= 0) & mask`` keep their old value exactly (a select,
+  not an add), so an all-False-mask call is a fully bitwise no-op.
+
+Layout: grid = (B / slot_block,); each program sees whole (Lbuf, W)
+planes for its slots (channels on lanes, rows on sublanes) plus one
+shared (G, 2U, C) filter block mapped to block (0, 0, 0) for every
+program — the multi-level analogue of tile_conv's shared-filter
+BlockSpec.  Positions/masks ride in as scalar-prefetch operands
+(SMEM), so the row windows are known before the DMA pipeline runs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_F32 = jnp.float32
+
+
+def _tau_block(y: jnp.ndarray, rho: jnp.ndarray, U: int) -> jnp.ndarray:
+    """Direct τ on one (U, C) f32 tile — bitwise vs jitted ``tau_direct``.
+
+    U == 2 needs the reverse-order FMA chain; every other U needs the
+    take+einsum form (see module docstring).  Both are O(U^2 C).
+    """
+    if U == 2:
+        acc = y[1, :][None, :] * jax.lax.slice_in_dim(rho, 1, 3, axis=0)
+        return acc + y[0, :][None, :] * jax.lax.slice_in_dim(rho, 2, 4, axis=0)
+    t = jnp.arange(U)
+    band = U + t[:, None] - t[None, :]          # (U, U) lags in [1, 2U-1]
+    rmat = jnp.take(rho, band, axis=0)          # (U, U, C)
+    return jnp.einsum("tsc,sc->tc", rmat, y, preferred_element_type=_F32)
+
+
+def _gray_kernel(p_ref, m_ref, *refs, G: int, U: int, Lbuf: int, C: int,
+                 conv_starts: Sequence[int], slot_block: int, mode: str,
+                 a_dtype, interpret: bool):
+    """One slot-block: all G levels of one conv-width group, fused.
+
+    refs = (a_0..a_{G-1}, b_0..b_{G-1}, rho, out_0..out_{G-1});
+    out_g aliases b_g.  p_ref/m_ref are full-(B,) scalar-prefetch refs.
+    """
+    a_refs = refs[:G]
+    b_refs = refs[G:2 * G]
+    rho_ref = refs[2 * G]
+    out_refs = refs[2 * G + 1:]
+    i = pl.program_id(0)
+    # Seed every output block with its aliased accumulator so untouched
+    # rows round-trip bitwise (on hardware the whole block writes back).
+    for g in range(G):
+        out_refs[g][...] = b_refs[g][...]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (U, C), 0)
+    for j in range(slot_block):
+        slot = i * slot_block + j
+        pj = p_ref[slot]
+        mj = m_ref[slot] != 0
+        # Gather window [p-U+1, p] and scatter window [p+1, p+U], both
+        # clamped exactly like the reference's per-row dynamic slices.
+        ystart = jnp.clip(pj - (U - 1), 0, Lbuf - U)
+        wstart = jnp.minimum(pj + 1, Lbuf - U)
+        shift = (pj + 1) - wstart          # > 0 iff the tile spills
+        t = rows - shift
+        valid = t >= 0
+        tclip = jnp.clip(t, 0, U - 1)
+        for g in range(G):
+            cs = conv_starts[g]
+            y = a_refs[g][j, pl.ds(ystart, U), cs:cs + C].astype(_F32)
+            o = _tau_block(y, rho_ref[g], U).astype(a_dtype).astype(_F32)
+            if mode == "lcsm" and interpret:
+                # Interpret mode runs the kernel body through XLA, whose
+                # CPU fusion emitter contracts adjacent mul+add into one
+                # FMA (1-ulp drift vs the reference; barriers/selects do
+                # NOT stop it — measured).  The reference is immune
+                # because its accumulate is a scatter, so mirror its
+                # ``add_tile`` op-for-op: scatters never contract.
+                oo = jnp.where(mj, o, 0.0)
+                idx = pj + 1 + jnp.arange(U)
+                oo = jnp.where((idx < Lbuf)[:, None], oo, 0.0)
+                plane = out_refs[g][j, :, :]
+                out_refs[g][j, :, :] = plane.at[
+                    jnp.minimum(idx, Lbuf - 1)].add(oo)
+                continue
+            if mode == "lcsm":
+                # Mosaic path (no scatter lowering): the same update as
+                # an in-place clamped window + select — mask zeroes the
+                # payload but the add still lands (+0.0 flips -0.0);
+                # spilled outputs collapse onto row Lbuf-1 as zero-adds
+                # (``lastdup``).  Mathematically identical to the
+                # scatter; on-device bit-identity vs XLA is not promised
+                # (it isn't for any hardware kernel).
+                oo = jnp.where(mj, o, 0.0)
+                contrib = jnp.take_along_axis(oo, tclip, axis=0)
+                contrib = jnp.where(valid, contrib, 0.0)
+                lastdup = (rows == U - 1) & (shift > 0)
+                contrib = jnp.where(lastdup, contrib + 0.0, contrib)
+                touched = valid | lastdup
+            else:  # "select"
+                contrib = jnp.take_along_axis(o, tclip, axis=0)
+                touched = valid & mj
+            bwin = out_refs[g][j, pl.ds(wstart, U), :]
+            out_refs[g][j, pl.ds(wstart, U), :] = jnp.where(
+                touched, bwin + contrib, bwin)
+
+
+def gray_tile_apply(
+    a_list: Sequence[jnp.ndarray],
+    b_list: Sequence[jnp.ndarray],
+    rho2u: jnp.ndarray,
+    p: jnp.ndarray,
+    mask: jnp.ndarray,
+    *,
+    conv_starts: Sequence[int],
+    Lbuf: int,
+    mode: str = "lcsm",
+    slot_block: int = 1,
+    interpret: bool = False,
+) -> list[jnp.ndarray]:
+    """Fused gray-tile apply for one conv-width group of G levels.
+
+    a_list[g]: (B, Lbuf, W_g) activations; b_list[g]: (B, Lbuf, C) f32
+    accumulators; rho2u: (G, 2U, C) f32 filter prefixes; p/mask: (B,)
+    per-slot tile-end positions and selection mask.  Returns the G
+    updated accumulators — contributions of a[p-U+1..p] to b[p+1..p+U],
+    horizon-clipped, bitwise vs the XLA reference for ``mode``.
+    """
+    assert mode in ("lcsm", "select")
+    G, twoU, C = rho2u.shape
+    U = twoU // 2
+    B = b_list[0].shape[0]
+    assert len(a_list) == len(b_list) == len(conv_starts) == G
+    assert B % slot_block == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B // slot_block,),
+        in_specs=[
+            *[pl.BlockSpec((slot_block, Lbuf, a.shape[-1]),
+                           lambda i, pr, mr: (i, 0, 0)) for a in a_list],
+            *[pl.BlockSpec((slot_block, Lbuf, C),
+                           lambda i, pr, mr: (i, 0, 0)) for _ in b_list],
+            pl.BlockSpec((G, twoU, C), lambda i, pr, mr: (0, 0, 0)),
+        ],
+        out_specs=[pl.BlockSpec((slot_block, Lbuf, C),
+                                lambda i, pr, mr: (i, 0, 0))
+                   for _ in b_list],
+    )
+    kern = functools.partial(
+        _gray_kernel, G=G, U=U, Lbuf=Lbuf, C=C,
+        conv_starts=tuple(conv_starts), slot_block=slot_block, mode=mode,
+        a_dtype=a_list[0].dtype, interpret=interpret)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(b.shape, b.dtype) for b in b_list],
+        # Operand order (p, mask, a_0.., b_0.., rho): alias b_g -> out_g.
+        input_output_aliases={2 + G + g: g for g in range(G)},
+        interpret=interpret,
+    )(p.astype(jnp.int32), mask.astype(jnp.int32), *a_list, *b_list, rho2u)
+    return list(out)
+
+
+def _red_kernel(p_ref, a_ref, b_ref, rho0_ref, out_ref, *, Lbuf: int,
+                C: int, conv_start: int, slot_block: int):
+    """One slot-block of the red-cell FMA: out = b[p] + y[p]·rho_0."""
+    i = pl.program_id(0)
+    for j in range(slot_block):
+        row = jnp.clip(p_ref[i * slot_block + j], 0, Lbuf - 1)
+        y = a_ref[j, pl.ds(row, 1), conv_start:conv_start + C].astype(_F32)
+        b = b_ref[j, pl.ds(row, 1), :]
+        # Plain mul+add, matching the reference's op pattern exactly: XLA
+        # CPU contracts BOTH into the same FMA (see _gray_kernel note).
+        out_ref[j, :, :] = b + y * rho0_ref[...]
+
+
+def red_pass_fma(
+    a_l: jnp.ndarray,
+    b_l: jnp.ndarray,
+    rho0: jnp.ndarray,
+    p: jnp.ndarray,
+    *,
+    conv_start: int = 0,
+    slot_block: int = 1,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused red-cell gather+FMA for one level: (B, 1, C) f32
+    ``b[p] + y[p]·rho_0`` — bitwise vs the reference's two dynamic
+    slices + multiply-add.  a_l: (B, Lbuf, W); b_l: (B, Lbuf, C) f32;
+    rho0: (C,) f32; p: (B,)."""
+    B, Lbuf, W = a_l.shape
+    C = b_l.shape[-1]
+    assert B % slot_block == 0
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B // slot_block,),
+        in_specs=[
+            pl.BlockSpec((slot_block, Lbuf, W), lambda i, pr: (i, 0, 0)),
+            pl.BlockSpec((slot_block, Lbuf, C), lambda i, pr: (i, 0, 0)),
+            pl.BlockSpec((1, C), lambda i, pr: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((slot_block, 1, C), lambda i, pr: (i, 0, 0)),
+    )
+    kern = functools.partial(_red_kernel, Lbuf=Lbuf, C=C,
+                             conv_start=conv_start, slot_block=slot_block)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, C), jnp.float32),
+        interpret=interpret,
+    )(p.astype(jnp.int32), a_l, b_l, rho0.reshape(1, C).astype(_F32))

@@ -1,0 +1,130 @@
+"""Tiling/occupancy chooser for the fused gray-tile Pallas path.
+
+``tau_hybrid`` owns the §5.3 direct-vs-FFT crossover as a single scalar
+(``direct_max``).  The fused gray-tile kernel (kernels/gray_tile.py) adds
+two more degrees of freedom — how many serving slots ride in one kernel
+program, and how many 128-lane blocks a conv-width occupies — so the
+dispatch decision becomes a small *plan*, chosen here from power-of-two
+candidates over (U, C, slot batch):
+
+  * ``fused`` — use the fused kernel at all.  True exactly on the direct
+    regime ``U <= min(direct_max, FUSED_MAX_U)``: the kernel's tile conv
+    is the direct O(U²) form, so the FFT regime must keep the XLA body
+    (which also keeps the fused path bitwise against the reference —
+    tau_hybrid dispatches the identical direct arithmetic there).
+  * ``slot_block`` — slots per kernel program: the largest power of two
+    dividing the batch whose per-program VMEM working set (every level's
+    a/b plane plus the shared filter block) stays under the budget, but
+    never so large that the grid degenerates below ``min_programs``
+    (TPU cores hide DMA latency by double-buffering across programs).
+  * ``lane_block`` — the 128-lane-padded channel footprint used in the
+    VMEM estimate (channels land on the lane dimension; a 5-wide conv
+    still occupies one full 128-lane register row).
+
+The ``FUSED_MAX_U`` ceiling is MEASURED, not guessed: benchmarks/
+bench_tau.py times the fused kernel against the direct and FFT τ bodies
+per U and writes the crossover into experiments/bench/BENCH_tau.json —
+the committed table this constant mirrors (see README "τ dispatch").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+_LANES = 128
+
+# Measured ceiling for the fused direct-form kernel (BENCH_tau.json: the
+# direct form stays on the Pareto frontier through U=32 on this backend
+# and loses to the FFT body above it — the same knee tau_hybrid's default
+# direct_max encodes).
+FUSED_MAX_U = 32
+
+# Per-program VMEM working-set budget.  ~16 MiB/core on current TPUs;
+# stay at half so double-buffered pipelining fits (pallas guide).
+VMEM_BUDGET_BYTES = 8 * 2**20
+
+# Keep at least this many grid programs when shrinking the grid by
+# batching slots, so the pipeline still overlaps DMA with compute.
+MIN_PROGRAMS = 2
+
+
+def _ceil_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def lane_blocks(C: int) -> int:
+    """128-lane blocks a C-wide channel axis occupies."""
+    return max(1, -(-C // _LANES))
+
+
+@dataclass(frozen=True)
+class GrayPlan:
+    """One dispatch decision for a (U, group) gray-tile application."""
+
+    fused: bool        # fused Pallas kernel vs the XLA reference body
+    slot_block: int    # slots per kernel program (power of two, divides B)
+    lane_block: int    # lane-padded channel footprint per plane (elements)
+    reason: str        # why (for logs/benchmarks; not used in dispatch)
+
+
+def gray_plan(
+    *,
+    U: int,
+    C: int,
+    batch: int,
+    widths: Sequence[int],
+    Lbuf: int,
+    direct_max: int = 32,
+    min_u: int = 1,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> GrayPlan:
+    """Choose the dispatch plan for one conv-width group.
+
+    ``widths`` are the a-plane channel widths of the group's levels (the
+    b planes are all ``C`` wide).  All inputs are trace-time constants —
+    the plan is static per (engine, U), like every other τ dispatch
+    decision (§5.3: tile sides are powers of two known at trace time).
+
+    ``min_u`` lets a caller floor the fused regime: the lcsm scatter path
+    sets 2, because the U=1 tile degenerates to a bare multiply feeding
+    the accumulate — exactly the shape XLA's CPU fusion emitter may
+    contract to an FMA (rounding once, not twice) depending on the
+    surrounding fusion context, which would break the bitwise pin against
+    the reference body.  For U >= 2 the tile is a reduction (or the
+    pinned reverse-FMA chain), which never contracts with the accumulate.
+    """
+    lane = lane_blocks(C) * _LANES
+    fused_max = min(direct_max, FUSED_MAX_U)
+    if U < min_u:
+        return GrayPlan(False, 1, lane,
+                        f"U={U} below fused floor (>= {min_u})")
+    if U > fused_max:
+        return GrayPlan(False, 1, lane,
+                        f"U={U} beyond direct regime (<= {fused_max})")
+    if U & (U - 1):
+        return GrayPlan(False, 1, lane, f"U={U} not a power of two")
+    if U > Lbuf:
+        return GrayPlan(False, 1, lane, f"U={U} exceeds horizon {Lbuf}")
+
+    # Per-slot VMEM bytes: every level's full a plane + b plane (the
+    # kernel gathers/scatters with dynamic row windows, so whole planes
+    # are resident), all lane-padded f32.
+    per_slot = sum(lane_blocks(w) * _LANES + lane for w in widths)
+    per_slot *= Lbuf * 4
+    shared = len(widths) * 2 * U * lane * 4  # filter block, once
+    slot_block = 1
+    cand = 2
+    while (cand <= batch and batch % cand == 0
+           and batch // cand >= MIN_PROGRAMS
+           and cand * per_slot + shared <= vmem_budget):
+        slot_block = cand
+        cand *= 2
+    if slot_block * per_slot + shared > vmem_budget:
+        return GrayPlan(False, 1, lane,
+                        f"VMEM: {per_slot + shared} B/slot over budget")
+    return GrayPlan(True, slot_block, lane,
+                    f"direct regime, {slot_block} slot(s)/program")

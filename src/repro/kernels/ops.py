@@ -3,7 +3,9 @@
 On a TPU backend the kernels compile natively; everywhere else (this CPU
 container, unit tests) they run in ``interpret=True`` mode, which executes
 the kernel body in Python — same arithmetic, same BlockSpec pipelining
-semantics, no Mosaic.  The flag is resolved once per process.
+semantics, no Mosaic.  The flag is resolved from the backend once per
+process and cached; tests that need to force a mode use
+:func:`set_interpret_override` rather than monkeypatching the backend.
 """
 
 from __future__ import annotations
@@ -17,13 +19,37 @@ from repro.kernels import ref as _ref
 from repro.kernels.short_conv import short_conv as _short_conv
 from repro.kernels.tile_conv import tile_conv as _tile_conv
 
-__all__ = ["tile_conv", "short_conv", "decode_attention", "interpret_default", "ref"]
+__all__ = ["tile_conv", "short_conv", "decode_attention", "gray_tile_apply",
+           "red_pass_fma", "interpret_default", "set_interpret_override",
+           "ref"]
 
 ref = _ref
 
+# Backend query, cached after the first call: jax.default_backend() walks
+# the plugin registry per call, and the answer cannot change mid-process
+# (jax pins the backend at first use).  ``None`` = not yet resolved.
+_INTERPRET_CACHE: bool | None = None
+# Test hook: a non-None override wins over the cached backend answer.
+_INTERPRET_OVERRIDE: bool | None = None
+
 
 def interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+    global _INTERPRET_CACHE
+    if _INTERPRET_OVERRIDE is not None:
+        return _INTERPRET_OVERRIDE
+    if _INTERPRET_CACHE is None:
+        _INTERPRET_CACHE = jax.default_backend() != "tpu"
+    return _INTERPRET_CACHE
+
+
+def set_interpret_override(value: bool | None) -> bool | None:
+    """Force (True/False) or restore (None) the interpret-mode default.
+
+    Returns the previous override so tests can save/restore it."""
+    global _INTERPRET_OVERRIDE
+    prev = _INTERPRET_OVERRIDE
+    _INTERPRET_OVERRIDE = value
+    return prev
 
 
 def tile_conv(y, rho2u, *, interpret: bool | None = None):
@@ -87,6 +113,28 @@ def short_conv(x, w, b=None, *, block_t: int = 128, interpret: bool | None = Non
     if b is None:
         b = jnp.zeros((x.shape[-1],), x.dtype)
     return _short_conv_diffable(block_t, itp)(x, w, b)
+
+
+def gray_tile_apply(a_list, b_list, rho2u, p, mask, *, conv_starts,
+                    Lbuf, mode="lcsm", slot_block=1,
+                    interpret: bool | None = None):
+    """Fused gray-tile conv + accumulate (see kernels/gray_tile.py; the
+    XLA engine bodies are the bitwise-pinned oracles)."""
+    from repro.kernels.gray_tile import gray_tile_apply as _gta
+
+    itp = interpret_default() if interpret is None else interpret
+    return _gta(a_list, b_list, rho2u, p, mask, conv_starts=conv_starts,
+                Lbuf=Lbuf, mode=mode, slot_block=slot_block, interpret=itp)
+
+
+def red_pass_fma(a_l, b_l, rho0, p, *, conv_start=0, slot_block=1,
+                 interpret: bool | None = None):
+    """Fused red-cell gather+FMA (see kernels/gray_tile.py)."""
+    from repro.kernels.gray_tile import red_pass_fma as _rpf
+
+    itp = interpret_default() if interpret is None else interpret
+    return _rpf(a_l, b_l, rho0, p, conv_start=conv_start,
+                slot_block=slot_block, interpret=itp)
 
 
 def decode_attention(q, k, v, pos, *, chunk: int = 1024,

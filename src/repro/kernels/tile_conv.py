@@ -61,12 +61,22 @@ def tile_conv(y: jnp.ndarray, rho2u: jnp.ndarray, *, interpret: bool = False) ->
     if rho2u.shape[-2] != 2 * U:
         raise ValueError(f"rho2u must have length 2U={2*U}, got {rho2u.shape[-2]}")
     lead = y.shape[:-2]
-    rho_b = jnp.broadcast_to(rho2u, lead + (2 * U, C))
     nb = 1
     for d in lead:
         nb *= d
     y2 = y.reshape(nb, U, C)
-    rho2 = rho_b.reshape(nb, 2 * U, C)
+    # A filter with no (or all-unit) leading dims is *shared* across the
+    # batch grid axis.  Materializing nb copies via broadcast_to would blow
+    # the HBM footprint from O(U·C) to O(nb·U·C) and re-stream the same
+    # bytes once per grid program; instead keep a single copy and point
+    # every program's rho BlockSpec at block row 0.
+    shared_rho = all(d == 1 for d in rho2u.shape[:-2])
+    if shared_rho:
+        rho2 = rho2u.reshape(1, 2 * U, C)
+        rho_index = lambda b, c: (0, 0, c)
+    else:
+        rho2 = jnp.broadcast_to(rho2u, lead + (2 * U, C)).reshape(nb, 2 * U, C)
+        rho_index = lambda b, c: (b, 0, c)
 
     # Pad channels up to the lane width so every block is (., 128)-aligned.
     Cp = max(_LANES, ((C + _LANES - 1) // _LANES) * _LANES)
@@ -80,7 +90,7 @@ def tile_conv(y: jnp.ndarray, rho2u: jnp.ndarray, *, interpret: bool = False) ->
         grid=grid,
         in_specs=[
             pl.BlockSpec((None, U, _LANES), lambda b, c: (b, 0, c)),
-            pl.BlockSpec((None, 2 * U, _LANES), lambda b, c: (b, 0, c)),
+            pl.BlockSpec((None, 2 * U, _LANES), rho_index),
         ],
         out_specs=pl.BlockSpec((None, U, _LANES), lambda b, c: (b, 0, c)),
         out_shape=jax.ShapeDtypeStruct((nb, U, Cp), y.dtype),

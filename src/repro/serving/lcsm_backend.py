@@ -108,6 +108,7 @@ class LCSMServer:
                  gen_max: int, prompt_max: int = 0,
                  strategy: str = "flash", tau_impl: str = "hybrid",
                  direct_max: int = 32, use_pallas: bool = False,
+                 gray_impl: str = "xla",
                  chunk: int | None = None, chunk_size: int = 1,
                  mesh=None, seed: int = 0):
         assert cfg.family == "lcsm"
@@ -126,7 +127,7 @@ class LCSMServer:
             self.model, params, batch=n_slots, gen_max=gen_max,
             prompt_max=prompt_max, strategy=strategy, tau_impl=tau_impl,
             direct_max=direct_max, use_pallas=use_pallas,
-            chunk_size=chunk_size, mesh=mesh)
+            gray_impl=gray_impl, chunk_size=chunk_size, mesh=mesh)
         self._init_slot_bookkeeping(
             n_slots, strategy=strategy, gen_max=gen_max,
             prompt_max=prompt_max, chunk=chunk, chunk_size=chunk_size,

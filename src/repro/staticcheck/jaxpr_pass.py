@@ -95,7 +95,7 @@ def _verdict(entry: str, fn, args, *, n_donated: int, splits: int,
             "checks": checks, "ok": all(c["ok"] for c in checks)}
 
 
-def _tiny_flash_engine(mesh=None):
+def _tiny_flash_engine(mesh=None, gray_impl="xla"):
     import jax
 
     from repro.core.engine import FlashEngine
@@ -105,7 +105,7 @@ def _tiny_flash_engine(mesh=None):
     params = model.init(jax.random.PRNGKey(0))
     kw = {"mesh": mesh} if mesh is not None else {}
     return FlashEngine(model, params, batch=4, gen_max=16, prompt_max=4,
-                       **kw)
+                       gray_impl=gray_impl, **kw)
 
 
 def _tiny_generic_engine():
@@ -206,6 +206,13 @@ def run_jaxpr_pass() -> list[dict]:
 
     out: list[dict] = []
     out += _run_engine_entries(_tiny_flash_engine(), "FlashEngine",
+                               None, include_decode=True)
+    # The fused-kernel dispatch (gray_impl="pallas") swaps the gray/red hot
+    # path for pallas_calls with aliased b buffers — donation, cond-freedom
+    # and the rng schedule must survive the swap, so its chunk programs are
+    # first-class registered entries, not a variant left to unit tests.
+    out += _run_engine_entries(_tiny_flash_engine(gray_impl="pallas"),
+                               "FlashEngine[gray_impl=pallas]",
                                None, include_decode=True)
     out += _run_engine_entries(_tiny_generic_engine(), "GenericFlashEngine",
                                None, include_decode=False)

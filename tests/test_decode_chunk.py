@@ -306,3 +306,86 @@ def test_step_functions_donate_state():
         np.asarray(state.a[1])  # the donated input is dead
     # the returned state stays fully usable
     assert np.asarray(new_state.a[0]).shape == (2, eng.Lbuf, model.d)
+
+
+# ------------------------------------------------------- fused gray dispatch
+# gray_impl="pallas" swaps the gray-tile/red-pass hot path for the fused
+# Pallas kernels (kernels/gray_tile.py, interpret mode on CPU).  The swap
+# must be invisible: identical token streams AND state buffers, bitwise,
+# through every serving entry point.
+@pytest.mark.parametrize("P,gen_max,n,K", [
+    (0, 16, 16, 1),    # per-step dispatch, origin 0
+    (3, 16, 11, 4),    # prompt origin, fused decode chunks
+])
+def test_decode_gray_impl_pallas_bitwise_to_xla(P, gen_max, n, K):
+    model, ex = _engine(chunk_size=K, gen_max=gen_max, prompt_max=P)
+    _, ep = _engine(chunk_size=K, gen_max=gen_max, prompt_max=P,
+                    gray_impl="pallas")
+    sx, tx = _decode(ex, model, n, P=P)
+    sp, tp = _decode(ep, model, n, P=P)
+    np.testing.assert_array_equal(tx, tp)
+    for l in range(len(sx.a)):
+        np.testing.assert_array_equal(np.asarray(sx.a[l]), np.asarray(sp.a[l]))
+    for l in range(len(sx.b)):
+        np.testing.assert_array_equal(np.asarray(sx.b[l]), np.asarray(sp.b[l]))
+
+
+def test_server_chunk_gray_impl_pallas_bitwise():
+    """The per-slot traced-schedule server chunk (masked batched tile
+    dispatch) routes through the same fused kernels — bitwise too."""
+    rng = jax.random.PRNGKey(5)
+    outs = {}
+    for impl in ("xla", "pallas"):
+        model, eng = _engine(gen_max=16, gray_impl=impl)
+        state = eng.init_state()
+        state = eng.set_first(
+            state, jax.random.normal(jax.random.PRNGKey(42), (2, model.d)))
+        p0 = np.zeros(2, np.int32)
+        origin = np.zeros(2, np.int32)
+        live = np.ones(2, bool)
+        state, toks, _ = eng.server_chunk(state, p0, origin, live, rng, 6)
+        outs[impl] = (state, np.asarray(toks))
+    np.testing.assert_array_equal(outs["xla"][1], outs["pallas"][1])
+    for l in range(len(outs["xla"][0].b)):
+        np.testing.assert_array_equal(np.asarray(outs["xla"][0].b[l]),
+                                      np.asarray(outs["pallas"][0].b[l]))
+
+
+def test_small_u_gray_programs_are_fft_free():
+    """Regression (τ dispatch): direct-regime tile programs must use the
+    CACHED time-domain filter prefixes — passing only the cached DFT used
+    to force tau_hybrid to reconstruct rho[:2U] with an irfft inside every
+    traced gray program."""
+    model, eng = _engine(gen_max=16)
+    state = eng.init_state()
+    p = jnp.full((2,), 3, jnp.int32)
+    mask = jnp.ones((2,), bool)
+    jaxpr = str(jax.make_jaxpr(
+        lambda s, pp, mm: eng._gray_tile(None, s, pp, mm, U=4))(
+            state, p, mask))
+    assert "fft" not in jaxpr, "direct-regime gray program contains an FFT"
+    # same pin for the generic LongConvMixer's square range_alg
+    from repro.core.generic import LongConvMixer
+    mix = LongConvMixer(jnp.ones((16, 3), jnp.float32))
+    y = jnp.zeros((2, 4, 3), jnp.float32)
+    jaxpr2 = str(jax.make_jaxpr(
+        lambda y: mix.range_alg(y, 0, np.arange(1, 5)))(y))
+    assert "fft" not in jaxpr2, "LongConvMixer square tile contains an FFT"
+
+
+def test_fused_gray_step_donates_state():
+    """The fused kernel aliases the b buffers (input_output_aliases) —
+    that must compose with the step function's jit donation, not fight it:
+    the donated input state dies, the returned one is usable."""
+    model, eng = _engine(gen_max=8, gray_impl="pallas")
+    plan = eng._gray_plan(2, model.d, [model.d, model.d])
+    assert plan is not None and plan.fused, plan
+    state = eng.init_state()
+    state = eng.set_first(
+        state, jax.random.normal(jax.random.PRNGKey(0), (2, model.d)))
+    new_state = eng.gray_step(state, 1, None, U=2)
+    if not state.b[0].is_deleted():
+        pytest.skip("backend does not honor buffer donation")
+    with pytest.raises(RuntimeError):
+        np.asarray(state.b[0])
+    assert np.asarray(new_state.b[0]).shape == (2, eng.Lbuf, model.d)

@@ -157,3 +157,299 @@ def test_decode_attention_property(pos_v, chunk):
     np.testing.assert_allclose(
         ops.decode_attention(q, k, v, pos, chunk=chunk),
         ref.decode_attention_ref(q, k, v, pos), rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------- fused gray tile / red cell
+# The fused kernels promise BITWISE equality (interpret mode) against the
+# engines' XLA reference bodies — not allclose.  The reference bodies are
+# pinned (engine._gray_tile / generic._apply_tile), so these tests build
+# real engines and diff whole state planes.
+from repro.core import tau as tau_mod
+from repro.core.engine import FlashEngine, LevelSpec, _slice_rows
+from repro.core.generic import LongConvMixer, _apply_tile
+from repro.core.schedule import slice_rows
+from repro.kernels.heuristic import FUSED_MAX_U, MIN_PROGRAMS, gray_plan
+from repro.models import components as mcomp
+
+
+class _MixedLCSM:
+    """Two conv-width groups (3 and 5) with nonzero conv_starts — exercises
+    per-group batching, channel offsets, and multi-level scatter in one
+    model.  Blocks are plain MLPs; advance is deterministic."""
+
+    ctx_window = 0
+
+    def __init__(self):
+        self.a0_width = 8
+        self.levels = (
+            LevelSpec(width=8, conv_start=2, conv_size=3),
+            LevelSpec(width=8, conv_start=0, conv_size=5),
+            LevelSpec(width=8, conv_start=1, conv_size=3),
+            LevelSpec(width=8, conv_start=3, conv_size=5),
+        )
+        self.M = 4
+
+    def init(self, key):
+        ks = jax.random.split(key, self.M + 1)
+        return {"filter_key": jax.random.key_data(ks[0]),
+                "blocks": [mcomp.init_mlp_gelu(ks[1 + l], 8, 16)
+                           for l in range(self.M)]}
+
+    def filters(self, params, length):
+        key = jax.random.wrap_key_data(params["filter_key"])
+        return [jax.random.normal(jax.random.fold_in(key, l),
+                                  (length, s.conv_size), jnp.float32)
+                for l, s in enumerate(self.levels)]
+
+    def block(self, params, level, b, acts):
+        pad = self.levels[level].width - b.shape[-1]
+        return jnp.pad(b, ((0, 0), (0, 0), (0, pad)))
+
+    def advance(self, params, acts, rng):
+        top = acts[self.M][:, -1]
+        return jnp.tanh(top), jnp.zeros((top.shape[0],), jnp.int32)
+
+
+def _gray_engines(B=8, gen_max=32, **kw):
+    model = _MixedLCSM()
+    params = model.init(jax.random.PRNGKey(1))
+    return {impl: FlashEngine(model, params, batch=B, gen_max=gen_max,
+                              gray_impl=impl, **kw)
+            for impl in ("xla", "pallas")}
+
+
+def _random_gray_state(eng, key, straddle=False):
+    st = eng.init_state()
+    ks = jax.random.split(key, 2 * len(st.a))
+    a = tuple(jax.random.normal(ks[i], x.shape, x.dtype)
+              for i, x in enumerate(st.a))
+    b = tuple(jax.random.normal(ks[len(st.a) + i], x.shape, jnp.float32)
+              for i, x in enumerate(st.b))
+    if straddle:
+        # sprinkle -0.0 so the scatter's +0.0 sign semantics are exercised
+        b = tuple(jnp.where(jax.random.bernoulli(ks[i], 0.25, x.shape),
+                            -0.0, x)
+                  for i, x in enumerate(b))
+    return st._replace(a=a, b=b)
+
+
+@pytest.mark.parametrize("U", [2, 4, 8, 16])
+@pytest.mark.parametrize("parallel_levels", [True, False])
+def test_gray_fused_bitwise_vs_xla_reference(U, parallel_levels):
+    """Interpret-mode fused gray tile == the XLA gather/τ/scatter body,
+    bit for bit, on a multi-group model with random masks."""
+    engs = _gray_engines(parallel_levels=parallel_levels)
+    e_ref, e_fused = engs["xla"], engs["pallas"]
+    plan = e_fused._gray_plan(U, 3, [8, 8])
+    assert plan is not None and plan.fused, plan
+    for trial in range(3):
+        key = jax.random.PRNGKey(1000 * U + trial)
+        st = _random_gray_state(e_ref, key)
+        p = jax.random.randint(jax.random.fold_in(key, 2), (e_ref.batch,),
+                               U - 1, e_ref.Lbuf, dtype=jnp.int32)
+        mask = jax.random.bernoulli(jax.random.fold_in(key, 3), 0.5,
+                                    (e_ref.batch,))
+        want = jax.jit(lambda s, pp, mm: e_ref._gray_tile(
+            None, s, pp, mm, U=U))(st, p, mask)
+        got = jax.jit(lambda s, pp, mm: e_fused._gray_tile(
+            None, s, pp, mm, U=U))(st, p, mask)
+        for l in range(len(want.b)):
+            np.testing.assert_array_equal(
+                np.asarray(want.b[l]), np.asarray(got.b[l]),
+                err_msg=f"U={U} trial={trial} level={l}")
+
+
+@pytest.mark.parametrize("U", [2, 8])
+def test_gray_fused_bitwise_on_horizon_straddle(U):
+    """Tiles whose output window spills past Lbuf clip exactly like the
+    reference scatter (including the +0.0 writes that flip stored -0.0)."""
+    engs = _gray_engines()
+    e_ref, e_fused = engs["xla"], engs["pallas"]
+    Lbuf = e_ref.Lbuf
+    key = jax.random.PRNGKey(77 + U)
+    st = _random_gray_state(e_ref, key, straddle=True)
+    # every slot near (or at) the horizon so windows straddle/spill fully
+    p = jnp.asarray([Lbuf - 1, Lbuf - 2, Lbuf - U, Lbuf - U - 1,
+                     max(U - 1, Lbuf - 2 * U), Lbuf - 1, U - 1, Lbuf - 3],
+                    jnp.int32)[: e_ref.batch]
+    mask = jnp.asarray([True, True, False, True, True, False, True, True],
+                       bool)[: e_ref.batch]
+    want = jax.jit(lambda s: e_ref._gray_tile(None, s, p, mask, U=U))(st)
+    got = jax.jit(lambda s: e_fused._gray_tile(None, s, p, mask, U=U))(st)
+    for l in range(len(want.b)):
+        np.testing.assert_array_equal(
+            np.asarray(want.b[l]), np.asarray(got.b[l]),
+            err_msg=f"straddle U={U} level={l}")
+
+
+def test_gray_plan_gating():
+    """The dispatch heuristic keeps the XLA body outside the fused regime
+    and sizes slot_block from the VMEM budget."""
+    common = dict(C=8, batch=8, widths=[8, 8], Lbuf=64)
+    assert gray_plan(U=8, **common).fused
+    # U=1 floor (lcsm engines pass min_u=2: bare-multiply FMA hazard)
+    p1 = gray_plan(U=1, min_u=2, **common)
+    assert not p1.fused and "floor" in p1.reason
+    # FFT regime
+    pf = gray_plan(U=64, direct_max=32, **common)
+    assert not pf.fused and "direct regime" in pf.reason
+    assert not gray_plan(U=max(2, FUSED_MAX_U * 2), **common).fused
+    # non-pow2 and beyond-horizon tiles
+    assert not gray_plan(U=6, **common).fused
+    assert not gray_plan(U=8, C=8, batch=8, widths=[8], Lbuf=4).fused
+    # slot_block: power of two dividing batch, grid >= MIN_PROGRAMS
+    pl = gray_plan(U=8, **common)
+    assert pl.slot_block & (pl.slot_block - 1) == 0
+    assert common["batch"] % pl.slot_block == 0
+    assert common["batch"] // pl.slot_block >= MIN_PROGRAMS
+    # a tiny VMEM budget forces slot_block=1, then rejects fusion outright
+    tiny = gray_plan(U=8, vmem_budget=1, **common)
+    assert not tiny.fused and "VMEM" in tiny.reason
+
+
+def test_engine_gray_plan_respects_tau_impl():
+    """Only direct-regime dispatches of the plain τ impls may fuse: the
+    tile_conv and FFT bodies round differently than tau_direct."""
+    engs = _gray_engines(tau_impl="fft")
+    assert engs["pallas"]._gray_plan(4, 3, [8, 8]) is None
+    engs = _gray_engines(use_pallas=True)
+    assert engs["pallas"]._gray_plan(4, 3, [8, 8]) is None
+    engs = _gray_engines(direct_max=4)
+    plan = engs["pallas"]._gray_plan(8, 3, [8, 8])
+    assert plan is not None and not plan.fused
+    assert engs["xla"]._gray_plan(4, 3, [8, 8]) is None
+
+
+def test_red_pass_fma_bitwise():
+    """Fused red cell == the two dynamic slices + mul-add chain, bitwise
+    (both sides present the same mul+add pattern to the compiler, so any
+    FMA contraction applies to both)."""
+    B, Lbuf, W, C, cs = 4, 16, 8, 5, 2
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 4)
+    a = jax.random.normal(ks[0], (B, Lbuf, W), jnp.float32)
+    b = jax.random.normal(ks[1], (B, Lbuf, C), jnp.float32)
+    rho0 = jax.random.normal(ks[2], (C,), jnp.float32)
+    p = jnp.asarray([0, 5, Lbuf - 1, 7], jnp.int32)
+
+    def ref_red(a, b, p):
+        y_p = _slice_rows(a, p, cs, 1, C)
+        b_p = _slice_rows(b, p, 0, 1, C)
+        return b_p + y_p.astype(jnp.float32) * rho0
+
+    want = jax.jit(ref_red)(a, b, p)
+    got = jax.jit(lambda a, b, p: ops.red_pass_fma(
+        a, b, rho0, p, conv_start=cs))(a, b, p)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("U", [1, 2, 4, 8])
+@pytest.mark.parametrize("slot_block", [1, 2])
+def test_gray_select_mode_bitwise_vs_apply_tile(U, slot_block):
+    """Select-mode fused kernel == the generic engine's range_alg +
+    _apply_tile composition (clamped window, select merge — U=1 included:
+    the gather between τ and agg blocks FMA contraction symmetrically)."""
+    B, Lbuf, C = 4, 32, 6
+    key = jax.random.PRNGKey(10 * U + slot_block)
+    ks = jax.random.split(key, 5)
+    rho = jax.random.normal(ks[0], (Lbuf, C), jnp.float32)
+    mix = LongConvMixer(rho)
+    a = jax.random.normal(ks[1], (B, Lbuf, C), jnp.float32)
+    s = jax.random.normal(ks[2], (B, Lbuf, C), jnp.float32)
+    p = jax.random.randint(ks[3], (B,), U - 1, Lbuf, dtype=jnp.int32)
+    mask = jax.random.bernoulli(ks[4], 0.5, (B,))
+
+    def ref(a, s, p, mask):
+        start = p - U + 1
+        y_seg = slice_rows(a, start, 0, U, C)
+        contrib = mix.range_alg(y_seg, start, jnp.arange(1, U + 1))
+        return _apply_tile(mix, s, p, contrib, mask, U, Lbuf)
+
+    want = jax.jit(ref)(a, s, p, mask)
+    got = jax.jit(lambda a, s, p, mask: ops.gray_tile_apply(
+        [a], [s], mix.tile_filter(U)[None], p, mask, conv_starts=[0],
+        Lbuf=Lbuf, mode="select", slot_block=slot_block)[0])(a, s, p, mask)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_interpret_override_hook():
+    """kernels.ops resolves interpret-vs-compile from the backend once and
+    caches it; the override hook forces either mode explicitly."""
+    base = ops.interpret_default()
+    prev = ops.set_interpret_override(not base)
+    try:
+        assert ops.interpret_default() is (not base)
+    finally:
+        ops.set_interpret_override(prev)
+    assert ops.interpret_default() is base
+
+
+def test_tile_conv_shared_filter_not_materialized():
+    """A filter with no leading dims must enter the kernel as ONE shared
+    block — not one broadcast copy per grid program (the old body
+    materialized (nb, 2U, C))."""
+    nb, U, C = 8, 4, 128
+    y = jnp.zeros((nb, U, C), jnp.float32)
+    rho = jnp.zeros((2 * U, C), jnp.float32)
+    jaxpr = str(jax.make_jaxpr(lambda y, r: ops.tile_conv(y, r))(y, rho))
+    assert f"f32[{nb},{2 * U},{C}]" not in jaxpr, \
+        "per-program filter copies are back"
+    # result is unchanged vs the oracle
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    y = jax.random.normal(k1, (nb, U, C), jnp.float32)
+    rho = jax.random.normal(k2, (2 * U, C), jnp.float32)
+    np.testing.assert_allclose(ops.tile_conv(y, rho),
+                               ref.tile_conv_ref(y, rho),
+                               rtol=1e-5, atol=1e-5)
+
+
+class _LongConvModel:
+    """Minimal GenericModel over LongConvMixer levels (generic-framework
+    LCSM): block = tanh(z) + y keeps every level's plane width equal to
+    its conv width, so the fused select-mode dispatch qualifies."""
+
+    def __init__(self, C: int, L: int, key):
+        self.a0_width = C
+        self.n_levels = 2
+        self.widths = (C, C)
+        self._mixers = tuple(
+            LongConvMixer(0.5 * jax.random.normal(
+                jax.random.fold_in(key, l), (L, C), jnp.float32))
+            for l in range(self.n_levels))
+
+    def mixers(self, params):
+        return self._mixers
+
+    def block(self, params, level, z, y):
+        return jnp.tanh(z) + y
+
+    def advance(self, params, a_top, rng):
+        return jnp.tanh(a_top), jnp.zeros((a_top.shape[0],), jnp.int32)
+
+
+def test_generic_engine_gray_impl_pallas_bitwise():
+    """GenericFlashEngine end-to-end: a full fractal-schedule generation
+    with gray_impl='pallas' reproduces the XLA walk bitwise (states a AND
+    mixer states s), including the U=1 tiles the select-mode kernel keeps."""
+    from repro.core.generic import GenericFlashEngine
+
+    C, n = 5, 16
+    states = {}
+    for impl in ("xla", "pallas"):
+        model = _LongConvModel(C, n, jax.random.PRNGKey(2))
+        eng = GenericFlashEngine(model, {}, batch=2, gen_max=n,
+                                 gray_impl=impl)
+        plan = eng._gray_plan(model._mixers[0], 2, C)
+        if impl == "pallas":
+            assert plan is not None and plan.fused, plan
+        state = eng.init_state()
+        state = eng.set_first(
+            state, jax.random.normal(jax.random.PRNGKey(4), (2, C)))
+        state, _ = eng.generate(state, n, rng=jax.random.PRNGKey(6))
+        states[impl] = state
+    for l in range(len(states["xla"].a)):
+        np.testing.assert_array_equal(np.asarray(states["xla"].a[l]),
+                                      np.asarray(states["pallas"].a[l]))
+    for l in range(len(states["xla"].s)):
+        np.testing.assert_array_equal(np.asarray(states["xla"].s[l]),
+                                      np.asarray(states["pallas"].s[l]))

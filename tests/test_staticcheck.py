@@ -137,6 +137,9 @@ EXPECTED_ENTRIES = {
     "FlashEngine.decode_chunk",
     "FlashEngine.server_chunk[batched]",
     "FlashEngine.prefill_slot",
+    "FlashEngine[gray_impl=pallas].decode_chunk",
+    "FlashEngine[gray_impl=pallas].server_chunk[batched]",
+    "FlashEngine[gray_impl=pallas].prefill_slot",
     "GenericFlashEngine.server_chunk[batched]",
     "GenericFlashEngine.prefill_slot",
 }
