@@ -69,7 +69,33 @@ def run_cell(cfg, params, *, hit_frac, cache, n_slots, **kw):
     }
 
 
-def main(smoke: bool = False) -> str:
+def trace_run(cfg, params, kw, hit_frac, trace_out: str) -> str:
+    """One traced cache-on chunked serve, exported as a Perfetto trace.
+
+    Runs AFTER the timed sweep so flashtrace overhead (host-side only,
+    but nonzero) never touches the reported numbers.  Chunked + prefix
+    cache on: the trace then shows the dispatch-ahead overlap (chunk N+1's
+    ``server.dispatch_chunk`` span landing before chunk N's
+    ``server.collect_chunk``), per-side gray-tile counters, and
+    prefix-cache hit/evict events — the spans README "Observability"
+    documents."""
+    from repro import obs
+
+    rec = obs.enable_tracing()
+    try:
+        srv = make_server(cfg, params, n_slots=kw["n_slots"],
+                          prompt_max=kw["prompt_max"], gen_max=kw["gen_max"])
+        _serve(srv, cfg.vocab, hit_frac=hit_frac, cache=True,
+               **{k: v for k, v in kw.items() if k != "n_slots"}
+               | {"chunk": kw["chunk"] or 4})
+        path = obs.write_trace_json(rec, trace_out)
+    finally:
+        obs.disable_tracing()
+    print(f"[bench_traffic] wrote {path} (open at https://ui.perfetto.dev)")
+    return path
+
+
+def main(smoke: bool = False, trace_out: str | None = None) -> str:
     cfg = dataclasses.replace(
         get_config("hyena").smoke(), name="hyena-traffic-bench",
         n_layers=4, d_model=64, d_ff=128, vocab=512)
@@ -113,6 +139,8 @@ def main(smoke: bool = False) -> str:
               list(records[0].keys()),
               [list(r.values()) for r in records])
     print(f"[bench_traffic] wrote {path}")
+    if trace_out:
+        trace_run(cfg, params, kw, hit_fracs[-1], trace_out)
     return path
 
 
@@ -120,5 +148,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny trace (CI-sized)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="after the sweep, run one traced cache-on chunked "
+                         "serve and write a Perfetto trace.json here")
     args = ap.parse_args()
-    main(smoke=args.smoke)
+    main(smoke=args.smoke, trace_out=args.trace_out)

@@ -35,17 +35,67 @@ def machine_info() -> dict:
     }
 
 
+def git_sha() -> str:
+    """Short HEAD sha, or "unknown" outside a repo / without git."""
+    import subprocess
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(__file__), capture_output=True, text=True,
+            timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except Exception:
+        return "unknown"
+
+
+def append_history(bench: str, config: dict, series: list[dict], *,
+                   smoke: bool = False) -> str:
+    """Append this sweep's summary line to the benchmark trajectory.
+
+    Full runs append to the committed ``HISTORY.jsonl`` (one line per
+    sweep: git sha, timestamp, machine, headline tok/s) so the repo
+    finally RECORDS its own performance trajectory; smoke runs go to the
+    gitignored ``history_smoke.jsonl`` (CI noise stays out of the
+    committed record).  ``benchmarks/compare.py`` diffs fresh numbers
+    against the committed baseline cell-by-cell."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    rates = [c["tok_s"] for c in series
+             if isinstance(c.get("tok_s"), (int, float))]
+    entry = {
+        "bench": bench,
+        "git": git_sha(),
+        "time": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "smoke": smoke,
+        "machine": machine_info(),
+        "config": config,
+        "headline": {
+            "cells": len(series),
+            "tok_s_max": round(max(rates), 2) if rates else None,
+            "tok_s_mean": round(sum(rates) / len(rates), 2) if rates
+            else None,
+        },
+    }
+    path = os.path.join(
+        OUT_DIR, "history_smoke.jsonl" if smoke else "HISTORY.jsonl")
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    return os.path.abspath(path)
+
+
 def write_bench_json(bench: str, config: dict, series: list[dict], *,
                      smoke: bool = False) -> str:
     """Write the normalized record.  Full runs go to the committed
     ``BENCH_<bench>.json``; smoke runs to ``<bench>_smoke.json`` (gitignored)
-    so CI never clobbers the committed numbers."""
+    so CI never clobbers the committed numbers.  Every write also appends
+    a summary line to the bench-history trajectory (see append_history)."""
     os.makedirs(OUT_DIR, exist_ok=True)
     stem = f"{bench}_smoke" if smoke else f"BENCH_{bench}"
     path = os.path.join(OUT_DIR, f"{stem}.json")
     with open(path, "w") as f:
         json.dump({"bench": bench, "machine": machine_info(),
                    "config": config, "series": series}, f, indent=1)
+    append_history(bench, config, series, smoke=smoke)
     return os.path.abspath(path)
 
 

@@ -1,0 +1,129 @@
+"""Diff a fresh BENCH json against the committed baseline, flagging
+throughput regressions — the other half of the bench trajectory
+(``HISTORY.jsonl`` records it, this compares against it).
+
+    PYTHONPATH=src python -m benchmarks.compare --bench traffic
+    PYTHONPATH=src python -m benchmarks.compare fresh.json baseline.json
+
+With ``--bench <name>`` the fresh side defaults to the smoke artifact
+``experiments/bench/<name>_smoke.json`` (what CI just produced) and the
+baseline to the committed ``BENCH_<name>.json``.  Cells are matched by
+their identity keys (everything that is not a measured metric); matched
+cells whose ``tok_s`` dropped by more than ``--threshold`` are flagged.
+Exit code 1 on any regression unless ``--warn-only`` (the CI smoke job
+runs warn-only: hosted-runner CPU numbers are noisy, and a smoke config
+differs from the committed full sweep — unmatched cells are reported,
+never flagged)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from benchmarks.common import OUT_DIR
+
+# Measured outputs — everything else in a series cell identifies it.
+METRIC_KEYS = {
+    "seconds", "tok_s", "tokens", "speedup_vs_per_step", "speedup_vs_lazy",
+    "ttft_mean_s", "ttft_p95_s", "token_gap_mean_s", "queue_depth_mean",
+    "slot_occupancy_mean", "cache_hits", "completed", "dispatches",
+    "dispatches_per_token", "wall_s",
+}
+
+
+def cell_identity(cell: dict) -> tuple:
+    return tuple(sorted((k, repr(v)) for k, v in cell.items()
+                        if k not in METRIC_KEYS))
+
+
+def compare(fresh: dict, baseline: dict, threshold: float) -> dict:
+    """Match cells by identity and diff ``tok_s``.  Returns
+    {"matched": [...], "regressions": [...], "unmatched_fresh": n,
+    "unmatched_base": n}."""
+    base_by_id = {cell_identity(c): c for c in baseline["series"]}
+    matched, regressions = [], []
+    unmatched = 0
+    for cell in fresh["series"]:
+        ident = cell_identity(cell)
+        base = base_by_id.pop(ident, None)
+        if base is None or not isinstance(cell.get("tok_s"), (int, float)) \
+                or not isinstance(base.get("tok_s"), (int, float)) \
+                or base["tok_s"] <= 0:
+            unmatched += 1
+            continue
+        delta = (cell["tok_s"] - base["tok_s"]) / base["tok_s"]
+        row = {"cell": dict(ident), "base_tok_s": base["tok_s"],
+               "new_tok_s": cell["tok_s"], "delta_pct": round(delta * 100, 1),
+               "regressed": delta < -threshold}
+        matched.append(row)
+        if row["regressed"]:
+            regressions.append(row)
+    return {"matched": matched, "regressions": regressions,
+            "unmatched_fresh": unmatched, "unmatched_base": len(base_by_id)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="fresh.json [baseline.json] (explicit file mode)")
+    ap.add_argument("--bench", action="append", default=[],
+                    help="bench name(s): compare "
+                         "<name>_smoke.json vs BENCH_<name>.json")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="relative tok_s drop that counts as a regression "
+                         "(default 0.2 = 20%%)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0 (CI smoke mode)")
+    args = ap.parse_args(argv)
+
+    pairs: list[tuple[str, str]] = []
+    if args.paths:
+        if len(args.paths) != 2:
+            ap.error("file mode takes exactly: fresh.json baseline.json")
+        pairs.append((args.paths[0], args.paths[1]))
+    for name in args.bench:
+        pairs.append((os.path.join(OUT_DIR, f"{name}_smoke.json"),
+                      os.path.join(OUT_DIR, f"BENCH_{name}.json")))
+    if not pairs:
+        ap.error("give two json paths or at least one --bench NAME")
+
+    any_regression = False
+    for fresh_path, base_path in pairs:
+        if not os.path.exists(fresh_path):
+            print(f"compare: SKIP (no fresh file) {fresh_path}")
+            continue
+        if not os.path.exists(base_path):
+            print(f"compare: SKIP (no baseline) {base_path}")
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        with open(base_path) as f:
+            baseline = json.load(f)
+        res = compare(fresh, baseline, args.threshold)
+        tag = fresh.get("bench", os.path.basename(fresh_path))
+        if fresh.get("config") != baseline.get("config"):
+            print(f"compare[{tag}]: NOTE sweep configs differ "
+                  "(e.g. smoke vs full) — deltas are apples-to-oranges; "
+                  "matched cells share identity keys only")
+        print(f"compare[{tag}]: {len(res['matched'])} matched cells, "
+              f"{res['unmatched_fresh']} fresh-only, "
+              f"{res['unmatched_base']} baseline-only")
+        for row in res["matched"]:
+            mark = "REGRESSION" if row["regressed"] else "ok"
+            print(f"  {mark:>10}  {row['base_tok_s']:10.1f} -> "
+                  f"{row['new_tok_s']:10.1f} tok/s ({row['delta_pct']:+.1f}%) "
+                  f" {dict(row['cell'])}")
+        if res["regressions"]:
+            any_regression = True
+            print(f"compare[{tag}]: {len(res['regressions'])} cell(s) "
+                  f"slower than baseline by > {args.threshold:.0%}")
+
+    if any_regression and not args.warn_only:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

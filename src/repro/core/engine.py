@@ -78,6 +78,7 @@ from repro.core import tau as tau_mod
 from repro.core.schedule import (  # noqa: F401 — ceil_pow2 re-exported
     ScheduleWalker, ceil_pow2, slice_rows, starts, update_rows,
     write_next_rows, write_slot_rows)
+from repro.obs import trace as _obs
 
 
 @dataclass(frozen=True)
@@ -357,6 +358,28 @@ class FlashEngine(ScheduleWalker):
         return gray_plan(U=U, C=csize, batch=self.batch, widths=a_widths,
                          Lbuf=self.Lbuf, direct_max=dmax, min_u=2)
 
+    def _obs_gray_labels_impl(self, U: int) -> tuple[str, str]:
+        """Flashtrace (impl, tau-regime) labels for side U, mirroring the
+        real trace-time dispatch: impl is "pallas" when every conv-width
+        group routes side U through the fused kernel (per _gray_plan),
+        "mixed" when only some do, else "xla"; the regime label follows
+        tau_hybrid's direct/FFT crossover.  Host-only — never traced."""
+        m = self.model
+        aw = [m.a0_width] + [s.width for s in m.levels]  # a[l] plane widths
+        fused = [
+            (p := self._gray_plan(U, csize, [aw[l] for l in level_ids]))
+            is not None and p.fused
+            for csize, level_ids, _ in self._groups]
+        impl = ("pallas" if fused and all(fused)
+                else "mixed" if any(fused) else "xla")
+        if self.tau_impl == "fft":
+            regime = "fft"
+        elif self.tau_impl == "direct":
+            regime = "direct"
+        else:  # hybrid / pallas delegate to tau_hybrid's crossover
+            regime = "direct" if U <= self.direct_max else "fft"
+        return (impl, regime)
+
     def _tau(self, y, rho2u, rho_f):
         impl = self.tau_impl
         if impl == "hybrid":
@@ -552,8 +575,12 @@ class FlashEngine(ScheduleWalker):
         if bucket:
             a0_prompt, plen = self._bucket_prompt(a0_prompt)
         self.dispatch_count += 1
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
         a, b, token = self._jit_prefill(
             self.params, a0_prompt, jnp.asarray(plen, jnp.int32), rng)
+        if rec is not None:
+            self._obs_record_prefill(rec, "prefill", t0, a0_prompt.shape[1])
         # full prefill builds fresh buffers from a replicated prompt, so the
         # one-time commit onto the mesh happens here (decode then donates the
         # sharded buffers in place).
@@ -580,9 +607,15 @@ class FlashEngine(ScheduleWalker):
         if bucket:
             a0_prompt, plen = self._bucket_prompt(a0_prompt)
         self.dispatch_count += 1
-        return self._jit_prefill_slot(
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
+        out = self._jit_prefill_slot(
             self.params, state, jnp.asarray(slot, jnp.int32), a0_prompt,
             jnp.asarray(plen, jnp.int32), rng)
+        if rec is not None:
+            self._obs_record_prefill(rec, "prefill_slot", t0,
+                                     a0_prompt.shape[1])
+        return out
 
     def _prefill_slot_impl(self, params, state: EngineState, slot,
                            a0_prompt, plen, rng):

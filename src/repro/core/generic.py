@@ -48,6 +48,7 @@ from repro.core.schedule import (ScheduleWalker, ceil_pow2, slice_rows,
                                  update_rows, write_next_rows,
                                  write_slot_rows)
 from repro.core.tiling import largest_pow2_divisor
+from repro.obs import trace as _obs
 
 _F32 = jnp.float32
 
@@ -355,6 +356,27 @@ class GenericFlashEngine(ScheduleWalker):
                          widths=[a_width], Lbuf=self.Lbuf,
                          direct_max=mix.direct_max)
 
+    def _obs_gray_labels_impl(self, U: int) -> tuple[str, str]:
+        """Flashtrace (impl, tau-regime) labels for side U, mirroring the
+        per-level dispatch in _gray_tile: "pallas" when every level's plan
+        fuses, "mixed" when only some do, else "xla".  Non-conv mixers
+        (GLA) have no τ crossover — their tiles are range-algorithm calls,
+        labelled "range_alg".  Host-only — never traced."""
+        m = self.model
+        aw = [m.a0_width] + list(m.widths)  # a[l] plane widths
+        mixers = m.mixers(self.params)
+        fused = [(p := self._gray_plan(mix, U, aw[l])) is not None
+                 and p.fused for l, mix in enumerate(mixers)]
+        impl = ("pallas" if fused and all(fused)
+                else "mixed" if any(fused) else "xla")
+        dmaxes = [mix.direct_max for mix in mixers
+                  if isinstance(mix, LongConvMixer)]
+        if not dmaxes:
+            regime = "range_alg"
+        else:
+            regime = "direct" if U <= min(dmaxes) else "fft"
+        return (impl, regime)
+
     # ---------------------------------------------------------------- prefill
     def _prefill_rows(self, params, a0_prompt: jnp.ndarray, plen, rng):
         """Teacher-forced prompt ingestion on fresh zero buffers: per level,
@@ -428,8 +450,12 @@ class GenericFlashEngine(ScheduleWalker):
         if bucket:
             a0_prompt, plen = self._bucket_prompt(a0_prompt)
         self.dispatch_count += 1
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
         a, s, token = self._jit_prefill(
             self.params, a0_prompt, jnp.asarray(plen, jnp.int32), rng)
+        if rec is not None:
+            self._obs_record_prefill(rec, "prefill", t0, a0_prompt.shape[1])
         return GenericState(a=tuple(a), s=tuple(s)), token
 
     def prefill_slot(
@@ -452,9 +478,15 @@ class GenericFlashEngine(ScheduleWalker):
         if bucket:
             a0_prompt, plen = self._bucket_prompt(a0_prompt)
         self.dispatch_count += 1
-        return self._jit_prefill_slot(
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
+        out = self._jit_prefill_slot(
             self.params, state, jnp.asarray(slot, jnp.int32), a0_prompt,
             jnp.asarray(plen, jnp.int32), rng)
+        if rec is not None:
+            self._obs_record_prefill(rec, "prefill_slot", t0,
+                                     a0_prompt.shape[1])
+        return out
 
     def _prefill_slot_impl(self, params, state: GenericState, slot,
                            a0_prompt, plen, rng):

@@ -80,6 +80,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.tiling import largest_pow2_divisor, schedule_segment
+from repro.obs import trace as _obs
 
 
 def ceil_pow2(n: int) -> int:
@@ -201,6 +202,75 @@ class ScheduleWalker:
         # dispatches per token/chunk — the quantity the batched-dispatch
         # refactor exists to shrink).
         self.dispatch_count = 0
+        # Flashtrace label memo: side U -> (impl, tau regime) — host-derived
+        # once per side (the decision is static per engine config).
+        self._obs_side_labels: dict[int, tuple[str, str]] = {}
+        # Prefill retrace tracking: jax.jit retraces per padded prompt
+        # shape, invisibly to the host — mirror the shape set so the
+        # recorder can report prefill program-cache hit/miss/compile.
+        self._obs_prefill_shapes: set = set()
+
+    # ------------------------------------------------------------ flashtrace
+    # All tracing lives HERE, on the host side of the dispatch boundary: the
+    # *_impl bodies below never touch repro.obs (flashcheck FC007), so the
+    # cached programs are bitwise independent of whether tracing is on.
+    def _obs_gray_labels(self, U: int) -> tuple[str, str]:
+        """(impl, tau-regime) labels for a side-U gray tile, memoized."""
+        lab = self._obs_side_labels.get(U)
+        if lab is None:
+            lab = self._obs_side_labels[U] = self._obs_gray_labels_impl(U)
+        return lab
+
+    def _obs_gray_labels_impl(self, U: int) -> tuple[str, str]:
+        """Default labels; engines override to mirror their real dispatch
+        (fused Pallas plan, tau_hybrid direct/fft crossover)."""
+        return ("xla", "direct")
+
+    def _obs_record_dispatch(self, rec, kind: str, t0: float, *,
+                             cold: bool | None = None,
+                             cache_size: int | None = None,
+                             gray_sides: dict[int, int] | None = None,
+                             span_args: dict | None = None) -> None:
+        """Record one host dispatch: span + counters (+ program-cache
+        hit/miss, compile instant, jit-cache gauge, per-(side, impl)
+        gray-tile and tau-regime counts).  Called only with an active
+        recorder; an async dispatch's span is its host launch cost."""
+        t1 = _obs.perf_now()
+        if gray_sides:
+            # The per-side tile mix rides on the span (visible when a span
+            # is clicked in Perfetto) and as per-side counter tracks.
+            span_args = dict(span_args or {})
+            span_args["gray_tiles"] = {
+                f"U{U}": n for U, n in sorted(gray_sides.items())}
+            for U, n in gray_sides.items():
+                rec.add_sample(f"gray_tiles.side_{U}", t1, n)
+        rec.add_span(f"engine.{kind}", "engine", t0, t1, span_args)
+        rec.inc_counter("flash_dispatch_total", kind=kind)
+        if cold is not None:
+            rec.inc_counter("flash_program_cache_total", kind=kind,
+                            event="miss" if cold else "hit")
+            if cold:
+                rec.inc_counter("flash_compile_total", kind=kind)
+                rec.add_instant(f"compile.{kind}", "engine", t1, span_args)
+            if cache_size is not None:
+                rec.set_gauge("flash_jit_cache_size", cache_size, kind=kind)
+        for U, n in (gray_sides or {}).items():
+            impl, regime = self._obs_gray_labels(U)
+            rec.inc_counter("flash_gray_tiles_total", n, side=U, impl=impl)
+            rec.inc_counter("flash_tau_dispatch_total", n, side=U,
+                            regime=regime)
+
+    def _obs_record_prefill(self, rec, kind: str, t0: float,
+                            plen: int) -> None:
+        """Prefill dispatch record; cold iff this padded prompt length has
+        not been traced through this engine before (jit retrace mirror)."""
+        key = (kind, int(plen))
+        cold = key not in self._obs_prefill_shapes
+        self._obs_prefill_shapes.add(key)
+        self._obs_record_dispatch(
+            rec, kind, t0, cold=cold,
+            cache_size=len(self._obs_prefill_shapes),
+            span_args={"P": int(plen)})
 
     def _shard_state(self, state):
         """Pin a sharding on a TRACED state (default: identity).  Mesh-aware
@@ -319,13 +389,26 @@ class ScheduleWalker:
         (state, tokens (B, K), advanced rng); the input state is donated."""
         sides = tuple(int(u) for u in sides)
         fn = self._jit_chunk.get(sides)
-        if fn is None:
+        cold = fn is None
+        if cold:
             fn = jax.jit(
                 functools.partial(self._decode_chunk_impl, sides=sides),
                 donate_argnums=(1,))
             self._jit_chunk[sides] = fn
         self.dispatch_count += 1
-        return fn(self.params, state, as_pos_vec(p0, self.batch), rng)
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
+        out = fn(self.params, state, as_pos_vec(p0, self.batch), rng)
+        if rec is not None:
+            tiles: dict[int, int] = {}
+            for u in sides:
+                if u:
+                    tiles[u] = tiles.get(u, 0) + 1
+            self._obs_record_dispatch(
+                rec, "decode_chunk", t0, cold=cold,
+                cache_size=len(self._jit_chunk), gray_sides=tiles,
+                span_args={"sides": list(sides), "K": len(sides)})
+        return out
 
     # ------------------------------------------------ server tile dispatch
     def _server_sides(self) -> list[int]:
@@ -408,9 +491,16 @@ class ScheduleWalker:
         each side group separately.  ``origin``/``live`` as in
         ``server_chunk``.  The input state is donated."""
         self.dispatch_count += 1
-        return self._jit_tiles(
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
+        out = self._jit_tiles(
             self.params, state, as_pos_vec(p, self.batch),
             as_pos_vec(origin, self.batch), jnp.asarray(live, bool))
+        if rec is not None:
+            self._obs_record_dispatch(
+                rec, "tiles_step", t0,
+                gray_sides={U: 1 for U in self._server_sides()})
+        return out
 
     def _server_chunk_impl(self, params, state, p0, origin, live, rng, *,
                            K: int, dispatch: str):
@@ -446,16 +536,30 @@ class ScheduleWalker:
         (B, K), advanced rng); state is donated."""
         dispatch = self.server_dispatch if dispatch is None else dispatch
         fn = self._jit_server_chunk.get((K, dispatch))
-        if fn is None:
+        cold = fn is None
+        if cold:
             fn = jax.jit(
                 functools.partial(self._server_chunk_impl, K=K,
                                   dispatch=dispatch),
                 donate_argnums=(1,))
             self._jit_server_chunk[(K, dispatch)] = fn
         self.dispatch_count += 1
-        return fn(self.params, state, as_pos_vec(p0, self.batch),
-                  as_pos_vec(origin, self.batch),
-                  jnp.asarray(live, bool), rng)
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
+        out = fn(self.params, state, as_pos_vec(p0, self.batch),
+                 as_pos_vec(origin, self.batch),
+                 jnp.asarray(live, bool), rng)
+        if rec is not None:
+            # Every step of a flash server chunk applies all possible sides
+            # (mask-selected), so the dispatched side-program count is K
+            # each.
+            tiles = ({U: K for U in self._server_sides()}
+                     if self.strategy == "flash" else {})
+            self._obs_record_dispatch(
+                rec, "server_chunk", t0, cold=cold,
+                cache_size=len(self._jit_server_chunk), gray_sides=tiles,
+                span_args={"K": K, "dispatch": dispatch})
+        return out
 
     # --------------------------------------------------- prompt-length buckets
     def _bucket_prompt(self, a0_prompt):
@@ -507,7 +611,13 @@ class ScheduleWalker:
         slot is indistinguishable from one that just ran the prefill.
         The input state is donated.  Returns the new state."""
         self.dispatch_count += 1
-        return self._jit_import(state, jnp.asarray(slot, jnp.int32), rows)
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
+        out = self._jit_import(state, jnp.asarray(slot, jnp.int32), rows)
+        if rec is not None:
+            self._obs_record_dispatch(rec, "import_slot_rows", t0,
+                                      span_args={"slot": int(slot)})
+        return out
 
     def _import_slot_rows_impl(self, state, slot, rows):
         return self._shard_state(jax.tree.map(
@@ -525,26 +635,50 @@ class ScheduleWalker:
         """Finalize per-slot positions p ((B,) or scalar) and sample every
         slot; returns (state, tokens (B,))."""
         self.dispatch_count += 1
-        return self._jit_red(self.params, state, as_pos_vec(p, self.batch), rng)
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
+        out = self._jit_red(self.params, state, as_pos_vec(p, self.batch), rng)
+        if rec is not None:
+            self._obs_record_dispatch(rec, "red_step", t0)
+        return out
 
     def lazy_step(self, state, p):
         self.dispatch_count += 1
-        return self._jit_lazy(state, as_pos_vec(p, self.batch))
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
+        out = self._jit_lazy(state, as_pos_vec(p, self.batch))
+        if rec is not None:
+            self._obs_record_dispatch(rec, "lazy_step", t0)
+        return out
 
     def eager_step(self, state, p):
         self.dispatch_count += 1
-        return self._jit_eager(state, as_pos_vec(p, self.batch))
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
+        out = self._jit_eager(state, as_pos_vec(p, self.batch))
+        if rec is not None:
+            self._obs_record_dispatch(rec, "eager_step", t0)
+        return out
 
     def gray_step(self, state, p, mask, U: int):
         """Apply the side-U gray tile at per-slot positions p to the slots
         selected by ``mask`` ((B,) bool; None = all).  Jitted once per tile
         side — slot index and positions stay traced."""
         fn = self._jit_gray.get(U)
-        if fn is None:
+        cold = fn is None
+        if cold:
             fn = jax.jit(functools.partial(self._gray_tile, U=U),
                          donate_argnums=(1,))
             self._jit_gray[U] = fn
         mask = (jnp.ones((self.batch,), bool) if mask is None
                 else jnp.asarray(mask))
         self.dispatch_count += 1
-        return fn(self.params, state, as_pos_vec(p, self.batch), mask)
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
+        out = fn(self.params, state, as_pos_vec(p, self.batch), mask)
+        if rec is not None:
+            self._obs_record_dispatch(
+                rec, "gray_step", t0, cold=cold,
+                cache_size=len(self._jit_gray),
+                gray_sides={U: 1}, span_args={"U": U})
+        return out

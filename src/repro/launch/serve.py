@@ -86,7 +86,33 @@ def main():
     ap.add_argument("--hit-frac", type=float, default=0.5,
                     help="traffic mode: share of arrivals reusing one of "
                          "two shared system prompts")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="enable flashtrace and write a Chrome/Perfetto "
+                         "trace.json here at exit (open at "
+                         "https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", metavar="PATH", default=None,
+                    help="enable flashtrace and write a Prometheus "
+                         "text-exposition metrics snapshot here at exit")
     args = ap.parse_args()
+
+    # Flashtrace rides fully host-side (README "Observability"): enabling
+    # it changes no jitted program and no emitted token.
+    rec = None
+    if args.trace_out or args.metrics_out:
+        from repro import obs
+        rec = obs.enable_tracing()
+
+    def export_obs():
+        if rec is None:
+            return
+        from repro import obs
+        if args.trace_out:
+            obs.write_trace_json(rec, args.trace_out)
+            print(f"flashtrace: wrote {args.trace_out} "
+                  "(open at https://ui.perfetto.dev)")
+        if args.metrics_out:
+            obs.write_metrics_text(rec, args.metrics_out)
+            print(f"flashtrace: wrote {args.metrics_out}")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -165,6 +191,7 @@ def main():
         if cache is not None:
             snap["prefix_cache"] = cache.stats()
         print(json.dumps(snap, indent=1, default=float))
+        export_obs()
         return
 
     rng = np.random.RandomState(0)
@@ -180,6 +207,7 @@ def main():
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.out) for r in done)
     print(f"{n_tok} tokens in {dt:.2f}s ({n_tok / dt:.1f} tok/s)")
+    export_obs()
 
 
 if __name__ == "__main__":

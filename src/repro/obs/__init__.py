@@ -1,0 +1,15 @@
+"""Flashtrace: host-side span tracing, counters/gauges, and
+Perfetto/Prometheus export for the serving stack.
+
+Off by default; ``enable_tracing()`` installs a ring-buffered
+:class:`~repro.obs.trace.SpanRecorder` that the instrumentation points in
+core/schedule, core/engine, core/generic, the serving backends, and the
+frontend write into.  See trace.py for the never-enters-jit contract and
+export.py for the serializers.  README "Observability" documents the
+span taxonomy.
+"""
+
+from repro.obs.export import (perfetto_trace, prometheus_text,  # noqa: F401
+                              write_metrics_text, write_trace_json)
+from repro.obs.trace import (SpanRecorder, active_recorder,  # noqa: F401
+                             disable_tracing, enable_tracing, perf_now)

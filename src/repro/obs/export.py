@@ -1,0 +1,118 @@
+"""Flashtrace exporters: Chrome/Perfetto ``trace.json`` + Prometheus text.
+
+Perfetto: the Trace Event JSON format (``{"traceEvents": [...]}``) —
+open at https://ui.perfetto.dev (or chrome://tracing).  Every recorder
+*track* becomes one named thread row (``"M"`` thread_name metadata +
+``"X"`` complete events with µs timestamps relative to the recorder's
+enable time); recorder *samples* become ``"C"`` counter tracks and
+*instants* become ``"i"`` events.
+
+Prometheus: plain text exposition — counters as ``*_total``-style
+monotone values, gauges as-is, with recorder label sets rendered in
+standard ``name{k="v"}`` form.  This is a snapshot writer, not a live
+scrape endpoint: serve.py writes it next to the trace at exit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from repro.obs.trace import SpanRecorder
+
+__all__ = ["perfetto_trace", "prometheus_text", "write_trace_json",
+           "write_metrics_text"]
+
+_PID = 1  # single-process trace: one pid, one tid per track
+
+
+def _track_tids(rec: SpanRecorder) -> dict[str, int]:
+    tracks = []
+    for name, track, *_ in rec.spans_view():
+        if track not in tracks:
+            tracks.append(track)
+    for name, track, *_ in rec.instants_view():
+        if track not in tracks:
+            tracks.append(track)
+    return {t: i + 1 for i, t in enumerate(tracks)}
+
+
+def perfetto_trace(rec: SpanRecorder) -> dict:
+    """Serialize a recorder to a Chrome/Perfetto trace-event dict."""
+    tids = _track_tids(rec)
+    us = 1e6
+    t0 = rec.t_zero
+    events: list[dict] = [{
+        "name": "process_name", "ph": "M", "pid": _PID,
+        "args": {"name": "flashtrace"},
+    }]
+    for track, tid in tids.items():
+        events.append({"name": "thread_name", "ph": "M", "pid": _PID,
+                       "tid": tid, "args": {"name": track}})
+    for name, track, s0, s1, args in rec.spans_view():
+        ev = {"name": name, "ph": "X", "pid": _PID, "tid": tids[track],
+              "ts": (s0 - t0) * us, "dur": max(0.0, (s1 - s0) * us)}
+        if args:
+            ev["args"] = args
+        events.append(ev)
+    for name, track, t, args in rec.instants_view():
+        ev = {"name": name, "ph": "i", "s": "t", "pid": _PID,
+              "tid": tids[track], "ts": (t - t0) * us}
+        if args:
+            ev["args"] = args
+        events.append(ev)
+    for name, t, value in rec.samples_view():
+        events.append({"name": name, "ph": "C", "pid": _PID,
+                       "ts": (t - t0) * us, "args": {"value": value}})
+    return {"traceEvents": events,
+            "displayTimeUnit": "ms",
+            "otherData": {"dropped": rec.dropped}}
+
+
+_NAME_OK = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _prom_name(key: str) -> str:
+    """Sanitize a counter key: dots -> underscores in the metric name,
+    label block (if any) passed through untouched."""
+    name, brace, labels = key.partition("{")
+    return _NAME_OK.sub("_", name) + brace + labels
+
+
+def prometheus_text(rec: SpanRecorder) -> str:
+    """Render counters + gauges in Prometheus text exposition format."""
+    lines: list[str] = []
+    typed: set[str] = set()
+
+    def emit(kind: str, flat: dict[str, float]):
+        for key, value in flat.items():
+            full = _prom_name(key)
+            base = full.partition("{")[0]
+            if base not in typed:
+                typed.add(base)
+                lines.append(f"# TYPE {base} {kind}")
+            lines.append(f"{full} {value:g}")
+
+    emit("counter", rec.counters_view())
+    emit("gauge", rec.gauges_view())
+    for stream, n in rec.dropped.items():
+        base = f"flashtrace_dropped_events{{stream=\"{stream}\"}}"
+        if "flashtrace_dropped_events" not in typed:
+            typed.add("flashtrace_dropped_events")
+            lines.append("# TYPE flashtrace_dropped_events counter")
+        lines.append(f"{base} {n}")
+    return "\n".join(lines) + "\n"
+
+
+def write_trace_json(rec: SpanRecorder, path: str) -> str:
+    with open(path, "w") as f:
+        json.dump(perfetto_trace(rec), f, indent=1)
+        f.write("\n")
+    return os.path.abspath(path)
+
+
+def write_metrics_text(rec: SpanRecorder, path: str) -> str:
+    with open(path, "w") as f:
+        f.write(prometheus_text(rec))
+    return os.path.abspath(path)

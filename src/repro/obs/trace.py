@@ -1,0 +1,167 @@
+"""Flashtrace span recorder: host-side tracing + metrics, off by default.
+
+One module-global :data:`RECORDER` is the entire enable/disable switch.
+Instrumentation sites follow one pattern::
+
+    rec = trace.RECORDER
+    if rec is None:
+        return fn(...)                  # disabled: one attr load + None test
+    t0 = trace.perf_now()
+    out = fn(...)
+    rec.add_span("engine.decode_chunk", "engine", t0, trace.perf_now(), ...)
+
+so the disabled path allocates nothing and never branches into recorder
+code.  The recorder itself preallocates fixed-capacity rings for spans /
+instants / counter samples (oldest events are overwritten, drop counts
+kept), so a long serve cannot grow host memory without bound.
+
+THE HARD CONTRACT (enforced by flashcheck FC007 + the jaxpr pass): this
+module is called only from the HOST side of the dispatch boundary —
+the ``decode_chunk``/``server_chunk``/``prefill*`` wrappers, the serving
+backends, and the frontend.  Nothing here is ever reachable from a traced
+``*_impl`` body, no ``io_callback``/``pure_callback`` is ever emitted,
+and the jaxpr of every chunk program is bitwise independent of whether
+tracing is on.  Tracing on vs off therefore yields identical greedy
+streams; spans measure host-visible time only (an async dispatch span is
+the host cost of launching the program, not device compute — the
+readback/collect span is where device time surfaces).
+
+Perfetto / Prometheus serialization lives in :mod:`repro.obs.export`.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any
+
+__all__ = [
+    "SpanRecorder", "RECORDER", "enable_tracing", "disable_tracing",
+    "active_recorder", "perf_now",
+]
+
+
+def perf_now() -> float:
+    """Monotonic wall time (seconds) — the one clock every span uses."""
+    return time.perf_counter()
+
+
+def _label_key(labels: dict[str, Any]) -> tuple[tuple[str, str], ...]:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+class SpanRecorder:
+    """Ring-buffered span/instant/sample store + counter/gauge maps.
+
+    The host serving loop is single-threaded (dispatch-ahead pipelining
+    interleaves on one thread), so no locking: writes are index-bump +
+    slot-assign into preallocated lists.
+    """
+
+    def __init__(self, capacity: int = 65536):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.t_zero = perf_now()  # export time base (ts=0 in the trace)
+        self._spans: list = [None] * self.capacity
+        self._n_spans = 0  # monotone; ring index = n % capacity
+        self._instants: list = [None] * self.capacity
+        self._n_instants = 0
+        self._samples: list = [None] * self.capacity
+        self._n_samples = 0
+        # (name, ((label, value), ...)) -> float
+        self.counters: dict[tuple[str, tuple], float] = {}
+        self.gauges: dict[tuple[str, tuple], float] = {}
+
+    # --------------------------------------------------------------- events
+    def add_span(self, name: str, track: str, t0: float, t1: float,
+                 args: dict | None = None) -> None:
+        """Record a completed [t0, t1] span (perf_now() values) on a track
+        (one Perfetto thread row per track name)."""
+        self._spans[self._n_spans % self.capacity] = (name, track, t0, t1,
+                                                      args)
+        self._n_spans += 1
+
+    def add_instant(self, name: str, track: str, t: float,
+                    args: dict | None = None) -> None:
+        """Record a point event (Perfetto 'i' phase) — evictions, rejects."""
+        self._instants[self._n_instants % self.capacity] = (name, track, t,
+                                                            args)
+        self._n_instants += 1
+
+    def add_sample(self, name: str, t: float, value: float) -> None:
+        """Record a time series point (Perfetto 'C' counter track) —
+        queue depth, live slots."""
+        self._samples[self._n_samples % self.capacity] = (name, t,
+                                                          float(value))
+        self._n_samples += 1
+
+    # ------------------------------------------------------ counters/gauges
+    def inc_counter(self, name: str, n: float = 1.0, **labels) -> None:
+        key = (name, _label_key(labels))
+        self.counters[key] = self.counters.get(key, 0.0) + n
+
+    def set_gauge(self, name: str, value: float, **labels) -> None:
+        self.gauges[(name, _label_key(labels))] = float(value)
+
+    # ---------------------------------------------------------------- views
+    def _ring_view(self, ring: list, n: int) -> list:
+        if n <= self.capacity:
+            return [e for e in ring[:n]]
+        i = n % self.capacity
+        return ring[i:] + ring[:i]  # oldest survivor first
+
+    def spans_view(self) -> list:
+        """Recorded spans, oldest first: (name, track, t0, t1, args)."""
+        return self._ring_view(self._spans, self._n_spans)
+
+    def instants_view(self) -> list:
+        return self._ring_view(self._instants, self._n_instants)
+
+    def samples_view(self) -> list:
+        return self._ring_view(self._samples, self._n_samples)
+
+    def counters_view(self) -> dict[str, float]:
+        """Flat {'name{k="v",...}': value} map (Prometheus-style keys)."""
+        return {_format_key(k): v for k, v in sorted(self.counters.items())}
+
+    def gauges_view(self) -> dict[str, float]:
+        return {_format_key(k): v for k, v in sorted(self.gauges.items())}
+
+    @property
+    def dropped(self) -> dict[str, int]:
+        """Events overwritten by ring wrap-around, per stream."""
+        cap = self.capacity
+        return {"spans": max(0, self._n_spans - cap),
+                "instants": max(0, self._n_instants - cap),
+                "samples": max(0, self._n_samples - cap)}
+
+
+def _format_key(key: tuple[str, tuple]) -> str:
+    name, labels = key
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{v}"' for k, v in labels)
+    return f"{name}{{{inner}}}"
+
+
+# The switch.  None = tracing disabled (the default); instrumentation
+# sites read this once per call and fall through when it is None.
+RECORDER: SpanRecorder | None = None
+
+
+def enable_tracing(capacity: int = 65536) -> SpanRecorder:
+    """Install a fresh recorder (discarding any previous one) and return it."""
+    global RECORDER
+    RECORDER = SpanRecorder(capacity)
+    return RECORDER
+
+
+def disable_tracing() -> None:
+    """Remove the recorder: instrumentation reverts to the zero-cost path."""
+    global RECORDER
+    RECORDER = None
+
+
+def active_recorder() -> SpanRecorder | None:
+    """The installed recorder, or None when tracing is off."""
+    return RECORDER

@@ -20,6 +20,8 @@ from __future__ import annotations
 import time
 from dataclasses import asdict, dataclass, field
 
+from repro.obs import trace as _obs
+
 
 @dataclass
 class RequestTimeline:
@@ -74,9 +76,22 @@ class ServingMetrics:
         self.n_tokens = 0
         self.n_cache_hits = 0
         self.n_cache_misses = 0
+        # First/last event walls: throughput is measured over the span the
+        # system was actually serving, not since this object was built —
+        # idle time between construction and the first submit must not
+        # deflate tok/s (a metrics object created early, e.g. at process
+        # start, would otherwise report arbitrarily low throughput).
+        self._first_event_wall: float | None = None
+        self._last_event_wall: float | None = None
 
     def _wall(self) -> float:
-        return self._clock() - self._t0
+        """Event timestamp; every call widens the first->last event span
+        snapshot() measures throughput over."""
+        w = self._clock() - self._t0
+        if self._first_event_wall is None:
+            self._first_event_wall = w
+        self._last_event_wall = w
+        return w
 
     def _tl(self, uid: int) -> RequestTimeline:
         if uid not in self.timelines:
@@ -142,8 +157,11 @@ class ServingMetrics:
         gaps: list[float] = []
         for t in tls:
             gaps.extend(b - a for a, b in zip(t.token_walls, t.token_walls[1:]))
-        wall = self._wall()
-        return {
+        # First-event -> last-event span (NOT time since construction, and
+        # snapshot() itself is not an event): see __init__.
+        wall = (self._last_event_wall - self._first_event_wall
+                if self._first_event_wall is not None else 0.0)
+        out = {
             "requests": {
                 "submitted": len(tls),
                 "admitted": sum(1 for t in tls if t.admit_step >= 0),
@@ -166,3 +184,11 @@ class ServingMetrics:
             "per_request": [asdict(t) | {"token_walls": None} for t in
                             sorted(tls, key=lambda t: t.uid)],
         }
+        rec = _obs.RECORDER
+        if rec is not None:
+            # Flashtrace rollup rides along when tracing is on: counters +
+            # gauges only (spans go to the Perfetto export, not JSON).
+            out["obs"] = {"counters": rec.counters_view(),
+                          "gauges": rec.gauges_view(),
+                          "dropped": rec.dropped}
+        return out

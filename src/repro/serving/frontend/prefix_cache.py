@@ -45,6 +45,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.obs import trace as _obs
+
 
 def prefix_key(tokens, horizon: int) -> str:
     """Content address of a token prefix for an engine with buffer horizon
@@ -106,18 +108,33 @@ class PrefixCache:
         tier first, then the host spill tier (a spill hit stays in its
         tier, bumped to most-recently-used — the import path moves the
         rows back to device where they are needed)."""
+        rec = _obs.RECORDER
         e = self._entries.get(key)
         if e is not None:
             self._entries.move_to_end(key)
             self.hits += 1
+            if rec is not None:
+                rec.inc_counter("prefix_cache_lookups_total", tier="device",
+                                event="hit")
+                rec.add_instant("prefix_cache.hit", "frontend",
+                                _obs.perf_now(), {"tier": "device"})
             return e
         e = self._spill.get(key)
         if e is not None:
             self._spill.move_to_end(key)
             self.hits += 1
             self.spill_hits += 1
+            if rec is not None:
+                rec.inc_counter("prefix_cache_lookups_total", tier="spill",
+                                event="hit")
+                rec.add_instant("prefix_cache.hit", "frontend",
+                                _obs.perf_now(), {"tier": "spill"})
             return e
         self.misses += 1
+        if rec is not None:
+            rec.inc_counter("prefix_cache_lookups_total", tier="none",
+                            event="miss")
+            rec.add_instant("prefix_cache.miss", "frontend", _obs.perf_now())
         return None
 
     def insert(self, key: str, rows, first_token: int, plen: int) -> bool:
@@ -139,22 +156,40 @@ class PrefixCache:
                                         plen=plen, nbytes=nbytes)
         self.nbytes += nbytes
         self.insertions += 1
+        rec = _obs.RECORDER
+        if rec is not None:
+            rec.inc_counter("prefix_cache_insertions_total")
         while (self.byte_budget is not None
                and self.nbytes > self.byte_budget and len(self._entries) > 1):
             old_key, old = self._entries.popitem(last=False)
             self.nbytes -= old.nbytes
             self.evictions += 1
+            if rec is not None:
+                rec.inc_counter("prefix_cache_evictions_total")
+                rec.add_instant("prefix_cache.evict", "frontend",
+                                _obs.perf_now(), {"nbytes": old.nbytes})
             if self.spill_budget is not None:
                 self._spill_entry(old_key, old)
+        if rec is not None:
+            rec.set_gauge("prefix_cache_bytes", self.nbytes, tier="device")
+            rec.set_gauge("prefix_cache_bytes", self.spill_nbytes,
+                          tier="spill")
         return True
 
     def _spill_entry(self, key: str, e: CacheEntry) -> None:
         """Evicted from the device tier: materialize on host (the one
         forced ``device_get``) and LRU-bound the spill tier by its own
         byte budget."""
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
         host = CacheEntry(rows=jax.device_get(e.rows),
                           first_token=e.first_token, plen=e.plen,
                           nbytes=e.nbytes)
+        if rec is not None:
+            # device_get is a forced sync — worth a span, not just a count.
+            rec.add_span("prefix_cache.spill", "frontend", t0,
+                         _obs.perf_now(), {"nbytes": e.nbytes})
+            rec.inc_counter("prefix_cache_spills_total")
         if host.nbytes > self.spill_budget:
             return
         self._spill[key] = host

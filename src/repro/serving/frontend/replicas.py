@@ -40,6 +40,7 @@ from typing import Any, Iterator
 
 import jax
 
+from repro.obs import trace as _obs
 from repro.serving.engine import Request
 from repro.serving.frontend.prefix_cache import CacheEntry, PrefixCache
 
@@ -88,6 +89,9 @@ class ReplicaSet:
         i = min(range(len(self.members)),
                 key=lambda j: (self._load(self.members[j]), j))
         self.members[i].submit(req)
+        rec = _obs.RECORDER
+        if rec is not None:
+            rec.inc_counter("frontend_replica_routed_total", replica=i)
         return i
 
     # ------------------------------------------------------------- serving
@@ -219,16 +223,23 @@ class ReplicaScheduler:
     def metrics_snapshot(self) -> dict:
         """Per-replica metric snapshots plus fleet totals (JSON-ready)."""
         snaps = [m.metrics.snapshot() for m in self.members]
+        obs = None
         for s in snaps:
             s.pop("per_request", None)
+            # One recorder serves the whole process: every member snapshot
+            # would repeat the identical flashtrace rollup — hoist it.
+            obs = s.pop("obs", obs)
         tokens = sum(s["throughput"]["tokens"] for s in snaps)
         wall = max((s["throughput"]["wall_s"] for s in snaps), default=0.0)
-        return {
+        out = {
             "replicas": snaps,
             "n_replicas": len(self.members),
             "throughput": {"tokens": tokens, "wall_s": wall,
                            "tok_s": tokens / wall if wall > 0 else 0.0},
         }
+        if obs is not None:
+            out["obs"] = obs
+        return out
 
     def run(self, trace):
         """Drain ``trace``; returns a TrafficReport whose metrics dict

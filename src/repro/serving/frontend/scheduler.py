@@ -45,6 +45,7 @@ from typing import Any, Callable, Iterator
 
 import numpy as np
 
+from repro.obs import trace as _obs
 from repro.serving.engine import Request
 from repro.serving.frontend.metrics import ServingMetrics
 from repro.serving.frontend.prefix_cache import PrefixCache, prefix_key
@@ -124,6 +125,8 @@ class TrafficScheduler:
         collect-everything wrapper; iterate this directly for streaming
         consumption."""
         srv, met = self.server, self.metrics
+        rec = _obs.RECORDER
+        sub_wall: dict[int, float] = {}  # uid -> submit wall (tracing only)
         order = sorted(range(len(trace)), key=lambda i: (trace[i].arrival, i))
         arrivals = [trace[i] for i in order]
         pending: list[TrafficRequest] = []
@@ -156,6 +159,8 @@ class TrafficScheduler:
                 i += 1
                 pending.append(tr)
                 met.on_submit(tr.req.uid, int(t))
+                if rec is not None:
+                    sub_wall[tr.req.uid] = _obs.perf_now()
 
             # 2) admission: fill free slots in policy order (a prefix-cache
             #    hit restores rows instead of prefilling).
@@ -178,6 +183,14 @@ class TrafficScheduler:
                     pending.insert(0, tr)
                     break
                 met.on_admit(tr.req.uid, int(t), cache_hit=tr.cache_hit)
+                if rec is not None:
+                    now = _obs.perf_now()
+                    rec.add_span("frontend.queue_wait", "frontend",
+                                 sub_wall.pop(tr.req.uid, now), now,
+                                 {"uid": tr.req.uid,
+                                  "cache_hit": tr.cache_hit})
+                    rec.inc_counter("frontend_admitted_total",
+                                    cache_hit=str(tr.cache_hit).lower())
                 done_now = tr.req.done
                 yield from deliver(tr, done_now)  # first (prefill) token
                 if done_now:
@@ -194,9 +207,18 @@ class TrafficScheduler:
                     tr = pending.pop()
                     tr.rejected = True  # never served; req.out stays empty
                     met.on_reject(tr.req.uid, int(t))
+                    if rec is not None:
+                        sub_wall.pop(tr.req.uid, None)
+                        rec.add_instant("frontend.reject", "frontend",
+                                        _obs.perf_now(), {"uid": tr.req.uid})
+                        rec.inc_counter("frontend_rejected_total")
 
             met.on_step(int(t), queue_depth=len(pending),
                         n_live=len(live), n_slots=srv.B)
+            if rec is not None:
+                now = _obs.perf_now()
+                rec.add_sample("frontend.queue_depth", now, len(pending))
+                rec.add_sample("frontend.live_requests", now, len(live))
 
             # 3) advance the decode, or fast-forward an idle system to the
             #    next arrival.

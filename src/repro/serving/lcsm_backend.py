@@ -57,6 +57,7 @@ from repro.configs.base import ModelConfig
 from repro.core.engine import FlashEngine
 from repro.core.tiling import largest_pow2_divisor
 from repro.models.hyena import HyenaLCSM
+from repro.obs import trace as _obs
 from repro.serving.engine import Request
 
 
@@ -175,6 +176,8 @@ class LCSMServer:
     def _admit(self, slot: int, req: Request, finished: list[Request],
                rows=None, first_token: int | None = None) -> None:
         P = len(req.prompt)
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
         # The rng is split whether the prefill runs or the rows are restored
         # from the prefix cache, so the downstream key schedule — and hence
         # every later sampled token — is identical on the hit and miss paths.
@@ -192,6 +195,12 @@ class LCSMServer:
             # model's first token would need `sub`, see frontend docs).
             self.state = self.engine.import_slot_rows(self.state, slot, rows)
             tok = int(first_token)
+        if rec is not None:
+            rec.add_span("server.admit", "server", t0, _obs.perf_now(),
+                         {"uid": req.uid, "slot": slot, "P": P,
+                          "restored": rows is not None})
+            rec.inc_counter("serving_admissions_total",
+                            path="restore" if rows is not None else "prefill")
         req.out.append(tok)
         if tok == req.eos_id or len(req.out) >= req.max_new:
             req.done = True          # prompt-only request: done at admission,
@@ -242,6 +251,8 @@ class LCSMServer:
         live = [s for s in range(self.B) if self.slots[s] is not None]
         if not live:
             return finished
+        rec = _obs.RECORDER
+        t_step = _obs.perf_now() if rec is not None else 0.0
         eng = self.engine
         # free slots idle at position 0: the red pass still computes their
         # rows (pure per-row ops — no cross-slot contamination), and their
@@ -280,6 +291,11 @@ class LCSMServer:
                 self.state = eng.tiles_step(
                     self.state, jnp.asarray(pv),
                     jnp.asarray(self.origin, np.int32), jnp.asarray(mask))
+        if rec is not None:
+            t1 = _obs.perf_now()
+            rec.add_span("server.step", "server", t_step, t1,
+                         {"live": len(live)})
+            rec.add_sample("server.live_slots", t1, len(live))
         return finished
 
     def _step_tiles_reference(self, mask: np.ndarray, pv: np.ndarray) -> None:
@@ -362,8 +378,23 @@ class LCSMServer:
                          for s in range(self.B)], np.int32)
         origin = np.asarray(self.origin, np.int32)
         live = np.asarray([r is not None for r in self.slots], bool)
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
         self.state, toks, self._rng = self.engine.server_chunk(
             self.state, p0, origin, live, self._rng, K)
+        if rec is not None:
+            # Async dispatch: this span is the host launch cost of chunk
+            # N+1 — under run(pipeline=True) it lands BEFORE chunk N's
+            # collect span on the timeline, which is the overlap the
+            # dispatch-ahead refactor exists to create.
+            t1 = _obs.perf_now()
+            rec.add_span("server.dispatch_chunk", "server", t0, t1,
+                         {"K": K, "live": len(live_slots)})
+            rec.add_sample("server.live_slots", t1, len(live_slots))
+            # .nbytes is shape metadata — reading it never syncs the device.
+            rec.set_gauge("serving_state_bytes",
+                          sum(leaf.nbytes
+                              for leaf in jax.tree.leaves(self.state)))
         # Positions advance blindly by K at dispatch time (the device did
         # step every live slot K times).  A slot retiring mid-chunk leaves
         # a too-large pos behind — harmless: pos is only read for live
@@ -382,7 +413,15 @@ class LCSMServer:
         stepped blindly once more before its retirement was observed) are
         skipped — their tokens are pure overshoot."""
         toks, records, K = pending
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
         toks = np.asarray(toks)
+        if rec is not None:
+            # The np.asarray above is the chunk's ONE host sync: this span
+            # is the readback wait, i.e. the device time dispatch-ahead did
+            # NOT manage to hide behind host bookkeeping.
+            rec.add_span("server.collect_chunk", "server", t0,
+                         _obs.perf_now(), {"K": K, "records": len(records)})
         finished: list[Request] = []
         for s, req in records:
             if req.done:

@@ -7,6 +7,7 @@ way (see README "Static contracts" and each rule's docstring in
   FC001 use-after-donate            FC004 lax.cond in hot dispatch
   FC002 mixed-dtype slice starts    FC005 unbounded jit caches
   FC003 dot/einsum in mixer path    FC006 import-scope config toggles
+  FC007 host callbacks / repro.obs reachable from traced bodies
 
 plus a jaxpr pass (:mod:`repro.staticcheck.jaxpr_pass`) that traces the
 registered hot entry points and verifies donation aliasing, cond-free

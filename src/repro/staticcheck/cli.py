@@ -66,7 +66,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.staticcheck",
         description="flashcheck: AST+jaxpr contract analyzer for the "
-                    "Flash-Inference serving invariants (FC001-FC006)")
+                    "Flash-Inference serving invariants (FC001-FC007)")
     ap.add_argument("paths", nargs="*", default=None,
                     help=f"files/dirs to scan (default: {DEFAULT_PATHS})")
     ap.add_argument("--baseline", default="staticcheck.toml",

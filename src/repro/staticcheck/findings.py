@@ -21,7 +21,7 @@ WARN = "warn"
 
 @dataclass(frozen=True)
 class Finding:
-    rule: str            # "FC001" .. "FC006" or "JX..." for jaxpr checks
+    rule: str            # "FC001" .. "FC007" or "JX..." for jaxpr checks
     path: str            # repo-relative posix path
     line: int            # 1-based
     message: str

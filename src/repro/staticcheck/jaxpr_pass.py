@@ -15,6 +15,11 @@ the contracts where they actually bind — in the traced program:
     exactly K ``random_split`` equations: a missing split reuses a key
     across steps (correlated sampling), an extra one desyncs the
     chunked path from the per-step reference stream.
+  * **callback-free + trace invariance** — no host-callback primitive
+    (``pure_callback``/``io_callback``/``debug_callback``) in any hot
+    program, and the chunk jaxpr is character-identical with flashtrace
+    enabled vs disabled (FC007's runtime half: obs never enters a traced
+    program).
 
 Entry points registered (the serving hot surface):
 
@@ -77,7 +82,8 @@ def _verdict(entry: str, fn, args, *, n_donated: int, splits: int,
     import jax
 
     jaxpr = jax.make_jaxpr(fn)(*args)
-    prims = _count_primitives(jaxpr, {"cond", "random_split"})
+    prims = _count_primitives(jaxpr, {"cond", "random_split", "pure_callback",
+                                      "io_callback", "debug_callback"})
     txt = fn.lower(*args).as_text()
     # Unsharded lowerings resolve donation to input/output aliases
     # (tf.aliasing_output); sharded lowerings defer the pairing to the
@@ -89,6 +95,11 @@ def _verdict(entry: str, fn, args, *, n_donated: int, splits: int,
                + txt.count("jax.buffer_donor")),
         _check("cond_free", 0, prims["cond"]),
         _check("one_split_per_step", splits, prims["random_split"]),
+        # Flashtrace hard contract (FC007's runtime half): no host-callback
+        # primitive in any hot program — a callback would stall the async
+        # dispatch pipeline and make the program depend on host state.
+        _check("callback_free", 0, prims["pure_callback"]
+               + prims["io_callback"] + prims["debug_callback"]),
     ]
     checks.extend(extra_checks)
     return {"entry": entry, "devices": jax.device_count(), "mesh": mesh,
@@ -199,6 +210,42 @@ def _run_engine_entries(eng, prefix: str, mesh_name: str | None,
     return out
 
 
+def _trace_invariance_verdict() -> dict:
+    """The flashtrace hard contract checked where it binds: the jaxpr of a
+    hot chunk program must be CHARACTER-IDENTICAL whether tracing is
+    enabled or not — obs must never reach the traced side, so enabling it
+    cannot change (or even re-order) a single equation.  Two fresh tiny
+    engines are traced (no shared jit cache), one with the recorder off,
+    one with it on."""
+    import hashlib
+
+    import jax
+
+    from repro.obs import trace as obs
+
+    def chunk_jaxpr() -> str:
+        eng = _tiny_flash_engine()
+        state, pv, live, rng, _ = _entry_args(eng)
+        fn = functools.partial(eng._server_chunk_impl, K=K_STEPS,
+                               dispatch="batched")
+        return str(jax.make_jaxpr(fn)(eng.params, state, pv, pv, live, rng))
+
+    def sha(s: str) -> str:
+        return hashlib.sha1(s.encode()).hexdigest()[:16]
+
+    off = chunk_jaxpr()
+    prev = obs.RECORDER
+    obs.enable_tracing()
+    try:
+        on = chunk_jaxpr()
+    finally:
+        obs.RECORDER = prev
+    checks = [_check("jaxpr_identical_with_tracing", sha(off), sha(on))]
+    return {"entry": "flashtrace.trace_invariance",
+            "devices": jax.device_count(), "mesh": None,
+            "checks": checks, "ok": all(c["ok"] for c in checks)}
+
+
 def run_jaxpr_pass() -> list[dict]:
     """Trace every registered entry point under the current device config.
     Returns one verdict dict per (entry, mesh config)."""
@@ -216,6 +263,7 @@ def run_jaxpr_pass() -> list[dict]:
                                None, include_decode=True)
     out += _run_engine_entries(_tiny_generic_engine(), "GenericFlashEngine",
                                None, include_decode=False)
+    out.append(_trace_invariance_verdict())
     if jax.device_count() >= 4:
         from repro.launch.mesh import make_serving_mesh
         mesh = make_serving_mesh(data=4)

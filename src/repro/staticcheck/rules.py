@@ -1,4 +1,4 @@
-"""FC001–FC006: the AST-level contracts flashcheck enforces.
+"""FC001–FC007: the AST-level contracts flashcheck enforces.
 
 Each rule encodes an invariant a shipped PR learned the hard way
 (CHANGES.md is the provenance trail):
@@ -9,6 +9,8 @@ Each rule encodes an invariant a shipped PR learned the hard way
   FC004  lax.cond reachable from hot dispatch (PR 6: cond-ladder retirement)
   FC005  unbounded dict-keyed jit caches (PR 5: prompt-length retrace blowup)
   FC006  global config toggles at test import scope (PR 3: x64 leak)
+  FC007  host callbacks / repro.obs reachable from traced bodies
+         (PR 10: flashtrace must never enter a jitted program)
 
 Rules favor a LOW false-positive bias: an unresolvable expression is
 skipped, not flagged — the fixture corpus in tests/fixtures/staticcheck
@@ -61,6 +63,34 @@ CONTRACTION_CALLS = {"einsum", "dot", "dot_general", "matmul",
 FC004_ROOTS = ["server_chunk", "decode_chunk",
                "_server_chunk_impl", "_decode_chunk_impl"]
 FC004_WHITELIST = {"_server_tiles_reference"}
+
+# --- FC007 roots: the TRACED bodies — functions that become jitted
+# programs.  The host-side wrappers (decode_chunk, server_chunk, prefill,
+# ...) legitimately call repro.obs around the dispatch; the ban is on the
+# traced side of the boundary only, where a flashtrace call would either
+# fail to trace or (worse) bake a host callback into the program and
+# break the tracing-on == tracing-off bitwise contract.
+FC007_ROOTS = [
+    "_decode_chunk_impl", "_server_chunk_impl", "_schedule_step",
+    "_server_tiles", "_server_tiles_batched", "_server_tiles_reference",
+    "_red_pass", "_gray_tile", "_lazy_fill", "_eager_push",
+    "_prefill_rows", "_prefill_slot_impl", "_import_slot_rows_impl",
+]
+# Call names that smuggle host execution into a traced program.  "callback"
+# alone is too generic a last segment — jax.debug.callback / debug.print
+# are matched on their dotted form instead.
+HOST_CALLBACK_CALLS = {"io_callback", "pure_callback", "host_callback",
+                       "debug_callback"}
+OBS_PATH_PREFIX = "src/repro/obs/"
+# Reach is cut at the host-wrapper names: the name-based graph merges
+# same-named functions (the traced GLA nested `step` vs the host backend
+# `step`), which would otherwise carry reach back across the dispatch
+# boundary and into the wrappers' LEGITIMATE obs calls.  Every name here
+# is a host-side surface; none is a traced body.
+FC007_BLOCKED = DONATING_METHODS | {
+    "prefill", "prefill_slot", "step", "step_chunk", "dispatch_chunk",
+    "collect_chunk", "generate", "run", "serve", "submit",
+}
 
 # --- FC005: cache-dict naming + key normalizers that prove boundedness.
 CACHE_NAME_RE = re.compile(r"^_jit|cache", re.IGNORECASE)
@@ -303,6 +333,51 @@ class Checker:
                         "_server_tiles_reference keeps a cond ladder "
                         "(CHANGES.md PR 6)")
 
+    # ------------------------------------------------------------ FC007
+    def fc007(self, modules: list[Module]) -> None:
+        """No host callbacks and no repro.obs code reachable from the
+        traced hot bodies (module doc).  Same over-approximating name
+        graph as FC004: the right bias for a reachability ban."""
+        graph = CallGraph.build([(m.path, m.tree) for m in modules])
+        reach = graph.reach(FC007_ROOTS, FC007_BLOCKED)
+        seen: set[tuple[str, int]] = set()
+
+        def hit(path: str, node: ast.AST, symbol: str, message: str) -> None:
+            key = (path, getattr(node, "lineno", 1))
+            if key in seen:
+                return
+            seen.add(key)
+            self.emit(
+                "FC007", path, node, symbol, message,
+                "move the instrumentation to the host wrapper around the "
+                "dispatch (rec = _obs.RECORDER; if rec is None: ... "
+                "pattern) — flashtrace must never enter a jitted program "
+                "(README Observability; CHANGES.md PR 10)")
+
+        for name in sorted(reach):
+            chain = " -> ".join(reach[name])
+            for fi in graph.funcs.get(name, []):
+                if fi.path.startswith(OBS_PATH_PREFIX):
+                    hit(fi.path, fi.node, fi.name,
+                        f"repro.obs function '{fi.name}' is reachable from "
+                        f"a traced hot body ({chain}) — tracing must stay "
+                        f"on the host side of the dispatch boundary")
+                    continue
+                for node in ast.walk(fi.node):
+                    bad = _host_callback_name(node)
+                    if bad is not None:
+                        hit(fi.path, node, fi.name,
+                            f"host callback {bad}() reachable from a traced "
+                            f"hot body ({chain}) — it bakes host execution "
+                            f"into the jitted program, so tracing on/off "
+                            f"changes the compiled computation")
+                    elif (isinstance(node, (ast.Import, ast.ImportFrom))
+                          and _imports_obs(node)):
+                        hit(fi.path, node, fi.name,
+                            f"repro.obs imported inside a traced hot body "
+                            f"({chain}) — instrumentation belongs in the "
+                            f"host wrapper, not the traced function")
+
     # ------------------------------------------------------------ FC005
     def fc005(self, mod: Module) -> None:
         for fi in _scopes(mod):
@@ -412,6 +487,28 @@ def _key_bounded(expr, assigns: dict[str, ast.expr], depth: int = 0) -> bool:
     return False
 
 
+def _host_callback_name(node: ast.AST) -> str | None:
+    if not isinstance(node, ast.Call):
+        return None
+    for cand in callee_names(node):
+        seg = last_segment(cand)
+        if seg in HOST_CALLBACK_CALLS:
+            return cand
+        if cand.endswith("debug.callback") or cand.endswith("debug.print"):
+            return cand
+    return None
+
+
+def _imports_obs(node: ast.AST) -> bool:
+    if isinstance(node, ast.Import):
+        return any(a.name.startswith("repro.obs") for a in node.names)
+    if isinstance(node, ast.ImportFrom):
+        mod = node.module or ""
+        return mod.startswith("repro.obs") or (
+            mod == "repro" and any(a.name == "obs" for a in node.names))
+    return False
+
+
 def _is_lax_cond(node: ast.AST) -> bool:
     if not isinstance(node, ast.Call):
         return False
@@ -449,5 +546,6 @@ def run_rules(modules: list[Module], config: Config) -> list[Finding]:
         chk.fc005(mod)
         chk.fc006(mod)
     chk.fc004(modules)
+    chk.fc007(modules)
     chk.findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return chk.findings

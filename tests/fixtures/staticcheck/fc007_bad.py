@@ -1,0 +1,23 @@
+"""FC007: host callbacks / repro.obs reachable from traced hot bodies."""
+import jax
+
+
+class Walker:
+    def _server_chunk_impl(self, params, state, pv, origin, live, rng):
+        state = self._tiles(params, state, pv)
+        return self._log_state(state)
+
+    def _tiles(self, params, state, pv):
+        # a debug print traced into the chunk program: host execution
+        # baked into the jitted computation
+        jax.debug.print("pv = {}", pv)  # FC007
+        return state + 1
+
+    def _log_state(self, state):
+        jax.experimental.io_callback(print, None, state)  # FC007
+        return state
+
+    def _red_pass(self, params, state, p, rng):
+        from repro.obs import trace as _obs  # FC007
+        state = jax.pure_callback(lambda s: s, state, state)  # FC007
+        return state, _obs

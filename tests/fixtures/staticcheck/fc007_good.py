@@ -1,0 +1,29 @@
+"""FC007 clean twins: instrumentation on the host side of the dispatch
+boundary only — the traced bodies never touch repro.obs or a callback."""
+import jax
+
+from repro.obs import trace as _obs
+
+
+class Walker:
+    def server_chunk(self, state, pv, live, rng):
+        # HOST wrapper: obs calls around the dispatch are the sanctioned
+        # pattern — one attr load + None test when tracing is off.
+        rec = _obs.RECORDER
+        t0 = _obs.perf_now() if rec is not None else 0.0
+        out = self._server_chunk_impl(self.params, state, pv, pv, live, rng)
+        if rec is not None:
+            rec.add_span("engine.server_chunk", "engine", t0, _obs.perf_now())
+            rec.inc_counter("flash_dispatch_total", kind="server_chunk")
+        return out
+
+    def _server_chunk_impl(self, params, state, pv, origin, live, rng):
+        return self._tiles(params, state, pv)
+
+    def _tiles(self, params, state, pv):
+        return state + 1
+
+
+def offline_probe(state):
+    # io_callback in a function NOT reachable from any traced root.
+    return jax.experimental.io_callback(print, None, state)

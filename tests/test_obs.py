@@ -1,0 +1,288 @@
+"""Flashtrace (repro.obs): the observability subsystem's contracts.
+
+The one that matters most is BITWISE NON-INTERFERENCE: serving the same
+trace with tracing enabled must emit exactly the token streams the
+untraced run emits — LCSM and GLA, per-step and chunked, replicas and
+mesh (device-gated).  Flashtrace lives entirely on the host side of the
+dispatch boundary (flashcheck FC007 + the jaxpr trace-invariance entry
+enforce the same contract statically), so this suite pins the runtime
+half: instrumentation changes WHEN the host looks at the clock, never
+WHAT the device computes.
+
+Plus the mechanics: ring-buffer wrap accounting, Perfetto export schema
+(well-nested spans per track, JSON round-trip), Prometheus text shape,
+disabled-path overhead, and the ServingMetrics first->last event-span
+throughput fix (idle time before traffic must not deflate tok/s).
+"""
+
+import dataclasses
+import json
+import time
+
+import jax
+import pytest
+
+from repro import obs
+from repro.configs import get_config
+from repro.models.hyena import HyenaLCSM
+from repro.obs import trace as obs_trace
+from repro.serving import make_server
+from repro.serving.frontend import (PrefixCache, ServingMetrics,
+                                    TrafficScheduler, make_frontend,
+                                    poisson_trace)
+
+PROMPT_MAX, GEN_MAX = 8, 16
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_recorder():
+    """Every test leaves tracing OFF — a leaked recorder would silently
+    turn every later test into a tracing-on run."""
+    yield
+    obs.disable_tracing()
+    assert obs_trace.RECORDER is None
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("hyena").smoke(), name="hyena-obs",
+                              n_layers=4, d_model=32, d_ff=64, vocab=128)
+    params = HyenaLCSM(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def gla_setup():
+    from repro.models.gla import GLALM
+
+    cfg = dataclasses.replace(get_config("gla").smoke(), name="gla-obs",
+                              n_layers=2, d_model=32, d_ff=64, vocab=128,
+                              gla_dk=8, gla_dv=32)
+    params = GLALM(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serve_streams(cfg, params, *, chunk, traced: bool, **server_kw):
+    """One full frontend serve of a fixed trace; returns {uid: stream}."""
+    if traced:
+        obs.enable_tracing()
+    try:
+        srv = make_server(cfg, params, n_slots=2, prompt_max=PROMPT_MAX,
+                          gen_max=GEN_MAX, **server_kw)
+        sched = make_frontend(srv, prefix_cache=True, chunk=chunk)
+        trace = poisson_trace(cfg.vocab, 7, rate=0.7, prompt_max=PROMPT_MAX,
+                              gen_max=10, hit_frac=0.6, seed=3)
+        for _ in sched.serve(trace):
+            pass
+        return {tr.req.uid: tuple(tr.req.out) for tr in trace}
+    finally:
+        obs.disable_tracing()
+
+
+# ----------------------------------------------------- bitwise non-interference
+@pytest.mark.parametrize("family,chunk", [
+    ("lcsm", None), ("lcsm", 4), ("gla", None), ("gla", 4)])
+def test_streams_bitwise_identical_tracing_on_vs_off(setup, gla_setup,
+                                                     family, chunk):
+    cfg, params = setup if family == "lcsm" else gla_setup
+    off = _serve_streams(cfg, params, chunk=chunk, traced=False)
+    on = _serve_streams(cfg, params, chunk=chunk, traced=True)
+    assert on == off
+    assert any(len(s) for s in off.values())
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="replica parity needs >= 2 devices")
+def test_streams_bitwise_identical_tracing_on_vs_off_replicas(setup):
+    cfg, params = setup
+    off = _serve_streams(cfg, params, chunk=4, traced=False, replicas=2)
+    on = _serve_streams(cfg, params, chunk=4, traced=True, replicas=2)
+    assert on == off
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="mesh parity needs >= 2 devices")
+def test_streams_bitwise_identical_tracing_on_vs_off_mesh(setup):
+    from repro.launch.mesh import make_serving_mesh
+
+    cfg, params = setup
+    mesh = make_serving_mesh(data=2)
+    off = _serve_streams(cfg, params, chunk=4, traced=False, mesh=mesh)
+    on = _serve_streams(cfg, params, chunk=4, traced=True, mesh=mesh)
+    assert on == off
+
+
+def test_tracing_does_not_trigger_recompiles(setup):
+    """Enabling tracing mid-flight must not grow the engine's jit caches:
+    the cached chunk programs are reused untouched (the compiled-program
+    half of the non-interference contract)."""
+    cfg, params = setup
+    srv = make_server(cfg, params, n_slots=2, prompt_max=PROMPT_MAX,
+                      gen_max=GEN_MAX)
+    sched = make_frontend(srv, chunk=4)
+    trace = poisson_trace(cfg.vocab, 4, rate=0.7, prompt_max=PROMPT_MAX,
+                          gen_max=8, seed=3)
+    for _ in sched.serve(trace):
+        pass
+    sizes = (len(srv.engine._jit_server_chunk), len(srv.engine._jit_gray))
+    obs.enable_tracing()
+    try:
+        # identical workload replayed traced: every program is a cache hit
+        sched2 = make_frontend(srv, chunk=4)
+        trace2 = poisson_trace(cfg.vocab, 4, rate=0.7, prompt_max=PROMPT_MAX,
+                               gen_max=8, seed=3)
+        for _ in sched2.serve(trace2):
+            pass
+    finally:
+        obs.disable_tracing()
+    assert (len(srv.engine._jit_server_chunk),
+            len(srv.engine._jit_gray)) == sizes
+
+
+# ------------------------------------------------------------- span recorder
+def test_ring_buffer_wrap_accounting():
+    rec = obs_trace.SpanRecorder(capacity=4)
+    for i in range(7):
+        rec.add_span(f"s{i}", "t", float(i), float(i) + 0.5)
+    spans = rec.spans_view()
+    assert [s[0] for s in spans] == ["s3", "s4", "s5", "s6"]  # oldest-first
+    assert rec.dropped["spans"] == 3
+    assert rec.dropped["instants"] == 0
+
+
+def test_counters_and_gauges_flatten_with_sorted_labels():
+    rec = obs_trace.SpanRecorder()
+    rec.inc_counter("c", 2, b="y", a="x")
+    rec.inc_counter("c", 3, a="x", b="y")  # same labels, any kwarg order
+    rec.set_gauge("g", 7.5, tier="device")
+    assert rec.counters_view() == {'c{a="x",b="y"}': 5.0}
+    assert rec.gauges_view() == {'g{tier="device"}': 7.5}
+
+
+def test_disabled_path_overhead_smoke(setup):
+    """The off path of an instrumented host wrapper is one module-attr
+    load + None test.  Generous bound (CI machines are noisy): the pure
+    guard must stay under 2 µs/op."""
+    n = 200_000
+    t0 = time.perf_counter()
+    acc = 0
+    for _ in range(n):
+        if obs_trace.RECORDER is not None:  # the exact guard the wrappers use
+            acc += 1
+    per_op = (time.perf_counter() - t0) / n
+    assert acc == 0
+    assert per_op < 2e-6, f"{per_op * 1e9:.0f} ns/op"
+
+
+# ---------------------------------------------------------------- exporters
+def _traced_run(setup):
+    cfg, params = setup
+    rec = obs.enable_tracing()
+    try:
+        _serve_streams(cfg, params, chunk=4, traced=False)  # rec already on
+        return rec
+    finally:
+        obs_trace.RECORDER = None  # keep rec's data readable after the run
+
+
+def test_perfetto_export_schema(setup, tmp_path):
+    rec = _traced_run(setup)
+    path = tmp_path / "trace.json"
+    obs.write_trace_json(rec, str(path))
+    doc = json.loads(path.read_text())  # JSON round-trip
+    evs = doc["traceEvents"]
+    names = {e["name"] for e in evs}
+    assert {"server.dispatch_chunk", "server.collect_chunk",
+            "engine.server_chunk", "frontend.queue_wait"} <= names
+    # one pid; every span/instant lands on a declared named track
+    tid2track = {e["tid"]: e["args"]["name"] for e in evs
+                 if e["name"] == "thread_name"}
+    spans = [e for e in evs if e.get("ph") == "X"]
+    assert spans and all(e["tid"] in tid2track for e in spans)
+    assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in spans)
+    # Spans on the call-stack-shaped tracks are well-nested: each span
+    # either starts after the previous ends or lies fully inside it.
+    # (frontend queue_wait spans measure per-request waits, which overlap
+    # legitimately — they are excluded from the nesting claim.)
+    for tid, track in tid2track.items():
+        if track not in ("engine", "server"):
+            continue
+        stack = []
+        for e in sorted((e for e in spans if e["tid"] == tid),
+                        key=lambda e: (e["ts"], -e["dur"])):
+            while stack and e["ts"] >= stack[-1]:
+                stack.pop()
+            end = e["ts"] + e["dur"]
+            assert not stack or end <= stack[-1] + 1e-3, \
+                f"overlapping spans on track {track}"
+            stack.append(end)
+
+
+def test_prometheus_export_shape(setup):
+    rec = _traced_run(setup)
+    text = obs.prometheus_text(rec)
+    lines = [ln for ln in text.splitlines() if ln]
+    typed = {ln.split()[2]: ln.split()[3]
+             for ln in lines if ln.startswith("# TYPE")}
+    assert typed.get("flash_dispatch_total") == "counter"
+    assert typed.get("flash_jit_cache_size") == "gauge"
+    assert typed.get("flashtrace_dropped_events") == "counter"
+    for ln in lines:
+        if ln.startswith("#"):
+            continue
+        name, _, value = ln.partition(" ")
+        float(value)  # every sample line parses
+        base = name.partition("{")[0]
+        assert base in typed, f"untyped metric {name}"
+    # the counters that make the trace story: program-cache hits vs misses
+    assert any("flash_program_cache_total" in ln and 'event="miss"' in ln
+               for ln in lines)
+    assert any("prefix_cache_lookups_total" in ln for ln in lines)
+
+
+def test_metrics_snapshot_carries_obs_rollup(setup):
+    cfg, params = setup
+    obs.enable_tracing()
+    try:
+        srv = make_server(cfg, params, n_slots=2, prompt_max=PROMPT_MAX,
+                          gen_max=GEN_MAX)
+        sched = TrafficScheduler(srv, chunk=4, prefix_cache=PrefixCache())
+        trace = poisson_trace(cfg.vocab, 5, rate=0.7, prompt_max=PROMPT_MAX,
+                              gen_max=8, seed=3)
+        rep = sched.run(trace)
+    finally:
+        obs.disable_tracing()
+    rollup = rep.metrics["obs"]
+    assert set(rollup) == {"counters", "gauges", "dropped"}
+    assert any(k.startswith("flash_dispatch_total") for k in
+               rollup["counters"])
+    # ...and stays OUT of the snapshot when tracing is off
+    m2 = ServingMetrics()
+    assert "obs" not in m2.snapshot()
+
+
+# --------------------------------------------------- ServingMetrics tok/s fix
+def test_tok_s_measured_over_event_span_not_object_lifetime():
+    """Idle wall time before the first event (or after the last) must not
+    deflate throughput: tok/s is tokens / (last event - first event)."""
+    fake = {"t": 100.0}
+    m = ServingMetrics(clock=lambda: fake["t"])
+    fake["t"] = 500.0            # long idle gap after construction
+    m.on_submit(0, step=0)
+    fake["t"] = 501.0
+    m.on_admit(0, step=1, cache_hit=False)
+    m.on_tokens(0, 10, step=1)
+    fake["t"] = 502.0
+    m.on_tokens(0, 10, step=2)
+    m.on_finish(0, step=2)
+    fake["t"] = 900.0            # snapshot() long after traffic ended
+    snap = m.snapshot()
+    assert snap["throughput"]["wall_s"] == pytest.approx(2.0)
+    assert snap["throughput"]["tok_s"] == pytest.approx(10.0)
+
+
+def test_tok_s_zero_before_any_event():
+    m = ServingMetrics(clock=lambda: 42.0)
+    snap = m.snapshot()
+    assert snap["throughput"]["wall_s"] == 0.0
+    assert snap["throughput"]["tok_s"] == 0.0

@@ -40,6 +40,7 @@ CASES = {
     "fc004": ("src/repro/fixture_fc004.py", "FC004"),
     "fc005": ("src/repro/fixture_fc005.py", "FC005"),
     "fc006": ("tests/fixture_fc006.py", "FC006"),
+    "fc007": ("src/repro/fixture_fc007.py", "FC007"),
 }
 
 
@@ -70,6 +71,22 @@ def test_good_fixture_zero_false_positives(stem):
     mount, rule = CASES[stem]
     _, findings = _run_fixture(f"{stem}_good.py", mount)
     assert findings == [], [f.render() for f in findings]
+
+
+def test_fc007_obs_module_reachable():
+    """The obs-path arm of FC007 needs two modules: a traced body in core
+    reaching a function DEFINED under src/repro/obs/ is flagged even when
+    the body itself contains no callback call."""
+    walker = ast.parse(
+        "class W:\n"
+        "    def _red_pass(self, params, state, p, rng):\n"
+        "        return obs_helper(state)\n")
+    helper = ast.parse("def obs_helper(state):\n    return state\n")
+    findings = run_rules(
+        [Module(path="src/repro/core/x.py", tree=walker),
+         Module(path="src/repro/obs/helper.py", tree=helper)], Config())
+    assert any(f.rule == "FC007" and f.path == "src/repro/obs/helper.py"
+               for f in findings), [f.render() for f in findings]
 
 
 # ------------------------------------------------------------- suppressions
@@ -142,6 +159,7 @@ EXPECTED_ENTRIES = {
     "FlashEngine[gray_impl=pallas].prefill_slot",
     "GenericFlashEngine.server_chunk[batched]",
     "GenericFlashEngine.prefill_slot",
+    "flashtrace.trace_invariance",
 }
 
 
